@@ -1,0 +1,76 @@
+"""Paper Figs. 14-16 (RQ3 breakdown): epoch identification, CHK, heuristic
+worker assignment — each ablated independently."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import FishGrouper, FishParams, simulate_stream
+
+from .common import Reporter, run_scheme, zf_keys
+
+
+def _fish(keys, w, caps=None, **pkw):
+    g = FishGrouper(w, params=FishParams(**pkw))
+    if caps is None:
+        caps = np.full(w, 0.9 * w / 20_000.0)
+    return g, simulate_stream(g, keys, capacities=caps, arrival_rate=20_000.0)
+
+
+def run(rep: Reporter) -> dict:
+    out = {}
+    # Fig. 14 — epoch-based identification: w/ epoch (alpha=0.2, epoch=1000)
+    # vs w/o epoch (alpha=1.0, epoch=inf: lifetime counting as in D-C/W-C)
+    for z in (1.2, 1.6):
+        keys = zf_keys(z)
+        for w in (32, 128):
+            t0 = time.time()
+            _, m_with = _fish(keys, w, alpha=0.2, epoch=1000)
+            _, m_without = _fish(keys, w, alpha=1.0, epoch=2**62)
+            us = (time.time() - t0) * 1e6
+            ratio = m_without.execution_time / m_with.execution_time
+            out[("epoch", z, w)] = ratio
+            rep.add(f"fig14_epoch_ablation/z{z}/w{w}", us,
+                    {"wo_over_w_exec": round(ratio, 3)})
+
+    # Fig. 15 — CHK vs the W-C / D-C hot-key handling (memory + exec)
+    for z in (1.2,):
+        keys = zf_keys(z)
+        for w in (64, 128):
+            t0 = time.time()
+            _, m_chk = _fish(keys, w)
+            _, m_wc = run_scheme("wc", keys, w)
+            _, m_dc = run_scheme("dc", keys, w)
+            us = (time.time() - t0) * 1e6
+            out[("chk", z, w)] = (m_chk.memory_overhead,
+                                  m_wc.memory_overhead, m_dc.memory_overhead)
+            rep.add(f"fig15_chk/z{z}/w{w}", us, {
+                "chk_mem": m_chk.memory_overhead,
+                "wc_mem": m_wc.memory_overhead,
+                "dc_mem": m_dc.memory_overhead,
+                "chk_exec": round(m_chk.execution_time, 4),
+                "dc_exec": round(m_dc.execution_time, 4),
+            })
+
+    # Fig. 16 — heuristic worker assignment under heterogeneous capacity:
+    # half the workers 2x faster; 'hwa off' = FISH with capacities hidden
+    for w in (32, 128):
+        keys = zf_keys(1.4)
+        caps = np.concatenate([
+            np.full(w // 2, 1.0), np.full(w - w // 2, 0.5)
+        ]) * 0.9 * w / 20_000.0 / 0.75  # same aggregate service rate
+        t0 = time.time()
+        g_on, m_on = _fish(keys, w, caps=caps)
+        # hwa off: estimator believes all workers are equal and gets no
+        # capacity samples (previous studies' count-based assignment)
+        g_off = FishGrouper(w, params=FishParams())
+        m_off = simulate_stream(g_off, keys, capacities=caps,
+                                arrival_rate=20_000.0, sample_every=0)
+        us = (time.time() - t0) * 1e6
+        ratio = m_off.execution_time / m_on.execution_time
+        out[("hwa", w)] = ratio
+        rep.add(f"fig16_hwa/w{w}", us, {"off_over_on_exec": round(ratio, 3)})
+
+    return {k: v for k, v in out.items() if k[0] in ("epoch", "hwa")}

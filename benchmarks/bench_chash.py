@@ -1,0 +1,35 @@
+"""Paper Fig. 17 (RQ4): consistent hashing under dynamic worker change —
+memory overhead with vs without CH when a worker joins/leaves mid-stream."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import FishGrouper, MembershipEvent, simulate_stream
+
+from .common import N_TUPLES, Reporter, zf_keys
+
+
+def run(rep: Reporter) -> dict:
+    out = {}
+    w = 16
+    for z in (1.0, 1.6):
+        keys = zf_keys(z)
+        for op, new_set in (("add", list(range(w + 1))),
+                            ("remove", list(range(w - 1)))):
+            ev = [MembershipEvent(at=N_TUPLES // 2, workers=new_set)]
+            t0 = time.time()
+            g_ch = FishGrouper(w, use_consistent_hash=True)
+            m_ch = simulate_stream(g_ch, keys, arrival_rate=20_000.0,
+                                   events=ev)
+            g_no = FishGrouper(w, use_consistent_hash=False)
+            m_no = simulate_stream(g_no, keys, arrival_rate=20_000.0,
+                                   events=ev)
+            us = (time.time() - t0) * 1e6
+            ratio = m_no.memory_overhead / max(m_ch.memory_overhead, 1)
+            out[(z, op)] = ratio
+            rep.add(f"fig17_chash/{op}/z{z}", us,
+                    {"no_ch_over_ch_mem": round(ratio, 3),
+                     "ch_mem": m_ch.memory_overhead,
+                     "no_ch_mem": m_no.memory_overhead})
+    return out

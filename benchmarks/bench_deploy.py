@@ -1,0 +1,68 @@
+"""Paper Figs. 18-20 (RQ5, "practical deployment"): the serving-engine
+deployment analog — end-to-end latency percentiles, throughput, and relative
+memory for all six schemes under a time-evolving session workload."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.serving.engine import Request, ServingEngine
+
+from .common import Reporter
+
+_SCHEMES = ("fg", "pkg", "dc", "wc", "sg", "fish")
+
+
+def _requests(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        if rng.random() < 0.75:
+            # hot session set flips halfway (time-evolving)
+            base = 0 if i < n // 2 else 1000
+            sess = f"h{base + rng.integers(0, 4)}"
+        else:
+            sess = f"c{rng.integers(0, 200)}"
+        reqs.append((i, sess, float(i) * 0.08, int(rng.integers(4, 12))))
+    return reqs
+
+
+def run(rep: Reporter) -> dict:
+    n = 400
+    reqs = _requests(n, seed=0)
+    speeds = np.concatenate([np.full(4, 2.0), np.full(4, 1.0)])  # hetero
+    out = {}
+    for scheme in _SCHEMES:
+        t0 = time.time()
+        eng = ServingEngine(num_replicas=8, slots_per_replica=4,
+                            tokens_per_tick=speeds, grouping=scheme)
+        for i, sess, arr, tgt in reqs:
+            eng.submit(Request(i, sess, arr, tgt))
+        eng.run(until_done=n)
+        us = (time.time() - t0) * 1e6
+        m = eng.metrics()
+        out[scheme] = m
+        rep.add(f"fig18_latency/{scheme}", us,
+                {"avg": round(m.latency_avg, 2), "p50": m.latency_p50,
+                 "p99": m.latency_p99})
+        rep.add(f"fig19_throughput/{scheme}", us,
+                round(m.throughput_tokens, 3))
+        rep.add(f"fig20_memory/{scheme}", us,
+                round(m.session_replicas_norm, 3))
+    summary = {
+        "fish_vs_wc_avg_latency_reduction":
+            1.0 - out["fish"].latency_avg / max(out["wc"].latency_avg, 1e-9),
+        "fish_vs_wc_p99_reduction":
+            1.0 - out["fish"].latency_p99 / max(out["wc"].latency_p99, 1e-9),
+        "fish_mem_vs_sg":
+            out["fish"].session_replicas_norm
+            / max(out["sg"].session_replicas_norm, 1e-9),
+        "fish_tput_vs_wc":
+            out["fish"].throughput_tokens
+            / max(out["wc"].throughput_tokens, 1e-9),
+    }
+    rep.add("fig18_20/summary", 0.0,
+            {k: round(v, 3) for k, v in summary.items()})
+    return summary

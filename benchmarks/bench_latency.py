@@ -1,0 +1,41 @@
+"""Paper Figs. 9-10: execution time (normalised to SG) on the real-dataset
+proxies (AM, MT) and the synthetic ZF dataset across skews."""
+
+from __future__ import annotations
+
+import time
+
+from .common import Reporter, WORKERS, am_proxy_keys, mt_proxy_keys, \
+    run_scheme, zf_keys
+
+_SCHEMES = ("pkg", "dc", "wc", "fish")
+
+
+def run(rep: Reporter) -> dict:
+    out = {}
+    for ds_name, keys in (("am", am_proxy_keys()), ("mt", mt_proxy_keys())):
+        for w in WORKERS:
+            _, m_sg = run_scheme("sg", keys, w)
+            for scheme in _SCHEMES:
+                t0 = time.time()
+                _, m = run_scheme(scheme, keys, w)
+                us = (time.time() - t0) * 1e6
+                norm = m.execution_time / m_sg.execution_time
+                out[(ds_name, scheme, w)] = norm
+                rep.add(f"fig9_exec_vs_sg/{ds_name}/{scheme}/w{w}", us,
+                        round(norm, 3))
+    for z in (1.0, 1.4, 1.8):
+        keys = zf_keys(z)
+        for w in (16, 128):
+            _, m_sg = run_scheme("sg", keys, w)
+            for scheme in _SCHEMES:
+                t0 = time.time()
+                _, m = run_scheme(scheme, keys, w)
+                us = (time.time() - t0) * 1e6
+                norm = m.execution_time / m_sg.execution_time
+                out[("zf", z, scheme, w)] = norm
+                rep.add(f"fig10_exec_vs_sg/zf{z}/{scheme}/w{w}", us,
+                        round(norm, 3))
+    fish_worst = max(v for k, v in out.items() if "fish" in k)
+    rep.add("fig9_10/fish_worst_vs_sg", 0.0, round(fish_worst, 3))
+    return {"fish_worst_vs_sg": fish_worst}

@@ -1,0 +1,28 @@
+"""Paper Fig. 11: memory overhead (normalised to FG) on ZF across skews."""
+
+from __future__ import annotations
+
+import time
+
+from .common import Reporter, run_scheme, zf_keys
+
+_SCHEMES = ("pkg", "sg", "dc", "wc", "fish")
+
+
+def run(rep: Reporter) -> dict:
+    out = {}
+    for z in (1.0, 1.4, 1.8):
+        keys = zf_keys(z)
+        for w in (16, 64, 128):
+            for scheme in _SCHEMES:
+                t0 = time.time()
+                g, m = run_scheme(scheme, keys, w)
+                us = (time.time() - t0) * 1e6
+                out[(z, scheme, w)] = m.memory_overhead_norm
+                rep.add(f"fig11_mem_vs_fg/zf{z}/{scheme}/w{w}", us,
+                        round(m.memory_overhead_norm, 3))
+    fish128 = max(v for (z, s, w), v in out.items()
+                  if s == "fish" and w == 128)
+    sg128 = min(v for (z, s, w), v in out.items() if s == "sg" and w == 128)
+    rep.add("fig11/fish_worst_mem_at_128", 0.0, round(fish128, 3))
+    return {"fish_worst_mem_128": fish128, "sg_best_mem_128": sg128}

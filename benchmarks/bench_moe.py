@@ -1,0 +1,56 @@
+"""Beyond-paper: FISH expert routing inside the MoE layer (DESIGN.md §1.2).
+
+Measures drop fraction and expert load imbalance for fg / pkg / fish routing
+under a *time-evolving* token mixture (the router's hot experts drift), on
+the reduced deepseek config."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.models.moe import init_hotness, init_moe_params, moe_ffn
+
+from .common import Reporter
+
+
+def run(rep: Reporter) -> dict:
+    cfg = reduced_config(get_config("deepseek-v2-lite-16b"))
+    moe = cfg.moe
+    key = jax.random.PRNGKey(0)
+    params = init_moe_params(key, cfg.d_model, moe)
+    t_tokens, d = 512, cfg.d_model
+
+    # time-evolving mixture: cluster means drift each step
+    rng = np.random.default_rng(0)
+    means = rng.normal(size=(4, d)).astype(np.float32)
+
+    out = {}
+    for mode in ("fg", "pkg", "fish"):
+        m2 = dataclasses.replace(moe, routing=mode)
+        fn = jax.jit(lambda p, x, h: moe_ffn(p, x, m2, h))
+        hot = init_hotness(moe.num_experts)
+        drops, imbs = [], []
+        t0 = time.time()
+        for step in range(12):
+            drift = means[(step // 3) % 4]
+            x = (rng.normal(size=(t_tokens, d)) * 0.5 + drift).astype(
+                np.float32)
+            y, hot, aux, metrics = fn(params, jnp.asarray(x, jnp.bfloat16),
+                                      hot)
+            drops.append(float(metrics["moe_drop_frac"]))
+            imbs.append(float(metrics["moe_load_max_over_mean"]))
+        us = (time.time() - t0) * 1e6
+        out[mode] = {"drop": float(np.mean(drops[3:])),
+                     "imb": float(np.mean(imbs[3:]))}
+        rep.add(f"moe_routing/{mode}", us,
+                {k: round(v, 4) for k, v in out[mode].items()})
+    rep.add("moe_routing/fish_vs_fg_drop", 0.0,
+            round(out["fish"]["drop"] / max(out["fg"]["drop"], 1e-9), 3))
+    return out

@@ -1,0 +1,34 @@
+"""Paper Figs. 2-3 (motivating study): latency + memory of existing schemes
+on the Amazon-Movie proxy across worker scales."""
+
+from __future__ import annotations
+
+import time
+
+from .common import Reporter, SCHEMES, WORKERS, am_proxy_keys, run_scheme
+
+
+def run(rep: Reporter) -> dict:
+    keys = am_proxy_keys()
+    results = {}
+    for w in WORKERS:
+        for scheme in SCHEMES:
+            t0 = time.time()
+            _, m = run_scheme(scheme, keys, w)
+            us = (time.time() - t0) * 1e6
+            results[(scheme, w)] = m
+            rep.add(f"fig2_latency_p99/{scheme}/w{w}", us,
+                    round(m.latency_p99 * 1e3, 3))
+            rep.add(f"fig3_memory_norm/{scheme}/w{w}", us,
+                    round(m.memory_overhead_norm, 3))
+    # paper's qualitative claims at 128 workers
+    fish, sg = results[("fish", 128)], results[("sg", 128)]
+    fg = results[("fg", 128)]
+    summary = {
+        "fish_vs_sg_exec": fish.execution_time / sg.execution_time,
+        "fish_mem_norm": fish.memory_overhead_norm,
+        "sg_mem_norm": sg.memory_overhead_norm,
+        "fg_p99_over_fish": fg.latency_p99 / max(fish.latency_p99, 1e-9),
+    }
+    rep.add("fig2_3/summary", 0.0, summary)
+    return summary

@@ -1,0 +1,61 @@
+"""Paper Figs. 12-13 (RQ2): decaying factor α sweep + hot-key threshold θ
+sweep — execution time and memory as a function of skew."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import FishGrouper, FishParams, simulate_stream
+
+from .common import Reporter, zf_keys
+
+
+def _run_fish(keys, w, alpha=0.2, theta_frac=0.25):
+    g = FishGrouper(w, params=FishParams(alpha=alpha, theta_frac=theta_frac))
+    caps = np.full(w, 0.9 * w / 20_000.0)
+    return g, simulate_stream(g, keys, capacities=caps, arrival_rate=20_000.0)
+
+
+def run(rep: Reporter) -> dict:
+    out = {}
+    # Fig. 12: alpha in {0, 0.2, 0.5, 0.8, 1.0} ; alpha=1 ignores recency
+    for z in (1.0, 1.6):
+        keys = zf_keys(z)
+        for alpha in (0.0, 0.2, 0.5, 0.8, 1.0):
+            for w in (32, 128):
+                t0 = time.time()
+                g, m = _run_fish(keys, w, alpha=alpha)
+                us = (time.time() - t0) * 1e6
+                out[("alpha", z, alpha, w)] = (m.execution_time,
+                                               m.memory_overhead_norm)
+                rep.add(f"fig12_alpha/z{z}/a{alpha}/w{w}", us,
+                        {"exec": round(m.execution_time, 4),
+                         "mem": round(m.memory_overhead_norm, 3)})
+    # Fig. 13: theta in {2/n, 1/n, 1/4n, 1/8n} (theta_frac = theta * n)
+    for z in (1.0, 1.6):
+        keys = zf_keys(z)
+        for tf in (2.0, 1.0, 0.25, 0.125):
+            for w in (32, 128):
+                t0 = time.time()
+                g, m = _run_fish(keys, w, theta_frac=tf)
+                us = (time.time() - t0) * 1e6
+                out[("theta", z, tf, w)] = (m.execution_time,
+                                            m.memory_overhead_norm)
+                rep.add(f"fig13_theta/z{z}/tf{tf}/w{w}", us,
+                        {"exec": round(m.execution_time, 4),
+                         "mem": round(m.memory_overhead_norm, 3)})
+
+    # paper's conclusions: alpha=0.2 best-or-tied; theta=2/n visibly worse
+    def exec_at(alpha, z=1.6, w=128):
+        return out[("alpha", z, alpha, w)][0]
+
+    summary = {
+        "alpha0.2_vs_alpha1_exec": exec_at(0.2) / exec_at(1.0),
+        "theta2n_vs_quarter_exec": (out[("theta", 1.6, 2.0, 128)][0]
+                                    / out[("theta", 1.6, 0.25, 128)][0]),
+    }
+    rep.add("fig12_13/summary", 0.0,
+            {k: round(v, 3) for k, v in summary.items()})
+    return summary

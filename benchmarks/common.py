@@ -1,0 +1,74 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import csv
+import io
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import make_grouper, simulate_stream
+from repro.data.synthetic import piecewise_zipf, zipf_time_evolving
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+# CPU-friendly scale: the simulator is O(tuples); the paper's 50M-tuple runs
+# use identical code at scale=1 (see data/synthetic.py Table-2 proxies).
+N_TUPLES = 30_000
+N_KEYS = 3_000
+WORKERS = (16, 32, 64, 128)
+SCHEMES = ("fg", "pkg", "sg", "dc", "wc", "fish")
+
+
+def run_scheme(scheme: str, keys, workers: int, capacities=None,
+               arrival_rate: float = 20_000.0, **kw):
+    g = make_grouper(scheme, workers)
+    if capacities is None:
+        capacities = np.full(workers, 0.9 * workers / arrival_rate)
+    m = simulate_stream(g, keys, capacities=capacities,
+                        arrival_rate=arrival_rate, **kw)
+    return g, m
+
+
+def am_proxy_keys(seed=0):
+    return piecewise_zipf(N_TUPLES, N_KEYS, z=1.2, phases=6, seed=seed)
+
+
+def mt_proxy_keys(seed=1):
+    return piecewise_zipf(N_TUPLES, N_KEYS, z=1.1, phases=8, seed=seed)
+
+
+def zf_keys(z: float, seed=2):
+    return zipf_time_evolving(N_TUPLES, num_keys=N_KEYS, z=z,
+                              flip_head=N_KEYS // 3, seed=seed)
+
+
+class Reporter:
+    """Collects ``name,us_per_call,derived`` rows (benchmarks/run.py CSV)."""
+
+    def __init__(self):
+        self.rows: List[Dict] = []
+
+    def timeit(self, name: str, fn: Callable, derived_fn=None):
+        t0 = time.time()
+        out = fn()
+        us = (time.time() - t0) * 1e6
+        derived = derived_fn(out) if derived_fn else out
+        self.rows.append({"name": name, "us_per_call": round(us, 1),
+                          "derived": derived})
+        return out
+
+    def add(self, name: str, us: float, derived):
+        self.rows.append({"name": name, "us_per_call": round(us, 1),
+                          "derived": derived})
+
+    def csv(self) -> str:
+        buf = io.StringIO()
+        w = csv.DictWriter(buf, fieldnames=["name", "us_per_call", "derived"])
+        w.writeheader()
+        for r in self.rows:
+            w.writerow(r)
+        return buf.getvalue()

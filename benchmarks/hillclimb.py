@@ -1,0 +1,68 @@
+"""§Perf hillclimb driver: re-lower the three chosen cells after each
+optimization and record tagged artifacts (benchmarks/artifacts/dryrun/).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --iter rs|scatter|headroom
+"""
+import argparse
+import dataclasses
+import json
+
+CELLS = [
+    ("kimi-k2-1t-a32b", "train_4k"),
+    ("recurrentgemma-9b", "train_4k"),
+    ("deepseek-v2-lite-16b", "train_4k"),
+]
+
+
+def show(r):
+    rf = r.get("roofline", {})
+    ma = r["memory_analysis"]
+    print(f"{r['arch']:22s} {r['shape']} tag-done: "
+          f"flops={r.get('flops_global', 0):.3e} "
+          f"coll/dev={r['collective_bytes_total']/2**30:.3f}GiB "
+          f"compute_s={rf.get('compute_s', 0):.4f} "
+          f"coll_s={rf.get('collective_s', 0):.4f} "
+          f"temp={ma['temp_size_in_bytes']/2**30:.2f}GiB", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iter", required=True,
+                    choices=["rs", "scatter", "headroom", "gradrs"])
+    ap.add_argument("--cells", default=None, help="comma list arch:shape")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+    from repro.configs import get_config
+
+    cells = CELLS
+    if args.cells:
+        cells = [tuple(c.split(":")) for c in args.cells.split(",")]
+
+    for arch, shape in cells:
+        cfg = get_config(arch)
+        tag = args.iter
+        if args.iter in ("rs", "gradrs"):
+            pass  # global change, config untouched
+        elif args.iter == "scatter":
+            if cfg.moe is None:
+                continue
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, dispatch_impl="scatter"))
+        elif args.iter == "headroom":
+            if cfg.moe is None:
+                continue
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, dispatch_impl="scatter",
+                                             hot_headroom=1.25))
+        if args.iter == "gradrs" and cfg.moe is not None:
+            # carry the previous winners forward
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, dispatch_impl="scatter",
+                                             hot_headroom=1.25))
+        r = run_cell(arch, shape, cfg_override=cfg, extra_tag=tag)
+        show(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus a summary footer).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from .common import Reporter
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module name")
+    args = ap.parse_args()
+
+    from . import (bench_breakdown, bench_chash, bench_deploy, bench_latency,
+                   bench_memory, bench_moe, bench_motivating, bench_params,
+                   roofline)
+
+    modules = [
+        ("bench_motivating", bench_motivating),   # Figs. 2-3
+        ("bench_latency", bench_latency),         # Figs. 9-10
+        ("bench_memory", bench_memory),           # Fig. 11
+        ("bench_params", bench_params),           # Figs. 12-13
+        ("bench_breakdown", bench_breakdown),     # Figs. 14-16
+        ("bench_chash", bench_chash),             # Fig. 17
+        ("bench_deploy", bench_deploy),           # Figs. 18-20
+        ("bench_moe", bench_moe),                 # beyond-paper MoE routing
+        ("roofline", roofline),                   # §Roofline table
+    ]
+
+    rep = Reporter()
+    failures = 0
+    for name, mod in modules:
+        if args.only and args.only not in name:
+            continue
+        try:
+            mod.run(rep)
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            rep.add(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")
+    print(rep.csv())
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

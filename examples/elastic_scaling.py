@@ -1,0 +1,63 @@
+"""Elastic scaling + fault tolerance walkthrough (paper §5 / Fig. 17).
+
+Streams documents through the FISH pipeline while hosts join and leave;
+heartbeat monitoring + the restart policy decide elastic-continue vs
+checkpoint-restart; consistent hashing bounds how much key->host state moves.
+
+    PYTHONPATH=src python examples/elastic_scaling.py
+"""
+
+import numpy as np
+
+from repro.core.fish import FishParams
+from repro.data.pipeline import StreamingPipeline
+from repro.data.synthetic import token_stream
+from repro.runtime.elastic import ElasticPool
+from repro.runtime.fault import HeartbeatMonitor, RestartPolicy
+
+
+def main() -> None:
+    hosts = list(range(8))
+    pipe = StreamingPipeline(num_hosts=8, seq_len=32, batch_per_host=1,
+                             grouping="fish",
+                             fish_params=FishParams(epoch=500, k_max=256))
+    pool = ElasticPool(hosts)
+    mon = HeartbeatMonitor(hosts, timeout=5.0)
+    policy = RestartPolicy(total_hosts=8, max_lost_frac=0.25,
+                           on_rescale=lambda alive: pipe.rescale(alive))
+
+    stream = token_stream(3000, num_keys=400, doc_len=16, vocab_size=1000,
+                          z=1.3, seed=0)
+    sample_keys = [f"doc{i}" for i in range(2000)]
+
+    clock = 0.0
+    for i, (key, toks) in enumerate(stream):
+        clock += 0.01
+        pipe.ingest(key, toks)
+        for h in pipe.grouper.ring.workers:
+            if not (h == 5 and i > 1000):   # host 5 goes silent after doc 1000
+                mon.heartbeat(h, clock)
+        if i % 200 == 0:
+            dead = mon.check(clock)
+            if dead:
+                status = policy.handle(mon, clock)
+                moved = pool.remove_host(dead[0], sample_keys)
+                print(f"[t={clock:6.1f}] host {dead[0]} dead -> {status}; "
+                      f"{moved}/{len(sample_keys)} sample keys remapped "
+                      f"({moved/len(sample_keys):.1%}, ~1/8 expected)")
+        if i == 2200:  # scale out
+            new = 8
+            moved = pool.add_host(new, sample_keys)
+            pipe.rescale(sorted(set(pipe.grouper.ring.workers) | {new}))
+            print(f"[t={clock:6.1f}] host {new} joined; {moved} keys moved "
+                  f"({moved/len(sample_keys):.1%})")
+
+    routed = pipe._docs_routed
+    print(f"\ndocs routed per host: {routed.tolist()}")
+    print(f"pipeline memory overhead (key replicas): "
+          f"{pipe.memory_overhead()} "
+          f"({pipe.grouper.memory_overhead_normalized():.2f}x FG)")
+
+
+if __name__ == "__main__":
+    main()

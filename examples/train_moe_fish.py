@@ -1,0 +1,50 @@
+"""End-to-end driver: train a reduced MoE model (deepseek-v2-lite family)
+with FISH expert routing for a few hundred steps, through the full stack —
+FISH-grouped data pipeline, AdamW, checkpointing, straggler feedback.
+
+Compares routing modes on the way: fg (key-affine argmax) vs fish.
+
+    PYTHONPATH=src python examples/train_moe_fish.py --steps 200
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config, reduced_config
+from repro.launch.train import TrainLoop
+from repro.optim.adamw import AdamWConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/fish_moe_ckpt")
+    ap.add_argument("--routing", default="fish", choices=("fg", "pkg", "fish"))
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config("deepseek-v2-lite-16b"))
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, routing=args.routing),
+        grad_accum=1,
+    )
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=20,
+                          total_steps=max(args.steps, 100))
+    loop = TrainLoop(cfg, opt_cfg, batch=args.batch, seq=args.seq,
+                     ckpt_dir=args.ckpt_dir)
+    if loop.maybe_restore():
+        print(f"resumed from checkpoint at step {loop.step}")
+    hist = loop.run(args.steps, ckpt_every=100, log_every=20)
+    print(f"\nrouting={args.routing}: loss {hist[0]:.3f} -> {hist[-1]:.3f} "
+          f"over {len(hist)} steps")
+    import numpy as np
+    hot = np.asarray(loop.hotness)
+    frac = hot / hot.sum(axis=-1, keepdims=True)
+    print(f"expert hotness (layer 0): top={frac[0].max():.3f} "
+          f"min={frac[0].min():.4f} — FISH capacities follow this profile")
+    loop.save()
+
+
+if __name__ == "__main__":
+    main()

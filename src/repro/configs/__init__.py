@@ -1,0 +1,48 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+
+from typing import Dict, List
+
+from .base import (MLAConfig, ModelConfig, MoEConfig, RGLRUConfig, SHAPES,
+                   ShapeConfig, SSMConfig, reduced_config)
+
+_ARCH_MODULES = {
+    "mamba2-780m": "mamba2_780m",
+    "qwen1.5-0.5b": "qwen15_05b",
+    "starcoder2-3b": "starcoder2_3b",
+    "olmo-1b": "olmo_1b",
+    "gemma2-2b": "gemma2_2b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "whisper-large-v3": "whisper_large_v3",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    import importlib
+
+    try:
+        mod_name = _ARCH_MODULES[arch]
+    except KeyError:
+        raise ValueError(f"unknown arch {arch!r}; one of {list_archs()}")
+    mod = importlib.import_module(f".{mod_name}", __package__)
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    try:
+        return SHAPES[name]
+    except KeyError:
+        raise ValueError(f"unknown shape {name!r}; one of {list(SHAPES)}")
+
+
+__all__ = [
+    "MLAConfig", "ModelConfig", "MoEConfig", "RGLRUConfig", "SSMConfig",
+    "ShapeConfig", "SHAPES", "reduced_config", "list_archs", "get_config",
+    "get_shape",
+]

@@ -1,0 +1,50 @@
+"""FISH core: the paper's contribution (Algs. 1-3, CHK, consistent hashing,
+baseline groupings, DSPE simulator)."""
+
+from .assignment import WorkerStateEstimator, select_min_wait
+from .baselines import (
+    DChoices,
+    FieldGrouping,
+    FishGrouper,
+    Grouper,
+    PartialKeyGrouping,
+    ShuffleGrouping,
+    WChoices,
+    make_grouper,
+)
+from .chash import ConsistentHashRing, hash32
+from .fish import (
+    EpochFrequencyTracker,
+    FishParams,
+    FishState,
+    chk_num_workers,
+    classify_hot_keys,
+    epoch_update,
+    init_fish_state,
+)
+from .stream import MembershipEvent, StreamMetrics, simulate_stream
+
+__all__ = [
+    "WorkerStateEstimator",
+    "select_min_wait",
+    "DChoices",
+    "FieldGrouping",
+    "FishGrouper",
+    "Grouper",
+    "PartialKeyGrouping",
+    "ShuffleGrouping",
+    "WChoices",
+    "make_grouper",
+    "ConsistentHashRing",
+    "hash32",
+    "EpochFrequencyTracker",
+    "FishParams",
+    "FishState",
+    "chk_num_workers",
+    "classify_hot_keys",
+    "epoch_update",
+    "init_fish_state",
+    "MembershipEvent",
+    "StreamMetrics",
+    "simulate_stream",
+]

@@ -1,0 +1,272 @@
+"""Stream grouping schemes (paper §2.2) + the FISH grouper itself.
+
+All groupers share one interface used by the stream simulator
+(:mod:`repro.core.stream`), the data pipeline and the serving router::
+
+    worker = grouper.assign(key, now)
+
+and expose ``state_replicas()`` — the set of (key -> workers) mappings they
+created, which is the paper's memory-overhead metric (Σ_w distinct keys held
+on w, normalised to FG's 1 replica per key).
+
+Baselines:
+  * SG  — Shuffle Grouping: round-robin, ignores the key.
+  * FG  — Field Grouping: hash(key) mod W.
+  * PKG — Partial Key Grouping: power-of-two-choices between 2 hashed
+          candidates, pick the one with the smaller local assigned count.
+  * DC  — D-Choices: SpaceSaving heavy hitters over the *entire lifetime* get
+          d hashed candidates; the rest use PKG.
+  * WC  — W-Choices: like DC but heavy hitters may use *all* workers.
+  * FISH — epoch-decayed hot keys (Alg. 1) + CHK (Alg. 2) + heuristic worker
+          assignment (Alg. 3) over consistent-hash candidates (§5).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from .assignment import WorkerStateEstimator
+from .chash import ConsistentHashRing, hash32
+from .fish import EpochFrequencyTracker, FishParams, chk_num_workers
+
+__all__ = [
+    "Grouper",
+    "ShuffleGrouping",
+    "FieldGrouping",
+    "PartialKeyGrouping",
+    "DChoices",
+    "WChoices",
+    "FishGrouper",
+    "make_grouper",
+]
+
+
+class Grouper:
+    """Base class: tracks key->worker replicas and per-worker assigned counts."""
+
+    name = "base"
+
+    def __init__(self, num_workers: int):
+        self.num_workers = num_workers
+        self.replicas: Dict[object, Set[int]] = {}
+        self.assigned_counts = np.zeros(num_workers, dtype=np.int64)
+
+    # -- interface ---------------------------------------------------------------
+    def assign(self, key, now: float = 0.0) -> int:
+        raise NotImplementedError
+
+    def _record(self, key, worker: int) -> int:
+        self.replicas.setdefault(key, set()).add(worker)
+        self.assigned_counts[worker] += 1
+        return worker
+
+    # -- metrics -----------------------------------------------------------------
+    def memory_overhead(self) -> int:
+        """Σ_w |distinct keys on worker w|  (paper's memory metric)."""
+        return int(sum(len(ws) for ws in self.replicas.values()))
+
+    def memory_overhead_normalized(self) -> float:
+        """Normalised to FG (= 1 replica per distinct key)."""
+        n_keys = max(len(self.replicas), 1)
+        return self.memory_overhead() / float(n_keys)
+
+    # hooks for heterogeneous-capacity runtimes; default no-op
+    def record_capacity_sample(self, worker: int, seconds_per_tuple: float) -> None:
+        pass
+
+    def on_membership_change(self, workers: Sequence[int]) -> None:
+        raise NotImplementedError(f"{self.name} does not support elasticity")
+
+
+class ShuffleGrouping(Grouper):
+    name = "sg"
+
+    def __init__(self, num_workers: int):
+        super().__init__(num_workers)
+        self._rr = 0
+
+    def assign(self, key, now: float = 0.0) -> int:
+        w = self._rr
+        self._rr = (self._rr + 1) % self.num_workers
+        return self._record(key, w)
+
+
+class FieldGrouping(Grouper):
+    name = "fg"
+
+    def assign(self, key, now: float = 0.0) -> int:
+        return self._record(key, hash32((key, 0)) % self.num_workers)
+
+
+class PartialKeyGrouping(Grouper):
+    """Power of two choices between two hash candidates [14]."""
+
+    name = "pkg"
+    _salts = (0, 1)
+
+    def _candidates(self, key) -> List[int]:
+        cands = [hash32((key, s)) % self.num_workers for s in self._salts]
+        if cands[0] == cands[1] and self.num_workers > 1:
+            cands[1] = (cands[1] + 1) % self.num_workers
+        return cands
+
+    def _pick_least_loaded(self, cands: Sequence[int]) -> int:
+        loads = self.assigned_counts[list(cands)]
+        return int(cands[int(np.argmin(loads))])
+
+    def assign(self, key, now: float = 0.0) -> int:
+        return self._record(key, self._pick_least_loaded(self._candidates(key)))
+
+
+class DChoices(PartialKeyGrouping):
+    """D-Choices [15]: lifetime SpaceSaving heavy hitters -> d candidates.
+
+    ``d`` is chosen per [15] as the smallest d such that the head frequency can
+    be spread below the imbalance bound; we use their practical rule
+    d = ceil(f_k * W / theta-bound) capped at W, matching the reference
+    implementation's behaviour for skewed streams.
+    """
+
+    name = "dc"
+
+    def __init__(self, num_workers: int, k_max: int = 1000, theta_frac: float = 0.25):
+        super().__init__(num_workers)
+        # entire-lifetime tracker == Alg. 1 with alpha=1 and one giant epoch
+        self.tracker = EpochFrequencyTracker(
+            FishParams(alpha=1.0, epoch=2**62, k_max=k_max)
+        )
+        self.theta = theta_frac / num_workers
+
+    def _heavy_d(self, f_k: float) -> int:
+        d = int(math.ceil(f_k * self.num_workers / max(self.theta, 1e-12) ** 0.5))
+        return max(2, min(d, self.num_workers))
+
+    def _candidates_d(self, key, d: int) -> List[int]:
+        cands = {hash32((key, s)) % self.num_workers for s in range(d)}
+        return list(cands)
+
+    def assign(self, key, now: float = 0.0) -> int:
+        self.tracker.update(key)
+        f_k = self.tracker.frequency(key)
+        if f_k > self.theta:
+            cands = self._candidates_d(key, self._heavy_d(f_k))
+        else:
+            cands = self._candidates(key)
+        return self._record(key, self._pick_least_loaded(cands))
+
+
+class WChoices(DChoices):
+    """W-Choices [15]: heavy hitters may use the entire worker set."""
+
+    name = "wc"
+
+    def assign(self, key, now: float = 0.0) -> int:
+        self.tracker.update(key)
+        f_k = self.tracker.frequency(key)
+        if f_k > self.theta:
+            cands = list(range(self.num_workers))
+        else:
+            cands = self._candidates(key)
+        return self._record(key, self._pick_least_loaded(cands))
+
+
+class FishGrouper(Grouper):
+    """The paper's grouper: Alg. 1 + Alg. 2 + Alg. 3 + consistent hashing."""
+
+    name = "fish"
+
+    def __init__(
+        self,
+        num_workers: int,
+        params: Optional[FishParams] = None,
+        capacities: Optional[np.ndarray] = None,
+        interval: float = 10.0,
+        virtual_nodes: int = 64,
+        use_consistent_hash: bool = True,
+    ):
+        super().__init__(num_workers)
+        self.params = params or FishParams()
+        self.tracker = EpochFrequencyTracker(self.params)
+        self.estimator = WorkerStateEstimator(
+            capacities=(
+                np.ones(num_workers) if capacities is None else np.asarray(capacities)
+            ),
+            interval=interval,
+        )
+        self.use_consistent_hash = use_consistent_hash
+        self.ring = ConsistentHashRing(range(num_workers), virtual_nodes=virtual_nodes)
+        self._active = list(range(num_workers))
+        self.m_k: Dict[object, int] = {}  # CHK monotone memory M
+
+    def assign(self, key, now: float = 0.0) -> int:
+        self.tracker.update(key)
+        theta = self.params.theta(self.num_workers)
+        f_k = self.tracker.frequency(key)
+        f_top = self.tracker.top_frequency()
+        d, m_new = chk_num_workers(
+            f_k, f_top, theta, self.num_workers, self.params.d_min,
+            self.m_k.get(key, 0),
+        )
+        if m_new:
+            self.m_k[key] = m_new
+        if self.use_consistent_hash:
+            candidates = self.ring.lookup_n(key, d)
+        else:
+            # mod-hash candidates (the §5 strawman — remaps everything on
+            # membership change; used for the RQ4 w/o-CH comparison)
+            n_active = len(self._active)
+            candidates = list(
+                {self._active[hash32((key, s)) % n_active] for s in range(d)}
+            )
+        worker = self.estimator.select(candidates, now)
+        return self._record(key, worker)
+
+    # -- heterogeneity + elasticity hooks -----------------------------------------
+    def record_capacity_sample(self, worker: int, seconds_per_tuple: float) -> None:
+        self.estimator.record_capacity_sample(worker, seconds_per_tuple)
+
+    def on_membership_change(self, workers: Sequence[int]) -> None:
+        """Elastic add/remove via consistent hashing (paper §5)."""
+        current = set(self.ring.workers)
+        target = set(workers)
+        self._active = sorted(target)
+        for w in current - target:
+            self.ring.remove_worker(w)
+        for w in target - current:
+            self.ring.add_worker(w)
+            if w >= self.num_workers:
+                grow = w + 1 - self.num_workers
+                self.assigned_counts = np.concatenate(
+                    [self.assigned_counts, np.zeros(grow, dtype=np.int64)]
+                )
+                self.estimator.capacities = np.concatenate(
+                    [self.estimator.capacities, np.ones(grow)]
+                )
+                self.estimator.backlog = np.concatenate(
+                    [self.estimator.backlog, np.zeros(grow)]
+                )
+                self.estimator.assigned = np.concatenate(
+                    [self.estimator.assigned, np.zeros(grow)]
+                )
+                self.num_workers = w + 1
+
+
+_GROUPERS = {
+    "sg": ShuffleGrouping,
+    "fg": FieldGrouping,
+    "pkg": PartialKeyGrouping,
+    "dc": DChoices,
+    "wc": WChoices,
+    "fish": FishGrouper,
+}
+
+
+def make_grouper(name: str, num_workers: int, **kwargs) -> Grouper:
+    try:
+        cls = _GROUPERS[name.lower()]
+    except KeyError:
+        raise ValueError(f"unknown grouping scheme {name!r}; one of {list(_GROUPERS)}")
+    return cls(num_workers, **kwargs)

@@ -1,0 +1,319 @@
+"""FISH epoch-based recent hot-key identification (paper Alg. 1 + Alg. 2).
+
+Two implementations live here:
+
+* :class:`EpochFrequencyTracker` — the paper-faithful *sequential* host-side
+  implementation: per-tuple SpaceSaving with replace-min (count inherited from
+  the evicted minimum, Alg. 1 lines 19-22) and per-epoch time decay
+  (``TimeDecayingUpdate``, lines 23-26).  This is what the reproduction
+  benchmarks use.
+* :func:`epoch_update` / :func:`classify_hot_keys` — branch-free ``jax.lax``
+  versions for the device-side fast path (MoE routing).  The match-and-count
+  hotspot is the Pallas kernel in :mod:`repro.kernels.fish_count`; here we keep
+  a pure-jnp fallback with the same semantics (epoch-batched ReplaceMin — see
+  DESIGN.md §4 for the fidelity note and tests for the Jaccard bound vs. the
+  sequential oracle).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FishParams",
+    "EpochFrequencyTracker",
+    "FishState",
+    "init_fish_state",
+    "epoch_update",
+    "classify_hot_keys",
+    "chk_num_workers",
+]
+
+
+# ---------------------------------------------------------------------------
+# Parameters (defaults follow the paper's §6.3 recommendations)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FishParams:
+    """Tunables of FISH (paper Table 1 + §6.3).
+
+    alpha:   inter-epoch time decaying factor (paper default 0.2).
+    epoch:   number of sequential tuples per epoch, ``N_epoch`` (default 1000).
+    k_max:   capacity of the bounded counter set ``K`` (default 1000).
+    theta_frac: hot-key threshold as a fraction of ``2/n``; the paper settles
+        on θ = 1/(4n) for n workers, i.e. ``theta = theta_frac / num_workers``
+        with ``theta_frac = 0.25``.
+    d_min:   minimal number of workers for a hot key (Alg. 2).
+    """
+
+    alpha: float = 0.2
+    epoch: int = 1000
+    k_max: int = 1000
+    theta_frac: float = 0.25
+    d_min: int = 2
+
+    def theta(self, num_workers: int) -> float:
+        return self.theta_frac / float(num_workers)
+
+
+# ---------------------------------------------------------------------------
+# Host-side, paper-faithful sequential tracker (Alg. 1)
+# ---------------------------------------------------------------------------
+
+
+class EpochFrequencyTracker:
+    """Sequential SpaceSaving-with-decay tracker — exact Alg. 1.
+
+    ``update(key)`` processes one tuple; every ``epoch`` tuples all counters
+    are multiplied by ``alpha`` *before* the tuple is counted (Alg. 1 lines
+    4-7 run at the top of the loop body).
+    """
+
+    def __init__(self, params: FishParams):
+        self.params = params
+        self.counts: Dict[object, float] = {}
+        self._tuples_in_epoch = 0
+        self.total_seen = 0
+        self.epochs_completed = 0
+
+    # -- Alg. 1 main loop body -------------------------------------------------
+    def update(self, key) -> None:
+        p = self.params
+        if self._tuples_in_epoch == p.epoch:
+            self._time_decaying_update()
+            self._tuples_in_epoch = 0
+            self.epochs_completed += 1
+        counts = self.counts
+        if key in counts:
+            counts[key] += 1.0
+        elif len(counts) < p.k_max:
+            counts[key] = 1.0
+        else:
+            self._replace_min(key)
+        self._tuples_in_epoch += 1
+        self.total_seen += 1
+
+    def update_many(self, keys: Sequence) -> None:
+        for k in keys:
+            self.update(k)
+
+    # -- Alg. 1 ReplaceMin -----------------------------------------------------
+    def _replace_min(self, key) -> None:
+        k_min = min(self.counts, key=self.counts.get)
+        c_min = self.counts.pop(k_min)
+        # "its occurrence number is set to that of replaced ones plus 1"
+        self.counts[key] = c_min + 1.0
+
+    # -- Alg. 1 TimeDecayingUpdate ----------------------------------------------
+    def _time_decaying_update(self) -> None:
+        a = self.params.alpha
+        if a == 0.0:
+            self.counts.clear()
+            return
+        for k in self.counts:
+            self.counts[k] *= a
+
+    # -- queries ----------------------------------------------------------------
+    def frequency(self, key) -> float:
+        """Relative frequency estimate f_k (counter / Σ counters)."""
+        total = sum(self.counts.values())
+        if total <= 0.0:
+            return 0.0
+        return self.counts.get(key, 0.0) / total
+
+    def frequencies(self) -> Dict[object, float]:
+        total = sum(self.counts.values())
+        if total <= 0.0:
+            return {k: 0.0 for k in self.counts}
+        return {k: c / total for k, c in self.counts.items()}
+
+    def top_frequency(self) -> float:
+        total = sum(self.counts.values())
+        if total <= 0.0:
+            return 0.0
+        return max(self.counts.values()) / total
+
+    def hot_keys(self, num_workers: int) -> Dict[object, float]:
+        theta = self.params.theta(num_workers)
+        return {k: f for k, f in self.frequencies().items() if f > theta}
+
+
+# ---------------------------------------------------------------------------
+# CHK — Classification of Hot Key (Alg. 2), scalar host form
+# ---------------------------------------------------------------------------
+
+
+def chk_num_workers(
+    f_k: float,
+    f_top: float,
+    theta: float,
+    num_workers: int,
+    d_min: int = 2,
+    m_k: int = 0,
+) -> Tuple[int, int]:
+    """Alg. 2: number of candidate workers ``d`` for a key with frequency f_k.
+
+    Returns ``(d, new_m_k)``; ``m_k`` is the per-key monotone memory ``M_k``.
+    Non-hot keys (f_k <= theta) get d = 2 (PKG fallback) and M_k unchanged.
+    """
+    if f_k <= theta or f_k <= 0.0 or f_top <= 0.0:
+        return 2, m_k
+    # index = floor(log2(f_top / f_k)); d = W / 2^index
+    index = int(math.floor(math.log2(max(f_top / f_k, 1.0))))
+    d = num_workers // (2**index) if index < 63 else 0
+    d = max(d, d_min)
+    d = min(d, num_workers)
+    if m_k < d:
+        m_k = d
+    else:
+        d = m_k
+    return d, m_k
+
+
+# ---------------------------------------------------------------------------
+# Device-side state + epoch-batched update (jax.lax, jit-able)
+# ---------------------------------------------------------------------------
+
+
+class FishState(dict):
+    """Pytree: bounded counter table on device.
+
+    keys:   (k_max,) int32   — key ids, -1 for empty slots
+    counts: (k_max,) float32 — decayed occurrence counters
+    """
+
+    def __init__(self, keys, counts):
+        super().__init__(keys=keys, counts=counts)
+
+    @property
+    def keys_arr(self):
+        return self["keys"]
+
+    @property
+    def counts_arr(self):
+        return self["counts"]
+
+
+def init_fish_state(k_max: int) -> FishState:
+    return FishState(
+        keys=jnp.full((k_max,), -1, dtype=jnp.int32),
+        counts=jnp.zeros((k_max,), dtype=jnp.float32),
+    )
+
+
+def _match_counts(table_keys: jnp.ndarray, batch_keys: jnp.ndarray):
+    """Pure-jnp fallback of the fish_count kernel: one-hot match & count.
+
+    Returns (counts_delta (k_max,), matched (n,) bool).
+    """
+    eq = (batch_keys[:, None] == table_keys[None, :]) & (table_keys[None, :] >= 0)
+    counts_delta = jnp.sum(eq, axis=0).astype(jnp.float32)
+    matched = jnp.any(eq, axis=1)
+    return counts_delta, matched
+
+
+def epoch_update(
+    state: FishState,
+    batch_keys: jnp.ndarray,
+    *,
+    alpha: float,
+    max_new: int = 64,
+    match_fn=None,
+) -> FishState:
+    """Process one epoch of keys through the bounded counter table.
+
+    Device-side analog of Alg. 1 with epoch-batched ReplaceMin:
+
+    1. inter-epoch decay:   counts *= alpha
+    2. intra-epoch counting: counts[k] += #occurrences for keys already in K
+       (the O(N·K_max) hotspot — ``match_fn`` defaults to the pure-jnp oracle;
+       the Pallas kernel from kernels/ops.py can be passed instead)
+    3. batched ReplaceMin: the ``max_new`` most frequent *unmatched* keys of
+       this epoch are merged, each evicting the current minimum and inheriting
+       ``c_min + its epoch frequency`` (Alg. 1 line 22 generalised to a batch).
+
+    ``batch_keys``: (n,) int32 key ids (>= 0).  Static shapes throughout.
+    """
+    if match_fn is None:
+        match_fn = _match_counts
+    table_keys = state["keys"]
+    counts = state["counts"] * jnp.float32(alpha)  # TimeDecayingUpdate
+
+    counts_delta, matched = match_fn(table_keys, batch_keys)
+    counts = counts + counts_delta
+
+    # --- candidate new keys: frequency of unmatched keys within this epoch ---
+    # Sort unmatched keys so identical ids are adjacent, then segment-count.
+    n = batch_keys.shape[0]
+    cand_keys = jnp.where(matched, jnp.int32(-1), batch_keys)
+    sorted_keys = jnp.sort(cand_keys)
+    new_run = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]]
+    )
+    run_id = jnp.cumsum(new_run.astype(jnp.int32)) - 1
+    run_len = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), run_id, num_segments=n)
+    run_key = jax.ops.segment_max(sorted_keys, run_id, num_segments=n)
+    run_len = jnp.where(run_key >= 0, run_len, 0.0)  # drop the matched/-1 run
+
+    # top `max_new` candidate keys by epoch frequency
+    top_len, top_idx = jax.lax.top_k(run_len, max_new)
+    top_key = run_key[top_idx]
+
+    # --- batched ReplaceMin merge -------------------------------------------
+    def merge_one(carry, kv):
+        tk, tc = carry
+        key, freq = kv
+        empty = tk < 0
+        # empty slots count as min with counter 0 (insert path, Alg.1 l.12-14)
+        eff = jnp.where(empty, 0.0, tc)
+        slot = jnp.argmin(eff)
+        c_min = eff[slot]
+        do = freq > 0.0
+        new_count = jnp.where(tk[slot] < 0, freq, c_min + freq)
+        tk = jnp.where(do, tk.at[slot].set(key), tk)
+        tc = jnp.where(do, tc.at[slot].set(new_count), tc)
+        return (tk, tc), None
+
+    (table_keys, counts), _ = jax.lax.scan(
+        merge_one, (table_keys, counts), (top_key, top_len)
+    )
+    return FishState(keys=table_keys, counts=counts)
+
+
+def classify_hot_keys(
+    state: FishState,
+    *,
+    num_workers: int,
+    theta: float,
+    d_min: int = 2,
+    m_k: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Vectorised CHK (Alg. 2) over the whole table.
+
+    Returns ``(d, is_hot, new_m_k)`` — per-slot candidate-worker counts
+    (non-hot slots get 2), hotness mask, and the updated monotone memory.
+    """
+    counts = state["counts"]
+    total = jnp.maximum(jnp.sum(counts), 1e-30)
+    f = counts / total
+    f_top = jnp.max(f)
+    is_hot = f > theta
+    ratio = jnp.maximum(f_top / jnp.maximum(f, 1e-30), 1.0)
+    index = jnp.floor(jnp.log2(ratio)).astype(jnp.int32)
+    index = jnp.clip(index, 0, 30)
+    d = (num_workers // (2**index)).astype(jnp.int32)
+    d = jnp.maximum(d, d_min)
+    d = jnp.minimum(d, num_workers)
+    if m_k is None:
+        m_k = jnp.zeros_like(d)
+    new_m_k = jnp.where(is_hot, jnp.maximum(m_k, d), m_k)
+    d = jnp.where(is_hot, jnp.maximum(d, m_k), 2)
+    return d, is_hot, new_m_k

@@ -1,0 +1,154 @@
+"""FISH-grouped streaming data pipeline.
+
+Keyed documents stream in; a pluggable grouping scheme (any of
+``repro.core.baselines``, FISH by default) assigns each document to a
+data-parallel *host shard*; each shard packs tokens into fixed (B_local, S)
+batches.  This is the paper's DAG (source -> grouping -> worker) with the
+worker = a training host's input queue:
+
+* hot document keys are spread over several hosts (CHK) so no host's input
+  queue backs up (latency = step-time jitter at the training level);
+* per-host *state* (e.g. dedup tables / tokenizer caches keyed by doc key)
+  is replicated only where a key was actually routed — the paper's memory
+  metric, exposed via ``memory_overhead()``;
+* straggler mitigation: the Alg. 3 estimator routes fewer documents to slow
+  hosts (heterogeneous ``P_w``), and :meth:`report_host_time` feeds measured
+  step times back as capacity samples;
+* elastic scaling: host join/leave remaps via consistent hashing (§5).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.baselines import FishGrouper, Grouper, make_grouper
+from ..core.fish import FishParams
+
+__all__ = ["StreamingPipeline"]
+
+
+class StreamingPipeline:
+    """Route keyed documents to host shards and pack token batches."""
+
+    def __init__(
+        self,
+        num_hosts: int,
+        seq_len: int,
+        batch_per_host: int,
+        grouping: str = "fish",
+        fish_params: Optional[FishParams] = None,
+        host_capacities: Optional[np.ndarray] = None,
+        seed: int = 0,
+    ):
+        self.num_hosts = num_hosts
+        self.seq_len = seq_len
+        self.batch_per_host = batch_per_host
+        if grouping == "fish":
+            self.grouper: Grouper = FishGrouper(
+                num_hosts, params=fish_params or FishParams(),
+                capacities=host_capacities,
+            )
+        else:
+            self.grouper = make_grouper(grouping, num_hosts)
+        self._buffers: Dict[int, deque] = {h: deque() for h in range(num_hosts)}
+        self._clock = 0.0
+        self._docs_routed = np.zeros(num_hosts, dtype=np.int64)
+        self._rng = np.random.default_rng(seed)
+
+    # -- ingestion ---------------------------------------------------------------
+    def ingest(self, doc_key, tokens: np.ndarray) -> int:
+        """Route one document; returns the host it went to."""
+        host = self.grouper.assign(doc_key, self._clock)
+        self._clock += 1e-4
+        buf = self._buffers.setdefault(host, deque())
+        buf.extend(tokens.tolist())
+        self._docs_routed[host] += 1
+        return host
+
+    def ingest_stream(self, stream: Iterator[Tuple[int, np.ndarray]],
+                      max_docs: Optional[int] = None) -> None:
+        for i, (key, tokens) in enumerate(stream):
+            if max_docs is not None and i >= max_docs:
+                break
+            self.ingest(key, tokens)
+
+    # -- batching ----------------------------------------------------------------
+    def host_ready(self, host: int) -> bool:
+        need = self.seq_len * self.batch_per_host + self.batch_per_host
+        return len(self._buffers.get(host, ())) >= need
+
+    def ready(self) -> bool:
+        return all(self.host_ready(h) for h in self._active_hosts())
+
+    def _active_hosts(self) -> List[int]:
+        return sorted(self._buffers)
+
+    def next_host_batch(self, host: int) -> Optional[Dict[str, np.ndarray]]:
+        """(B_local, S) tokens + next-token labels, or None if not ready."""
+        if not self.host_ready(host):
+            return None
+        buf = self._buffers[host]
+        n = self.batch_per_host * (self.seq_len + 1)
+        flat = np.array([buf.popleft() for _ in range(n)], dtype=np.int32)
+        flat = flat.reshape(self.batch_per_host, self.seq_len + 1)
+        return {"tokens": flat[:, :-1], "labels": flat[:, 1:]}
+
+    def next_global_batch(self, steal: bool = True
+                          ) -> Optional[Dict[str, np.ndarray]]:
+        """Assemble one global batch; with ``steal`` (default) starved hosts
+        borrow tokens from the longest backlog (work stealing — the batch-
+        assembly form of straggler mitigation)."""
+        hosts = self._active_hosts()
+        if steal:
+            need = self.seq_len * self.batch_per_host + self.batch_per_host
+            for h in hosts:
+                while not self.host_ready(h):
+                    donor = max(hosts, key=lambda x: len(self._buffers[x]))
+                    dbuf = self._buffers[donor]
+                    deficit = need - len(self._buffers[h])
+                    if donor == h or len(dbuf) <= need:
+                        return None  # nothing to steal anywhere
+                    take = min(deficit, len(dbuf) - need)
+                    if take <= 0:
+                        return None
+                    self._buffers[h].extend(dbuf.pop() for _ in range(take))
+        parts = []
+        for h in hosts:
+            p = self.next_host_batch(h)
+            if p is None:
+                return None
+            parts.append(p)
+        return {
+            k: np.concatenate([p[k] for p in parts], axis=0)
+            for k in parts[0]
+        }
+
+    # -- runtime feedback / elasticity --------------------------------------------
+    def report_host_time(self, host: int, seconds_per_doc: float) -> None:
+        """Measured host speed -> Alg. 3 capacity sample (straggler feedback)."""
+        self.grouper.record_capacity_sample(host, seconds_per_doc)
+
+    def backlog(self) -> np.ndarray:
+        return np.array([len(self._buffers.get(h, ()))
+                         for h in self._active_hosts()])
+
+    def memory_overhead(self) -> int:
+        return self.grouper.memory_overhead()
+
+    def rescale(self, hosts: Sequence[int]) -> None:
+        """Elastic membership change (consistent hashing remap, §5)."""
+        self.grouper.on_membership_change(hosts)
+        for h in hosts:
+            self._buffers.setdefault(h, deque())
+        for h in list(self._buffers):
+            if h not in hosts and not self._buffers[h]:
+                del self._buffers[h]
+        self.num_hosts = len(hosts)
+        grow = max(hosts) + 1 - self._docs_routed.shape[0]
+        if grow > 0:
+            self._docs_routed = np.concatenate(
+                [self._docs_routed, np.zeros(grow, dtype=np.int64)]
+            )

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: FISH intra-epoch match-and-count (the Alg. 1 hotspot).
+
+Every tuple of an epoch must be compared against the bounded counter table
+``K`` (paper Alg. 1 line 8: ``if k in K``).  Sequential SpaceSaving does this
+tuple-by-tuple; on TPU we batch the whole epoch: the O(N_epoch × K_max)
+comparison matrix is evaluated block-by-block on the VPU with the token axis
+tiled through VMEM, producing
+
+* ``counts``  — per-table-slot occurrence counts for this epoch
+  (Alg. 1 line 9, batched), and
+* ``matched`` — per-token membership flags (drives the batched ReplaceMin
+  merge done by the caller — see ``repro.core.fish.epoch_update``).
+
+The table (K_max ≤ a few thousand ids) stays resident in VMEM across the
+whole grid; only token blocks stream HBM→VMEM.  Arithmetic intensity is
+~K_max compares per 4-byte token load, so the kernel is firmly compute-bound
+on the VPU — exactly the term the paper's epoch batching is designed to
+shrink (one decay pass per epoch instead of per tuple).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fish_count"]
+
+_BLOCK_N = 1024  # tokens per grid step (VMEM tile)
+
+
+def _fish_count_kernel(table_ref, keys_ref, counts_ref, matched_ref):
+    step = pl.program_id(0)
+    tbl = table_ref[...]  # (1, K) int32, resident
+    ks = keys_ref[...]  # (block_n, 1) int32
+
+    eq = (ks == tbl) & (tbl >= 0)  # (block_n, K) — the O(N·K) hotspot
+
+    @pl.when(step == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    counts_ref[...] += jnp.sum(eq.astype(jnp.float32), axis=0, keepdims=True)
+    matched_ref[...] = jnp.any(eq, axis=1, keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fish_count(
+    table_keys: jnp.ndarray,
+    batch_keys: jnp.ndarray,
+    *,
+    block_n: int = _BLOCK_N,
+    interpret: bool = False,
+):
+    """Blocked epoch match-and-count.
+
+    table_keys: (K,) int32, -1 marks empty slots.  K should be a multiple of
+                128 for TPU lane alignment (the wrapper in ops.py pads).
+    batch_keys: (N,) int32 tuple/key ids (>= 0).
+    returns:    counts (K,) float32, matched (N,) bool.
+    """
+    k = table_keys.shape[0]
+    n = batch_keys.shape[0]
+    n_pad = -n % block_n
+    keys2d = jnp.pad(batch_keys, (0, n_pad), constant_values=-2).reshape(-1, 1)
+    table2d = table_keys.reshape(1, k)
+    grid = (keys2d.shape[0] // block_n,)
+
+    counts, matched = pl.pallas_call(
+        _fish_count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),  # table resident in VMEM
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),  # token tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),  # accumulated across grid
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((keys2d.shape[0], 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(table2d, keys2d)
+    return counts[0], matched[:n, 0].astype(bool)

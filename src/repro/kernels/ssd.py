@@ -1,0 +1,134 @@
+"""Pallas TPU kernels for the Mamba-2 SSD (state-space duality) chunk scan.
+
+The SSD layer computes, per head, the 1-semiseparable recurrence
+
+    S_t = exp(a_t) * S_{t-1} + b_t ⊗ x_t          (state  N×P)
+    y_t = c_t · S_t
+
+The TPU-native evaluation (arXiv:2405.21060 §6, re-tiled for MXU/VMEM) splits
+the sequence into chunks of Q tokens:
+
+  1. ``ssd_chunk_state``  — per-chunk states  S_c = Σ_i exp(A_c - a_i) b_i⊗x_i
+     (an (N×Q)@(Q×P) MXU matmul per chunk×head);
+  2. a tiny sequential ``lax.scan`` across chunks combines the per-chunk
+     states (done by the caller in ops.py — O(S/Q) steps);
+  3. ``ssd_chunk_output`` — the chunk-local quadratic part plus the carried
+     state contribution:
+         y = ((C Bᵀ) ∘ L) X + (C * exp(a_cum)) S_prev
+     where L[i,j] = exp(a_cum[i] - a_cum[j]) for i ≥ j (decay mask).
+
+Block shapes are one (chunk × head) tile per grid step: X (Q,P), B/C (Q,N),
+states (N,P) — with Q = N = 128 every matmul hits the 128×128 MXU natively
+(P = 64 is the mamba2-780m head dim; noted in DESIGN.md).  All tiles live in
+VMEM; HBM traffic is one pass over X/B/C per kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_chunk_state", "ssd_chunk_output"]
+
+
+def _chunk_state_kernel(x_ref, b_ref, acum_ref, state_ref, atot_ref):
+    x = x_ref[0, :, 0, :]  # (Q, P)
+    b = b_ref[0, :, 0, :]  # (Q, N)
+    a_cum = acum_ref[0, :, 0]  # (Q,) inclusive cumsum of log-decay
+    a_total = a_cum[-1]
+    decay = jnp.exp(a_total - a_cum)  # weight of token i into the chunk state
+    bw = b * decay[:, None]
+    state_ref[0, 0] = jnp.dot(
+        bw.T, x, preferred_element_type=jnp.float32
+    )  # (N, P)
+    atot_ref[0, 0] = a_total
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_state(x, b, a_cum, *, interpret: bool = False):
+    """Per-chunk SSD states.
+
+    x:     (BC, Q, H, P)  chunked inputs (batch*chunks leading)
+    b:     (BC, Q, G, N)  input projections (G groups, heads share groups)
+    a_cum: (BC, Q, H)     inclusive within-chunk cumsum of log decay
+    returns states (BC, H, N, P) f32 and a_total (BC, H) f32
+    """
+    bc, q, h, p = x.shape
+    n = b.shape[-1]
+    g = b.shape[2]
+    hpg = h // g
+
+    states, atot = pl.pallas_call(
+        _chunk_state_kernel,
+        grid=(bc, h),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda i, j: (i, 0, j // hpg, 0)),
+            pl.BlockSpec((1, q, 1), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bc, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((bc, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, b, a_cum)
+    return states, atot
+
+
+def _chunk_output_kernel(x_ref, b_ref, c_ref, acum_ref, prev_ref, y_ref):
+    x = x_ref[0, :, 0, :]  # (Q, P)
+    b = b_ref[0, :, 0, :]  # (Q, N)
+    c = c_ref[0, :, 0, :]  # (Q, N)
+    a_cum = acum_ref[0, :, 0]  # (Q,)
+    prev = prev_ref[0, 0]  # (N, P) carried state entering this chunk
+
+    q = x.shape[0]
+    # decay mask L[i, j] = exp(a_cum[i] - a_cum[j]) * (i >= j)
+    rel = a_cum[:, None] - a_cum[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    mask = row >= col
+    l_mat = jnp.where(mask, jnp.exp(rel), 0.0)
+
+    scores = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    y_diag = jnp.dot(scores * l_mat, x, preferred_element_type=jnp.float32)
+    c_decayed = c * jnp.exp(a_cum)[:, None]
+    y_off = jnp.dot(c_decayed, prev, preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y_diag + y_off
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_output(x, b, c, a_cum, prev_states, *, interpret: bool = False):
+    """Chunk-local output + carried-state contribution.
+
+    x: (BC, Q, H, P); b, c: (BC, Q, G, N); a_cum: (BC, Q, H);
+    prev_states: (BC, H, N, P) — state *entering* each chunk.
+    returns y (BC, Q, H, P) f32.
+    """
+    bc, q, h, p = x.shape
+    n = b.shape[-1]
+    g = b.shape[2]
+    hpg = h // g
+
+    y = pl.pallas_call(
+        _chunk_output_kernel,
+        grid=(bc, h),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda i, j: (i, 0, j // hpg, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda i, j: (i, 0, j // hpg, 0)),
+            pl.BlockSpec((1, q, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, 1, p), lambda i, j: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bc, q, h, p), jnp.float32),
+        interpret=interpret,
+    )(x, b, c, a_cum, prev_states)
+    return y

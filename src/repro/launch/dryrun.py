@@ -1,0 +1,402 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Two passes per cell:
+
+1. **Compile pass** (the deliverable): jit with the production mesh's
+   in/out shardings, ``.lower().compile()`` must succeed.  From the compiled
+   artifact we record ``memory_analysis()`` (per-device bytes — proves the
+   cell fits a 16 GB v5e chip) and the SPMD-partitioned HLO, from which
+   per-device collective bytes are summed with **while-loop expansion**
+   (HLO text reports each scanned layer's collectives once; we multiply by
+   the loop trip count parsed from the loop condition).
+
+2. **Costing pass** (single-pod cells): the same step is re-lowered with
+   ``cfg.cost_exact=True`` — every scan unrolled, attention un-blocked,
+   kernels in reference form — so ``lowered.cost_analysis()`` reports exact
+   *global* HLO FLOPs / bytes (XLA's HloCostAnalysis counts while bodies
+   once, verified empirically; unrolling removes the distortion).
+
+Roofline terms (TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+    compute_s    = HLO_FLOPs_global / (chips × peak)
+    memory_s     = HLO_bytes_global / (chips × HBM_bw)   [unfused upper bound]
+    collective_s = per_device_collective_bytes / link_bw
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+        --shape train_4k [--multi-pod] [--no-cost]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config, get_shape, list_archs
+from ..models import transformer as T
+from ..models.sharding import ShardingRules, param_specs
+from ..optim.adamw import AdamWConfig, init_opt_state
+from . import steps as S
+from .mesh import dp_axes, make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12         # bf16
+HBM_BW = 819e9              # bytes/s
+ICI_BW = 50e9               # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)"
+    r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# HLO computation-graph walk with while-loop trip expansion
+# ---------------------------------------------------------------------------
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur_name = m.group(1)
+            cur_lines = []
+        elif line.strip() == "}" and cur_name:
+            comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+        elif cur_name:
+            cur_lines.append(line)
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                return m.group(1)
+    return None
+
+
+def _direct_collectives(block: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for line in block.splitlines():
+        low = line.lower()
+        for kind in _KINDS:
+            # count -start (async) or the plain op; skip -done (same buffer)
+            token = f" {kind}(" if f" {kind}(" in low else (
+                f" {kind}-start(" if f" {kind}-start(" in low else None)
+            if token is None:
+                continue
+            head = line.split("=", 1)
+            if len(head) != 2:
+                continue
+            result_type = head[1].split(kind)[0]
+            out[kind] = out.get(kind, 0) + _shape_bytes(result_type)
+            break
+    return out
+
+
+def collective_bytes_expanded(hlo: str) -> Dict[str, int]:
+    """Per-device collective bytes with while-loop trip multiplication."""
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+
+    def trip_count(cond_name: str) -> int:
+        block = comps.get(cond_name, "")
+        consts = [int(c) for c in _CONST_RE.findall(block)]
+        return max(consts) if consts else 1
+
+    def walk(name: str, mult: int, seen) -> Dict[str, int]:
+        if name not in comps or mult <= 0:
+            return {}
+        block = comps[name]
+        acc = {k: v * mult for k, v in _direct_collectives(block).items()}
+        for m in _WHILE_RE.finditer(block):
+            cond, body = m.group(1), m.group(2)
+            t = trip_count(cond)
+            sub = walk(body, mult * t, seen)
+            for k, v in sub.items():
+                acc[k] = acc.get(k, 0) + v
+        # follow calls / conditionals (collectives inside fusions don't exist)
+        for cm in re.finditer(r"(?:call|conditional)\(.*?to_apply=%?([\w\.\-]+)",
+                              block):
+            sub = walk(cm.group(1), mult, seen)
+            for k, v in sub.items():
+                acc[k] = acc.get(k, 0) + v
+        return acc
+
+    if entry is None:
+        return {}
+    return walk(entry, 1, set())
+
+
+def _analytic_param_bytes(params) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(params)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+
+def _build_lowerable(cfg, shape, rules, mesh, opt_cfg):
+    """Returns (jitted, args) for the cell's step on the given mesh."""
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    pspecs = param_specs(params, rules)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    pshard = jax.tree_util.tree_map(ns, pspecs)
+    batch = S.input_specs(cfg, shape)
+    bspecs = S.batch_pspecs(cfg, shape, rules)
+    bshard = {k: ns(bspecs[k]) for k in batch}
+
+    if shape.kind == "train":
+        from ..optim.adamw import opt_state_specs
+
+        opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params)
+        m_specs, v_specs = opt_state_specs(params, pspecs, opt_cfg)
+        opt_shard = type(opt)(
+            step=ns(P()),
+            m=jax.tree_util.tree_map(ns, m_specs),
+            v=jax.tree_util.tree_map(ns, v_specs),
+        )
+        hot = T.init_hotness_state(cfg)
+        hot_abs = jax.eval_shape(lambda: hot) if hot is not None else None
+        hot_shard = ns(P(None, None)) if hot is not None else None
+        step_fn = S.make_train_step(cfg, opt_cfg, rules)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(pshard, opt_shard, hot_shard, bshard),
+            out_shardings=(pshard, opt_shard, hot_shard, ns(P())),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (params, opt, hot_abs, batch)
+    if shape.kind == "prefill":
+        cache_abs = S.abstract_cache(cfg, shape)
+        cspecs = S.cache_pspecs(cfg, cache_abs, shape, rules)
+        cshard = jax.tree_util.tree_map(ns, cspecs)
+        step_fn = S.make_prefill_step(cfg, rules)
+        jitted = jax.jit(step_fn, in_shardings=(pshard, bshard),
+                         out_shardings=(cshard, ns(P())))
+        return jitted, (params, batch)
+    # decode
+    cache_abs = S.abstract_cache(cfg, shape)
+    cspecs = S.cache_pspecs(cfg, cache_abs, shape, rules)
+    cshard = jax.tree_util.tree_map(ns, cspecs)
+    step_fn = S.make_serve_step(cfg, rules)
+    jitted = jax.jit(step_fn, in_shardings=(pshard, cshard, bshard),
+                     out_shardings=(ns(P()), cshard), donate_argnums=(1,))
+    return jitted, (params, cache_abs, batch)
+
+
+def _exact_cost(cfg, shape, opt_cfg) -> Dict[str, float]:
+    """Global HLO FLOPs/bytes via an unrolled, unsharded lowering."""
+    cfg_x = dataclasses.replace(cfg, cost_exact=True, remat=False,
+                                grad_accum=1)
+    params = jax.eval_shape(lambda k: T.init_params(cfg_x, k),
+                            jax.random.PRNGKey(0))
+    batch = S.input_specs(cfg_x, shape)
+    if shape.kind == "train":
+        opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params)
+        hot = T.init_hotness_state(cfg_x)
+        hot_abs = jax.eval_shape(lambda: hot) if hot is not None else None
+        step_fn = S.make_train_step(cfg_x, opt_cfg, None)
+        lowered = jax.jit(step_fn).lower(params, opt, hot_abs, batch)
+    elif shape.kind == "prefill":
+        lowered = jax.jit(S.make_prefill_step(cfg_x, None)).lower(params, batch)
+    else:
+        cache = jax.eval_shape(
+            lambda: T.init_cache(cfg_x, shape.global_batch, shape.seq_len))
+        lowered = jax.jit(S.make_serve_step(cfg_x, None)).lower(
+            params, cache, batch)
+    ca = lowered.cost_analysis() or {}
+    return {
+        "flops_global": float(ca.get("flops", 0.0)),
+        "bytes_global": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             save: bool = True, extra_tag: str = "", with_cost: bool = True,
+             cfg_override=None) -> Dict[str, Any]:
+    cfg = cfg_override or get_config(arch)
+    shape = get_shape(shape_name)
+    if not cfg.supports_shape(shape):
+        result = {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "skipped",
+            "reason": "long_500k requires sub-quadratic attention "
+                      "(DESIGN.md §5)",
+        }
+        if save:
+            _save(result, extra_tag)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(dp=dp_axes(multi_pod), tp="model",
+                          zero=cfg.zero_sharding)
+    opt_cfg = AdamWConfig(state_dtype=cfg.opt_state_dtype,
+                          factored_v=cfg.opt_factored)
+
+    t0 = time.time()
+    with mesh:
+        jitted, args = _build_lowerable(cfg, shape, rules, mesh, opt_cfg)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+
+    n_dev = mesh.devices.size
+    colls = collective_bytes_expanded(hlo)
+    coll_total = sum(colls.values())
+
+    mem_dict = {}
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes"):
+            mem_dict[attr] = getattr(mem, attr, None)
+
+    params_abs = args[0]
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok",
+        "devices": int(n_dev),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "param_bytes_global": _analytic_param_bytes(params_abs),
+        "collective_bytes_per_device": colls,
+        "collective_bytes_total": coll_total,
+        "memory_analysis": mem_dict,
+    }
+
+    if with_cost and not multi_pod:
+        cost = _exact_cost(cfg, shape, opt_cfg)
+        result.update(cost)
+        flops, bts = cost["flops_global"], cost["bytes_global"]
+        result["roofline"] = {
+            "compute_s": flops / (n_dev * PEAK_FLOPS) if flops else 0.0,
+            "memory_s": bts / (n_dev * HBM_BW) if bts else 0.0,
+            "collective_s": coll_total / ICI_BW,
+        }
+    if save:
+        _save(result, extra_tag)
+    return result
+
+
+def _save(result: Dict[str, Any], extra_tag: str = "") -> None:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    tag = "multipod" if result["multi_pod"] else "singlepod"
+    if extra_tag:
+        tag += f"_{extra_tag}"
+    path = os.path.join(
+        ARTIFACT_DIR, f"{result['arch']}_{result['shape']}_{tag}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-cost", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        try:
+            t0 = time.time()
+            r = run_cell(arch, shape, multi_pod=args.multi_pod,
+                         with_cost=not args.no_cost)
+            if r["status"] == "ok":
+                rf = r.get("roofline", {})
+                ma = r["memory_analysis"] or {}
+                tmp = (ma.get("temp_size_in_bytes") or 0) / 2**30
+                arg = (ma.get("argument_size_in_bytes") or 0) / 2**30
+                print(f"[ok] {arch} {shape} "
+                      f"({'2x16x16' if args.multi_pod else '16x16'}) "
+                      f"compile={r['compile_s']}s "
+                      f"mem: args={arg:.2f}GiB temp={tmp:.2f}GiB "
+                      f"coll/dev={r['collective_bytes_total']/2**30:.3f}GiB "
+                      + (f"flops={r.get('flops_global', 0):.3e} "
+                         f"terms(c/m/n)={rf.get('compute_s', 0):.4f}/"
+                         f"{rf.get('memory_s', 0):.4f}/"
+                         f"{rf.get('collective_s', 0):.4f}s"
+                         if rf else ""),
+                      flush=True)
+            else:
+                print(f"[skip] {arch} {shape}: {r['reason']}", flush=True)
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"[FAIL] {arch} {shape}: {type(e).__name__}: {e}",
+                  flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

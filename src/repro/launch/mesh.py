@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state —
+:func:`make_production_mesh` is a function, called only by launchers (the
+dry-run sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before
+any jax import; see launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["make_production_mesh", "mesh_axes", "dp_axes"]
+
+
+def mesh_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+def dp_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = mesh_axes(multi_pod)
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "launch via repro.launch.dryrun (sets "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512) or on a "
+            "real slice"
+        )
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)

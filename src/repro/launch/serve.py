@@ -1,0 +1,92 @@
+"""Serving driver: FISH-routed continuous batching over model replicas.
+
+Each replica holds a reduced model + batched KV cache; the engine routes
+requests by session key (FISH: CHK replication for hot sessions + Alg. 3
+inferred-backlog replica choice + consistent hashing under failures) and
+drives real ``decode_step`` calls per tick.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --requests 64 --replicas 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, list_archs, reduced_config
+from ..models import transformer as T
+from ..serving.engine import Request, ServingEngine
+
+__all__ = ["ModelReplica", "main"]
+
+
+class ModelReplica:
+    """One replica: params + batched decode cache + jitted decode_step."""
+
+    def __init__(self, cfg, params, num_slots: int, max_seq: int):
+        self.cfg = cfg
+        self.params = params
+        self.cache = T.init_cache(cfg, num_slots, max_seq)
+        self.cache["pos"] = jnp.int32(-1)
+        self.tokens = jnp.zeros((num_slots, 1), jnp.int32)
+        self._step = jax.jit(lambda p, c, t: T.decode_step(p, c, t, cfg))
+        self.tokens_generated = 0
+
+    def step(self) -> None:
+        logits, self.cache = self._step(self.params, self.cache, self.tokens)
+        nxt = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1)
+        self.tokens = nxt[:, None].astype(jnp.int32)
+        self.tokens_generated += self.tokens.shape[0]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list_archs())
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--grouping", default="fish")
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch))
+    if cfg.embeds_input or cfg.encoder_layers:
+        raise SystemExit(f"{args.arch}: serving driver supports token-input "
+                         "decoders; use the engine simulation for "
+                         "frontend-stub archs")
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    replicas = [ModelReplica(cfg, params, args.slots, args.max_seq)
+                for _ in range(args.replicas)]
+
+    def step_fn(replica_idx: int, active_slots) -> None:
+        replicas[replica_idx].step()
+
+    eng = ServingEngine(num_replicas=args.replicas,
+                        slots_per_replica=args.slots,
+                        grouping=args.grouping, step_fn=step_fn)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        sess = f"hot{rng.integers(0, 3)}" if rng.random() < 0.7 \
+            else f"cold{rng.integers(0, 50)}"
+        eng.submit(Request(i, sess, arrival=float(i) * 0.25,
+                           target_tokens=int(rng.integers(4, 16))))
+    eng.run(until_done=args.requests)
+    m = eng.metrics()
+    total_model_tokens = sum(r.tokens_generated for r in replicas)
+    print(f"served {len(eng.done)} requests | p50={m.latency_p50:.1f} "
+          f"p99={m.latency_p99:.1f} ticks | {m.throughput_tokens:.2f} "
+          f"tok/tick | session replication {m.session_replicas_norm:.2f}x | "
+          f"model decode calls produced {total_model_tokens} tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch × shape).
+
+``input_specs(cfg, shape)`` returns stand-ins for every model input — weak-
+type-correct, shardable, no device allocation — and matching PartitionSpecs.
+``train_step`` / ``prefill_step`` / ``serve_step`` are the functions the
+dry-run lowers and the real launchers run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import transformer as T
+from ..models.sharding import ShardingRules, param_specs, set_rules
+from ..optim.adamw import AdamWConfig, OptState, adamw_update, init_opt_state
+
+__all__ = ["input_specs", "make_train_step", "make_prefill_step",
+           "make_serve_step", "abstract_train_state", "abstract_cache",
+           "batch_pspecs", "cache_pspecs"]
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step inputs (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    f32, i32, bf16 = jnp.float32, jnp.int32, jnp.dtype(cfg.dtype)
+    sd = jax.ShapeDtypeStruct
+
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        if cfg.embeds_input:
+            batch["embeds"] = sd((b, s, cfg.d_model), bf16)
+        else:
+            batch["tokens"] = sd((b, s), i32)
+        if shape.kind == "train":
+            batch["labels"] = sd((b, s), i32)
+        if cfg.rope_kind == "mrope":
+            batch["positions"] = sd((3, b, s), i32)
+        if cfg.encoder_layers:
+            batch["enc_embeds"] = sd((b, cfg.encoder_seq, cfg.d_model), bf16)
+        return batch
+
+    # decode: one new token against a seq_len cache
+    batch = {"tokens": sd((b, 1), i32)}
+    if cfg.embeds_input:
+        batch["embeds"] = sd((b, 1, cfg.d_model), bf16)
+    return batch
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig,
+                 rules: ShardingRules) -> Dict[str, Any]:
+    dp = rules.dp
+    b = shape.global_batch
+    # batch too small to shard (long_500k) -> replicate
+    dpb = dp if b >= 32 else None
+
+    specs: Dict[str, Any] = {}
+    for k in ("tokens", "labels"):
+        specs[k] = P(dpb, None)
+    specs["embeds"] = P(dpb, None, None)
+    specs["positions"] = P(None, dpb, None)
+    specs["enc_embeds"] = P(dpb, None, None)
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, cache, shape: ShapeConfig,
+                 rules: ShardingRules):
+    """PartitionSpecs for the decode cache tree.
+
+    Batch shards over dp; long KV seq dims shard over tp when the batch is
+    too small to fill dp (long_500k) we replicate (caches there are O(state),
+    not O(seq), for the sub-quadratic archs).
+    """
+    dp, tp = rules.dp, rules.tp
+    b = shape.global_batch
+    use_dp = b >= 32
+
+    def spec_for(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        nd = leaf.ndim
+        if name.endswith("pos") or nd == 0:
+            return P()
+        if not use_dp:
+            return P(*([None] * nd))
+        # find the batch dim: stacked caches are (L, B, S, ...) or
+        # (G, P, B, S, ...) / states (L, B, ...); prefix caches (B, S, ...)
+        if nd >= 4 and leaf.shape[-2] == cfg.num_kv_heads:
+            # attention kv cache (..., B, S, Hkv, dh)
+            axes = [None] * nd
+            axes[-4] = dp
+            if leaf.shape[-3] >= 4096:
+                axes[-3] = tp  # long cache: shard seq over model
+            return P(*axes)
+        if nd >= 3 and leaf.shape[-1] in (
+            getattr(cfg.mla, "kv_lora_rank", -1) if cfg.mla else -1,
+            getattr(cfg.mla, "qk_rope_dim", -1) if cfg.mla else -1,
+        ):
+            # MLA latent cache (..., B, S, R)
+            axes = [None] * nd
+            axes[-3] = dp
+            if leaf.shape[-2] >= 4096:
+                axes[-2] = tp
+            return P(*axes)
+        # state caches (L, B, ...) or (B, ...): shard the batch dim
+        axes = [None] * nd
+        for i, d in enumerate(leaf.shape):
+            if d == shape.global_batch:
+                axes[i] = dp
+                break
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+# ---------------------------------------------------------------------------
+# Abstract state builders (dry-run: eval_shape only)
+# ---------------------------------------------------------------------------
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k), key)
+    opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params)
+    hot = T.init_hotness_state(cfg)
+    hot = jax.eval_shape(lambda: hot) if hot is not None else None
+    return params, opt, hot
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def _split_micro(batch, n: int):
+    """Reshape every batch leaf to (n, B/n, ...); positions split on axis 1."""
+    def split(k, x):
+        axis = 1 if k == "positions" else 0
+        b = x.shape[axis]
+        assert b % n == 0, f"batch {b} not divisible by grad_accum {n}"
+        new_shape = x.shape[:axis] + (n, b // n) + x.shape[axis + 1:]
+        x = x.reshape(new_shape)
+        return jnp.moveaxis(x, axis, 0)
+
+    return {k: split(k, v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    rules: Optional[ShardingRules]):
+    """train_step with optional gradient accumulation (cfg.grad_accum).
+
+    With accumulation, the FISH hotness epoch becomes the *microbatch*
+    (Alg. 1's epoch = a bounded tuple count — the decay cadence follows it).
+    """
+    n_micro = max(cfg.grad_accum, 1)
+
+    def train_step(params, opt_state: OptState, hotness, batch):
+        with set_rules(rules):
+            def loss_fn(p, mb, hot):
+                loss, out = T.forward_train(p, mb, cfg, hot)
+                return loss, out
+
+            def constrain_grads(g):
+                # pin grads to the param shardings so ZeRO weight-gather
+                # backward lowers to reduce-scatter, not all-reduce (§Perf)
+                if rules is None:
+                    return g
+                gspecs = param_specs(g, rules)
+                return jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, g, gspecs)
+
+            if n_micro == 1:
+                (loss, out), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch, hotness)
+                grads = constrain_grads(grads)
+                hot_new = out["new_hotness"]
+                ce, aux = out["ce_loss"], out["aux_loss"]
+            else:
+                micro = _split_micro(batch, n_micro)
+
+                def body(carry, mb):
+                    gsum, hot, loss_s, ce_s, aux_s = carry
+                    (l, out), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb, hot)
+                    g = constrain_grads(g)
+                    gsum = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(a.dtype), gsum, g)
+                    hot = (out["new_hotness"] if hot is not None else None)
+                    return (gsum, hot, loss_s + l, ce_s + out["ce_loss"],
+                            aux_s + out["aux_loss"]), None
+
+                gsum0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, p.dtype), params)
+                z = jnp.float32(0.0)
+                (gsum, hot_new, loss, ce, aux), _ = jax.lax.scan(
+                    body, (gsum0, hotness, z, z, z), micro)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g / n_micro, gsum)
+                loss, ce, aux = loss / n_micro, ce / n_micro, aux / n_micro
+
+            new_params, new_opt, om = adamw_update(grads, opt_state, params,
+                                                   opt_cfg)
+        metrics = {"loss": loss, "ce_loss": ce, "aux_loss": aux, **om}
+        return new_params, new_opt, hot_new, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: Optional[ShardingRules]):
+    def prefill_step(params, batch):
+        with set_rules(rules):
+            return T.prefill(params, batch, cfg)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, rules: Optional[ShardingRules]):
+    def serve_step(params, cache, batch):
+        with set_rules(rules):
+            logits, new_cache = T.decode_step(
+                params, cache, batch["tokens"], cfg,
+                embeds=batch.get("embeds"),
+            )
+        return logits, new_cache
+
+    return serve_step

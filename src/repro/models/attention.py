@@ -1,0 +1,192 @@
+"""Attention: blockwise (flash-style) training/prefill path, O(S) decode path,
+GQA/MQA, sliding windows, soft-capping, and DeepSeek MLA.
+
+The training path never materialises the (Sq, Skv) score matrix: it scans over
+KV blocks with an online softmax (running max / denominator), which is what
+keeps the 32k-prefill dry-run inside HBM.  All score math is float32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import soft_cap
+
+__all__ = ["flash_attention", "decode_attention", "mla_expand", "mla_decode_scores"]
+
+_NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    """(Sq, Bk) boolean mask from absolute positions."""
+    rel = q_pos[:, None] - k_pos[None, :]
+    mask = jnp.ones(rel.shape, bool)
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    return mask
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    block_k: int = 1024,
+    remat_blocks: bool = True,
+) -> jnp.ndarray:
+    """Blockwise attention with online softmax.
+
+    q: (B, Sq, Hq, dh); k, v: (B, Skv, Hkv, dh) with Hq % Hkv == 0.
+    Returns (B, Sq, Hq, dh) in q.dtype.
+
+    ``remat_blocks`` checkpoints each KV block so the backward pass
+    recomputes per-block scores instead of storing the O(Sq·Skv) attention
+    matrix (flash-attention backward semantics).
+    """
+    b, sq, hq, dh = q.shape
+    skv_orig, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # v head dim may differ (MLA)
+    rep = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    block_k = min(block_k, skv_orig)
+    pad_kv = -skv_orig % block_k
+    if pad_kv:  # pad kv to a block multiple; padded positions are masked
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    skv = k.shape[1]
+    n_blocks = skv // block_k
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, rep, dh)
+    kf = k.astype(jnp.float32).reshape(b, n_blocks, block_k, hkv, dh)
+    vf = v.astype(jnp.float32).reshape(b, n_blocks, block_k, hkv, dv)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry
+        k_blk, v_blk, blk_idx = inp  # (B, Bk, Hkv, dh) ×2, scalar
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, k_blk)  # (B,Hkv,rep,Sq,Bk)
+        if softcap is not None:
+            s = soft_cap(s, softcap)
+        k_pos = blk_idx * block_k + jnp.arange(block_k)
+        mask = _block_mask(q_pos, k_pos, causal=causal, window=window)
+        mask &= (k_pos < skv_orig)[None, :]
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_run, m_blk)
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(m_new <= _NEG_INF, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.exp(jnp.where(m_run <= _NEG_INF, _NEG_INF, m_run - m_safe))
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhrqk,bkhd->bhrqd", p, v_blk)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, rep, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, rep, sq, dv), jnp.float32)
+    ks = jnp.moveaxis(kf, 1, 0)  # (n_blocks, B, Bk, Hkv, dh)
+    vs = jnp.moveaxis(vf, 1, 0)
+    if remat_blocks:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (ks, vs, jnp.arange(n_blocks))
+    )
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]  # (B,Hkv,rep,Sq,dv)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cur_pos: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """One-token attention against a (possibly partially filled) KV cache.
+
+    q: (B, 1, Hq, dh); caches: (B, S, Hkv, dh); cur_pos: scalar int — the
+    position of the new token (cache entries at positions <= cur_pos are
+    valid).
+    """
+    b, _, hq, dh = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, rep, dh)
+    scores = jnp.einsum("bhrd,bkhd->bhrk", qf, k_cache.astype(jnp.float32))
+    if softcap is not None:
+        scores = soft_cap(scores, softcap)
+    k_pos = jnp.arange(s)
+    valid = k_pos <= cur_pos
+    if window is not None:
+        valid &= (cur_pos - k_pos) < window
+    scores = jnp.where(valid[None, None, None], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrk,bkhd->bhrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V2 Multi-head Latent Attention
+# ---------------------------------------------------------------------------
+
+
+def mla_expand(c_kv: jnp.ndarray, w_uk: jnp.ndarray, w_uv: jnp.ndarray):
+    """Expand the compressed KV latent into per-head K(nope)/V.
+
+    c_kv: (B, S, R);  w_uk: (R, H, dn);  w_uv: (R, H, dv)
+    returns k_nope (B, S, H, dn), v (B, S, H, dv)
+    """
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, w_uk)
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, w_uv)
+    return k_nope, v
+
+
+def mla_decode_scores(
+    q_nope: jnp.ndarray,  # (B, H, dn)
+    q_rope: jnp.ndarray,  # (B, H, dr)
+    ckv_cache: jnp.ndarray,  # (B, S, R)
+    krope_cache: jnp.ndarray,  # (B, S, dr)
+    w_uk: jnp.ndarray,  # (R, H, dn)
+    w_uv: jnp.ndarray,  # (R, H, dv)
+    cur_pos: jnp.ndarray,
+    *,
+    scale: float,
+) -> jnp.ndarray:
+    """Weight-absorbed MLA decode (arXiv:2405.04434 §2.1.3).
+
+    Scores are computed in the compressed space:  q_c = q_nope · W_uk  gives
+    (B, H, R); attention runs against the R-dim latent cache, and the context
+    is expanded back through W_uv.  Returns (B, 1, H, dv).
+    """
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32))
+    s_c = jnp.einsum("bhr,bsr->bhs", q_c, ckv_cache.astype(jnp.float32))
+    s_r = jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                     krope_cache.astype(jnp.float32))
+    scores = (s_c + s_r) * scale
+    valid = jnp.arange(ckv_cache.shape[1]) <= cur_pos
+    scores = jnp.where(valid[None, None], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx_c = jnp.einsum("bhs,bsr->bhr", p, ckv_cache.astype(jnp.float32))
+    ctx = jnp.einsum("bhr,rhd->bhd", ctx_c, w_uv.astype(jnp.float32))
+    return ctx[:, None].astype(q_nope.dtype)

@@ -1,0 +1,165 @@
+"""Shared model building blocks: norms, RoPE/M-RoPE, activations, inits.
+
+Everything is functional: params are plain nested dicts of arrays, and every
+function takes/returns pytrees so the whole stack works under jit / pjit /
+eval_shape (the dry-run never materialises weights).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "nonparametric_layer_norm",
+    "apply_norm",
+    "soft_cap",
+    "rope_freqs",
+    "apply_rope",
+    "apply_mrope",
+    "dense_init",
+    "embed_init",
+    "activation_fn",
+]
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6, *, plus_one: bool = False):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32) if plus_one else scale.astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def nonparametric_layer_norm(x, eps: float = 1e-5):
+    """OLMo-style LN without learnable scale/bias (arXiv:2402.00838)."""
+    return layer_norm(x, None, None, eps)
+
+
+def apply_norm(x, params, kind: str, eps: float = 1e-6):
+    """Dispatch on the config's norm kind."""
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"], eps)
+    if kind == "rmsnorm_plus_one":  # gemma convention: weight stored as (w-1)
+        return rms_norm(x, params["scale"], eps, plus_one=True)
+    if kind == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"], eps)
+    if kind == "nonparametric":
+        return nonparametric_layer_norm(x, eps)
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+def soft_cap(x, cap: Optional[float]):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)  # (head_dim/2,)
+
+
+def _rotate(x, sin, cos):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(q, k, positions, *, theta: float = 10_000.0,
+               rotary_dim: Optional[int] = None):
+    """Standard RoPE.  q/k: (B, S, H, dh); positions: (B, S) int32."""
+    dh = q.shape[-1]
+    rd = rotary_dim or dh
+    inv = rope_freqs(rd, theta)  # (rd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (B, S, rd/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+
+    def rot(x):
+        if rd == x.shape[-1]:
+            return _rotate(x.astype(jnp.float32), sin, cos).astype(x.dtype)
+        head, rest = x[..., :rd], x[..., rd:]
+        head = _rotate(head.astype(jnp.float32), sin, cos).astype(x.dtype)
+        return jnp.concatenate([head, rest], axis=-1)
+
+    return rot(q), rot(k)
+
+
+def apply_mrope(q, k, positions, sections: Sequence[int], *,
+                theta: float = 1_000_000.0):
+    """Qwen2-VL multimodal RoPE (arXiv:2409.12191).
+
+    positions: (3, B, S) — temporal/height/width position ids.  The rotary
+    spectrum is split into ``sections`` (in half-dim units, e.g. [16, 24, 24]
+    for head_dim 128) and each section takes its angle from the matching
+    position stream.
+    """
+    dh = q.shape[-1]
+    inv = rope_freqs(dh, theta)  # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (3, B, S, dh/2)
+    # pick, per frequency slot, which of the 3 position streams drives it
+    idx = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=dh // 2)
+    angles = jnp.take_along_axis(
+        angles, idx[None, None, None, :].astype(jnp.int32), axis=0
+    )[0]  # (B, S, dh/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    qr = _rotate(q.astype(jnp.float32), sin, cos).astype(q.dtype)
+    kr = _rotate(k.astype(jnp.float32), sin, cos).astype(k.dtype)
+    return qr, kr
+
+
+# ---------------------------------------------------------------------------
+# Activations / init
+# ---------------------------------------------------------------------------
+
+
+def activation_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=False),
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def dense_init(key, shape: Tuple[int, ...], in_axis: int = 0,
+               dtype=jnp.bfloat16) -> jnp.ndarray:
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,312 @@
+"""Mixture-of-Experts with FISH load balancing (the paper's technique as a
+first-class training feature).
+
+Token→expert routing *is* the paper's grouping problem: keys are the router's
+expert choices, workers are experts, and expert hotness evolves over training
+exactly like the paper's time-evolving stream keys.  The three routing modes
+mirror the paper's schemes (DESIGN.md §1.2):
+
+* ``fg``   — plain top-k with uniform per-expert capacity (Field-Grouping
+             analog: key-affine, drops whatever overflows).
+* ``pkg``  — top-k where each token's k candidates are claimed in *gate*
+             order but capacity is still uniform (power-of-k-choices analog).
+* ``fish`` — the paper's pipeline on device:
+             1. intra-epoch counting: per-step expert demand counts
+                (epoch = one optimizer step's token batch);
+             2. inter-epoch decay:   hotness ← α·hotness + counts  (Alg. 1);
+             3. CHK (Alg. 2):        per-expert capacity share follows the
+                d = E / 2^⌊log2(f_top/f_e)⌋ hierarchy, so persistently-hot
+                experts get proportionally bigger slices of the *fixed*
+                dispatch buffer (bounded memory — the paper's tradeoff);
+             4. heuristic assignment (Alg. 3): claims are ordered by
+                *inferred* fill (cumsum over the routing tensor already on
+                device — zero communication), and the FISH aux loss steers
+                the router with the decayed (recent) load rather than the
+                noisy single-batch load.
+
+Dispatch/combine use GShard-style grouped one-hot einsums (static shapes,
+GSPMD-shardable); ``dispatch_impl='scatter'`` switches to a gather/scatter
+path that removes the one-hot matmul FLOPs (a §Perf hillclimb lever).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MoEConfig
+from .common import activation_fn
+from .sharding import shard
+
+__all__ = ["init_moe_params", "moe_ffn", "fish_capacities", "init_hotness"]
+
+
+def init_hotness(num_experts: int) -> jnp.ndarray:
+    return jnp.zeros((num_experts,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# CHK: hotness -> per-expert capacity allocation (Alg. 2 analog)
+# ---------------------------------------------------------------------------
+
+
+def fish_capacities(
+    hotness: jnp.ndarray,
+    *,
+    budget: int,
+    c_max: int,
+    theta_frac: float = 0.25,
+    d_min: int = 2,
+) -> jnp.ndarray:
+    """Split a fixed dispatch budget across experts by decayed hotness.
+
+    Vectorised CHK: hot experts (f_e > θ = theta_frac/E) get a share that
+    follows d_e = E / 2^⌊log2(f_top/f_e)⌋ (clamped to [d_min, E]); non-hot
+    experts get the PKG fallback share of 2.  Capacities are clipped to the
+    static buffer depth ``c_max`` (memory bound).
+    """
+    e = hotness.shape[0]
+    total = jnp.maximum(jnp.sum(hotness), 1e-30)
+    f = hotness / total
+    f_top = jnp.maximum(jnp.max(f), 1e-30)
+    theta = theta_frac / e
+    ratio = jnp.maximum(f_top / jnp.maximum(f, 1e-30), 1.0)
+    index = jnp.clip(jnp.floor(jnp.log2(ratio)), 0, 30)
+    d = jnp.clip(e / jnp.exp2(index), d_min, e)
+    share = jnp.where(f > theta, d, float(d_min))
+    cap = jnp.floor(budget * share / jnp.maximum(jnp.sum(share), 1e-30))
+    # cold-start: with no history (Σhot == 0) fall back to the uniform split
+    uniform = jnp.full((e,), float(budget) / e)
+    cap = jnp.where(total > 1e-20, cap, uniform)
+    return jnp.clip(cap, 1.0, float(c_max)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_moe_params(key, d_model: int, moe: MoEConfig, dtype=jnp.bfloat16):
+    import math
+
+    ks = jax.random.split(key, 5)
+    e, f = moe.num_experts, moe.d_ff_expert
+    std_in = 1.0 / math.sqrt(d_model)
+    std_out = 1.0 / math.sqrt(f)
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, e), jnp.float32) * 0.02
+                   ).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d_model, f), jnp.float32)
+                   * std_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d_model, f), jnp.float32)
+                 * std_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d_model), jnp.float32)
+                   * std_out).astype(dtype),
+    }
+    if moe.shared_experts:
+        fs = f * moe.shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": (jax.random.normal(kk[0], (d_model, fs), jnp.float32)
+                       * std_in).astype(dtype),
+            "w_up": (jax.random.normal(kk[1], (d_model, fs), jnp.float32)
+                     * std_in).astype(dtype),
+            "w_down": (jax.random.normal(kk[2], (fs, d_model), jnp.float32)
+                       * (1.0 / math.sqrt(fs))).astype(dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing + capacity-bounded claim (slot-by-slot, fill inferred via cumsum)
+# ---------------------------------------------------------------------------
+
+
+def _route(
+    gates: jnp.ndarray,  # (G, T, E) f32 softmax probs
+    moe: MoEConfig,
+    capacities: jnp.ndarray,  # (E,) int32
+):
+    """Claim buffer slots for each token's top-k choices.
+
+    Returns ids (G,T,K), combine gate weights (G,T,K), keep (G,T,K) bool,
+    pos (G,T,K) int32 — position within the target expert's buffer.
+
+    The running fill is *inferred* from the routing tensor itself (exclusive
+    cumsum per expert), never communicated — the Alg. 3 idea in SPMD form.
+    """
+    g, t, e = gates.shape
+    k = moe.top_k
+    top_gates, ids = jax.lax.top_k(gates, k)  # (G,T,K)
+
+    fill = jnp.zeros((g, e), jnp.float32)
+    keeps, poss = [], []
+    for j in range(k):
+        oh = jax.nn.one_hot(ids[:, :, j], e, dtype=jnp.float32)  # (G,T,E)
+        pos_in_slot = jnp.cumsum(oh, axis=1) - oh  # exclusive, (G,T,E)
+        pos_t = jnp.sum(oh * (pos_in_slot + fill[:, None, :]), axis=-1)  # (G,T)
+        cap_t = capacities[ids[:, :, j]].astype(jnp.float32)
+        keep_j = pos_t < cap_t
+        fill = fill + jnp.sum(oh * keep_j[..., None], axis=1)
+        keeps.append(keep_j)
+        poss.append(pos_t.astype(jnp.int32))
+    keep = jnp.stack(keeps, axis=-1)  # (G,T,K)
+    pos = jnp.stack(poss, axis=-1)
+
+    # renormalise gates over surviving slots
+    kept_gate = top_gates * keep.astype(top_gates.dtype)
+    denom = jnp.maximum(jnp.sum(kept_gate, axis=-1, keepdims=True), 1e-9)
+    combine_gates = kept_gate / denom
+    return ids, combine_gates, keep, pos
+
+
+def _dispatch_einsum(x, ids, gates, keep, pos, e: int, c: int):
+    """GShard one-hot dispatch/combine tensors.
+
+    x: (G, T, D).  Returns xin (G, E, C, D) and a combine closure.
+    """
+    oh_e = jax.nn.one_hot(ids, e, dtype=x.dtype)  # (G,T,K,E)
+    oh_c = jax.nn.one_hot(pos, c, dtype=x.dtype)  # (G,T,K,C)
+    keep_f = keep.astype(x.dtype)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", oh_e * keep_f[..., None], oh_c)
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch, x)
+
+    def combine(yout):  # (G,E,C,D) -> (G,T,D)
+        comb = jnp.einsum(
+            "gtke,gtkc->gtec", oh_e * (keep_f * gates.astype(x.dtype))[..., None],
+            oh_c,
+        )
+        return jnp.einsum("gtec,gecd->gtd", comb, yout)
+
+    return xin, combine
+
+
+def _dispatch_scatter(x, ids, gates, keep, pos, e: int, c: int):
+    """Gather/scatter dispatch: no one-hot matmul FLOPs (hillclimb lever)."""
+    g, t, d = x.shape
+    k = ids.shape[-1]
+    flat_slot = ids * c + pos  # (G,T,K) buffer slot per (token, choice)
+    flat_slot = jnp.where(keep, flat_slot, e * c)  # OOB -> dropped
+    src = jnp.broadcast_to(jnp.arange(t)[None, :, None], (g, t, k))
+
+    def scat(xg, slots, srcs):
+        buf = jnp.zeros((e * c, d), x.dtype)
+        return buf.at[slots.reshape(-1)].add(
+            xg[srcs.reshape(-1)], mode="drop"
+        )
+
+    xin = jax.vmap(scat)(x, flat_slot, src).reshape(g, e, c, d)
+
+    def combine(yout):  # (G,E,C,D) -> (G,T,D)
+        yflat = yout.reshape(g, e * c, d)
+
+        def gath(yg, slots):
+            return jnp.take(yg, slots.reshape(-1), axis=0, mode="fill",
+                            fill_value=0).reshape(t, k, d)
+
+        per_choice = jax.vmap(gath)(yflat, flat_slot)  # (G,T,K,D)
+        w = (gates * keep.astype(gates.dtype)).astype(x.dtype)
+        return jnp.einsum("gtk,gtkd->gtd", w, per_choice)
+
+    return xin, combine
+
+
+# ---------------------------------------------------------------------------
+# The MoE layer
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn(
+    params: Dict,
+    x: jnp.ndarray,  # (T, D) flattened tokens
+    moe: MoEConfig,
+    hotness: jnp.ndarray,  # (E,) decayed demand counters (FISH state)
+    *,
+    dispatch_impl: str = None,
+    hot_headroom: float = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, Dict]:
+    """Returns (y (T,D), new_hotness, aux_loss, metrics)."""
+    dispatch_impl = dispatch_impl or moe.dispatch_impl
+    hot_headroom = hot_headroom or moe.hot_headroom
+    t, d = x.shape
+    e, k = moe.num_experts, moe.top_k
+    act = activation_fn("silu")
+
+    tg = min(moe.tokens_per_group, t)
+    assert t % tg == 0, f"tokens {t} not divisible by group {tg}"
+    g = t // tg
+    budget = int(tg * k * moe.capacity_factor)
+    c_avg = max(budget // e, 1)
+    c_max = max(int(c_avg * hot_headroom), 4)
+    c_max = -(-c_max // 4) * 4  # round up to a multiple of 4
+
+    xg = x.reshape(g, tg, d)
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), params["router"]
+    )
+    gates = jax.nn.softmax(logits, axis=-1)
+
+    # --- FISH state: intra-epoch count + inter-epoch decay (Alg. 1) ---------
+    topk_gates, topk_ids = jax.lax.top_k(gates, k)
+    counts = jnp.sum(
+        jax.nn.one_hot(topk_ids, e, dtype=jnp.float32), axis=(0, 1, 2)
+    )  # (E,) demand this step
+    new_hotness = moe.fish_alpha * hotness + counts
+
+    if moe.routing == "fish":
+        capacities = fish_capacities(
+            hotness, budget=budget, c_max=c_max,
+            theta_frac=moe.fish_theta_frac,
+        )
+        # time-aware balance loss: steer router with *recent* load, not the
+        # single-batch estimate
+        recent = new_hotness / jnp.maximum(jnp.sum(new_hotness), 1e-30)
+        mean_gate = jnp.mean(gates, axis=(0, 1))
+        aux = jnp.sum(recent * mean_gate) * e
+    elif moe.routing in ("fg", "pkg"):
+        capacities = jnp.full((e,), min(c_avg, c_max), jnp.int32)
+        frac = counts / jnp.maximum(jnp.sum(counts), 1e-30)
+        mean_gate = jnp.mean(gates, axis=(0, 1))
+        aux = jnp.sum(frac * mean_gate) * e
+    else:
+        raise ValueError(f"unknown moe routing {moe.routing!r}")
+
+    ids, cgates, keep, pos = _route(gates, moe, capacities)
+    if moe.routing == "fg":
+        # FG analog: only the argmax choice is used (hard key-affine routing)
+        first = jnp.arange(k)[None, None, :] == 0
+        keep = keep & first
+        cgates = jnp.where(keep, 1.0, 0.0).astype(cgates.dtype)
+
+    dispatch = _dispatch_scatter if dispatch_impl == "scatter" else _dispatch_einsum
+    xin, combine = dispatch(xg, ids, cgates, keep, pos, e, c_max)
+
+    # --- expert FFN (E batched einsum; E shards over "model") ---------------
+    # groups stay data-parallel, experts shard over tp (EP): the reshard of
+    # xin from (g-sharded, e-replicated) to (g-sharded, e-sharded) is the
+    # GShard-style dispatch all-to-all, inserted by GSPMD at this constraint.
+    xin = shard(xin, "dp", "tp", None, None)
+    h = act(jnp.einsum("gecd,edf->gecf", xin, params["w_gate"])) * jnp.einsum(
+        "gecd,edf->gecf", xin, params["w_up"]
+    )
+    h = shard(h, "dp", "tp", None, None)
+    yout = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    yout = shard(yout, "dp", "tp", None, None)
+    y = combine(yout).reshape(t, d)
+
+    if moe.shared_experts:
+        sp = params["shared"]
+        hs = act(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        y = y + hs @ sp["w_down"]
+
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    load = counts / jnp.maximum(jnp.sum(counts), 1e-30)
+    metrics = {
+        "moe_drop_frac": dropped,
+        "moe_load_max_over_mean": jnp.max(load) * e,
+        "moe_aux": aux,
+    }
+    return y.astype(x.dtype), new_hotness, aux * moe.router_aux_weight, metrics

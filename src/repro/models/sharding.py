@@ -1,0 +1,180 @@
+"""Partitioning rules: param-tree PartitionSpecs + activation constraints.
+
+The production mesh (launch/mesh.py) has axes ``("pod", "data", "model")``
+(multi-pod) or ``("data", "model")`` (single pod).  Logical roles:
+
+* **dp**   = ("pod", "data") — batch / token parallelism (+ ZeRO-1: optimizer
+  state and the non-TP weight dim shard here when ``cfg.zero_sharding``),
+* **tp**   = "model" — attention heads / FFN hidden / vocab / experts.
+
+Activation constraints are applied through :func:`shard`, which no-ops when
+no rules are installed (CPU smoke tests run without a mesh).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ShardingRules", "set_rules", "current_rules", "shard", "param_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    dp: Tuple[str, ...]          # batch axes, e.g. ("pod", "data")
+    tp: str = "model"
+    tp_size: int = 16            # size of the tp axis (attention-mode choice)
+    zero: bool = True            # shard the non-TP weight dim over dp
+
+    @property
+    def fsdp(self):
+        return self.dp if self.zero else None
+
+    def heads_shardable(self, num_heads: int) -> bool:
+        """True -> head-parallel attention; False -> sequence-parallel."""
+        return num_heads % self.tp_size == 0
+
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def set_rules(rules: Optional[ShardingRules]):
+    _ACTIVE.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def shard_seq(x):
+    """Constrain a (B, S, D) activation to (dp, tp, None) when the sequence
+    divides the tp axis — placed on sub-block *outputs* so XLA lowers the
+    partial-sum + reshard as one reduce-scatter instead of all-reduce+slice
+    (sequence-parallel Megatron pattern).  No-op otherwise."""
+    rules = current_rules()
+    if rules is None or x.ndim != 3 or x.shape[1] % max(rules.tp_size, 1):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(rules.dp, rules.tp, None))
+
+
+def shard(x, *roles: Optional[str]):
+    """Constrain activation sharding by role per axis.
+
+    roles: one of "dp", "tp", None per array dim, e.g.
+    ``shard(h, "dp", None, "tp")`` for (batch, seq, heads-sharded).
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = []
+    for r in roles:
+        if r == "dp":
+            spec.append(rules.dp)
+        elif r == "tp":
+            spec.append(rules.tp)
+        elif r is None:
+            spec.append(None)
+        else:
+            raise ValueError(f"unknown sharding role {r!r}")
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (path-name rules)
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(path: str, ndim: int, rules: ShardingRules) -> P:
+    fsdp, tp = rules.fsdp, rules.tp
+    # stacked-layer leading dim (from vmapped init / scan) is never sharded;
+    # detect via ndim below per rule.
+
+    def pick(*dims):
+        """dims for the *unstacked* leaf; prepend None for the stack dim."""
+        stack = ndim - len(dims)
+        return P(*([None] * stack + list(dims)))
+
+    # --- embeddings / head ---------------------------------------------------
+    if path.endswith("embed"):
+        return P(tp, fsdp)  # (V, D): vocab over tp (Megatron-style)
+    if path.endswith("head"):
+        return P(fsdp, tp)  # (D, V)
+    if path.endswith("pos_embed"):
+        return P(None, fsdp)
+
+    # --- attention -----------------------------------------------------------
+    if path.endswith(("wq", "wk", "wv")):
+        return pick(fsdp, tp)
+    if path.endswith("wo"):
+        return pick(tp, fsdp)
+    if path.endswith(("bq", "bk", "bv")):
+        return pick(tp)
+    if path.endswith("bo"):
+        return pick(fsdp)
+    # MLA
+    if path.endswith("w_q_mla"):
+        return pick(fsdp, tp)       # (D, H*(dn+dr))
+    if path.endswith("w_dkv"):
+        return pick(fsdp, None)     # (D, R+dr) latent stays replicated
+    if path.endswith(("w_uk", "w_uv")):
+        return pick(None, tp, None)  # (R, H, d*): heads over tp
+    if path.endswith("w_o_mla"):
+        return pick(tp, fsdp)
+
+    # --- dense mlp / moe experts ------------------------------------------------
+    moe_expert = "moe" in path and "shared" not in path
+    if path.endswith(("w_gate", "w_up")):
+        if moe_expert:                      # (E, D, F)
+            return pick(tp, None, fsdp)
+        return pick(fsdp, tp)
+    if path.endswith("w_down"):
+        if moe_expert:                      # (E, F, D)
+            return pick(tp, fsdp, None)
+        return pick(tp, fsdp)
+    if path.endswith(("b_in",)):
+        return pick(tp)
+    if path.endswith(("b_out",)):
+        return pick(fsdp)
+    if path.endswith("router"):
+        return pick(None, None)
+
+    # --- mamba2 / rglru --------------------------------------------------------
+    if path.endswith("in_proj"):
+        return pick(fsdp, None)
+    if path.endswith("out_proj"):
+        return pick(None, fsdp)
+    if path.endswith(("w_x",)):
+        return pick(fsdp, tp)
+    if path.endswith(("w_input_gate", "w_rec_gate")):
+        return pick(tp, None, None)  # block-diag gates: blocks over tp
+    if path.endswith("w_out"):
+        return pick(tp, fsdp)
+
+    # everything else (norms, convs, biases, scalars): replicated
+    return P(*([None] * ndim))
+
+
+def param_specs(params, rules: Optional[ShardingRules]):
+    """Pytree of PartitionSpec matching ``params``."""
+    if rules is None:
+        return jax.tree_util.tree_map(lambda _: P(), params)
+
+    def spec(path, leaf):
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        s = _leaf_spec(name, leaf.ndim, rules)
+        # sanity: spec length must equal rank
+        if len(s) < leaf.ndim:
+            s = P(*(list(s) + [None] * (leaf.ndim - len(s))))
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec, params)

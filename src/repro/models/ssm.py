@@ -1,0 +1,290 @@
+"""Sequence-mixing state-space blocks: Mamba-2 (SSD) and RG-LRU (Griffin).
+
+Both expose a train/prefill path (full sequence) and an O(1)-state decode
+step — these are the archs that make the ``long_500k`` shape feasible.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import RGLRUConfig, SSMConfig
+from ..kernels import ops as kops
+from .common import rms_norm
+from .sharding import shard
+
+__all__ = [
+    "init_mamba2_params",
+    "mamba2_block",
+    "mamba2_decode",
+    "init_mamba2_state",
+    "init_rglru_params",
+    "rglru_block",
+    "rglru_decode",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def _mamba2_dims(d_model: int, ssm: SSMConfig):
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.head_dim
+    conv_dim = d_inner + 2 * ssm.n_groups * ssm.d_state
+    d_in_proj = 2 * d_inner + 2 * ssm.n_groups * ssm.d_state + n_heads
+    return d_inner, n_heads, conv_dim, d_in_proj
+
+
+def init_mamba2_params(key, d_model: int, ssm: SSMConfig, dtype=jnp.bfloat16):
+    d_inner, n_heads, conv_dim, d_in_proj = _mamba2_dims(d_model, ssm)
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d_model)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d_model, d_in_proj), jnp.float32)
+                    * std).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (ssm.d_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_inner, d_model), jnp.float32)
+                     * (1.0 / math.sqrt(d_inner))).astype(dtype),
+    }
+
+
+def _mamba2_preproc(params, x, ssm: SSMConfig):
+    """Shared in_proj + split for both train and decode paths."""
+    d_model = x.shape[-1]
+    d_inner, n_heads, conv_dim, _ = _mamba2_dims(d_model, ssm)
+    gn = ssm.n_groups * ssm.d_state
+    proj = x @ params["in_proj"]  # (..., d_in_proj)
+    if proj.ndim == 3:
+        proj = shard(proj, "dp", None, "tp")
+    z, xbc, dt = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)
+    return z, xbc, dt, d_inner, n_heads
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv1d.  xbc: (B, S, C); conv_w: (K, C)."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :]
+        for i in range(k)
+    )
+    return jax.nn.silu(out + conv_b)
+
+
+def mamba2_block(params, x, ssm: SSMConfig, impl: str = None):
+    """Full-sequence Mamba-2 mixer.  x: (B, S, D) -> (B, S, D)."""
+    b, s, d_model = x.shape
+    z, xbc, dt, d_inner, n_heads = _mamba2_preproc(params, x, ssm)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    gn = ssm.n_groups * ssm.d_state
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["a_log"])  # (H,) negative decay rate
+    log_decay = a * dt  # (B,S,H)
+
+    xh = xs.reshape(b, s, n_heads, ssm.head_dim)
+    xh = shard(xh, "dp", None, "tp", None)
+    x_scaled = xh.astype(jnp.float32) * dt[..., None]
+    bm = bmat.reshape(b, s, ssm.n_groups, ssm.d_state)
+    cm = cmat.reshape(b, s, ssm.n_groups, ssm.d_state)
+
+    y, _ = kops.ssd_scan(x_scaled, log_decay, bm, cm, chunk=ssm.chunk,
+                         impl=impl)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), params["norm_scale"])
+    return (y.astype(x.dtype) @ params["out_proj"]).astype(x.dtype)
+
+
+def init_mamba2_state(d_model: int, ssm: SSMConfig, batch: int,
+                      dtype=jnp.float32) -> Dict:
+    d_inner, n_heads, conv_dim, _ = _mamba2_dims(d_model, ssm)
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, ssm.d_state, ssm.head_dim), dtype),
+    }
+
+
+def mamba2_decode(params, x, state: Dict, ssm: SSMConfig):
+    """Single-token recurrent step.  x: (B, 1, D) -> (B, 1, D), new state."""
+    b, _, d_model = x.shape
+    z, xbc, dt, d_inner, n_heads = _mamba2_preproc(params, x[:, 0], ssm)
+    # conv over the window [state.conv | xbc]
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)
+    conv_out = jnp.sum(window * params["conv_w"][None], axis=1) + params["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+
+    gn = ssm.n_groups * ssm.d_state
+    xs, bvec, cvec = jnp.split(xbc_t, [d_inner, d_inner + gn], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(a * dt)  # (B,H)
+
+    xh = xs.reshape(b, n_heads, ssm.head_dim).astype(jnp.float32)
+    hpg = n_heads // ssm.n_groups
+    bh = jnp.repeat(bvec.reshape(b, ssm.n_groups, ssm.d_state), hpg, axis=1)
+    ch = jnp.repeat(cvec.reshape(b, ssm.n_groups, ssm.d_state), hpg, axis=1)
+
+    new_ssm = state["ssm"] * decay[..., None, None] + (
+        bh[..., :, None] * (xh * dt[..., None])[..., None, :]
+    )  # (B,H,N,P)
+    y = jnp.einsum("bhn,bhnp->bhp", ch.astype(jnp.float32), new_ssm)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), params["norm_scale"])
+    out = (y.astype(x.dtype) @ params["out_proj"])[:, None, :]
+    return out.astype(x.dtype), {"conv": new_conv, "ssm": new_ssm}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def init_rglru_params(key, d_model: int, rg: RGLRUConfig, dtype=jnp.bfloat16):
+    width = rg.lru_width or d_model
+    nb = rg.gate_blocks
+    wb = width // nb  # block-diagonal gates (as in RecurrentGemma)
+    ks = jax.random.split(key, 6)
+    std = 1.0 / math.sqrt(d_model)
+    stdw = 1.0 / math.sqrt(width)
+    # Λ init so that a^c ∈ (0.9, 0.999) roughly (griffin appendix)
+    lam = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, width)) / _RGLRU_C))
+    return {
+        "w_x": (jax.random.normal(ks[0], (d_model, width), jnp.float32) * std
+                ).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (d_model, width), jnp.float32)
+                   * std).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (rg.conv_width, width), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_input_gate": (jax.random.normal(ks[3], (nb, wb, wb), jnp.float32)
+                         * (1.0 / math.sqrt(wb))).astype(dtype),
+        "w_rec_gate": (jax.random.normal(ks[4], (nb, wb, wb), jnp.float32)
+                       * (1.0 / math.sqrt(wb))).astype(dtype),
+        "lambda": lam.astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (width, d_model), jnp.float32)
+                  * stdw).astype(dtype),
+    }
+
+
+def _block_diag_apply(xf, w):
+    """xf: (..., W); w: (NB, WB, WB) block-diagonal linear."""
+    nb, wb = w.shape[0], w.shape[1]
+    xb = xf.reshape(xf.shape[:-1] + (nb, wb))
+    out = jnp.einsum("...nw,nwv->...nv", xb, w.astype(jnp.float32))
+    return out.reshape(xf.shape)
+
+
+def _rglru_gates(params, xc):
+    """Input/recurrence gates + log decay.  xc: (..., W) conv output."""
+    xf = xc.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(_block_diag_apply(xf, params["w_input_gate"]))
+    r_gate = jax.nn.sigmoid(_block_diag_apply(xf, params["w_rec_gate"]))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lambda"]) * r_gate
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    b = beta * (i_gate * xf)
+    return a, b
+
+
+def _lru_scan(a, b, chunks: int = 16):
+    """Blocked linear scan h_t = a_t h_{t-1} + b_t.
+
+    Chunk-local associative scans (fully local when the sequence is sharded
+    into ``chunks`` pieces over tp) + one tiny sequential combine over the
+    (B, chunks, W) chunk carries — replaces the global associative scan whose
+    log-depth butterflies forced GSPMD to all-gather the full f32 (B, S, W)
+    activations (§Perf, recurrentgemma hillclimb).
+    """
+    bsz, s, w = a.shape
+    if s % chunks or s < 2 * chunks:
+        def comb0(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        _, h = jax.lax.associative_scan(comb0, (a, b), axis=1)
+        return h
+    n, l = chunks, s // chunks
+    ac = a.reshape(bsz, n, l, w)
+    bc = b.reshape(bsz, n, l, w)
+
+    def comb(lft, rgt):
+        al, bl = lft
+        ar, br = rgt
+        return al * ar, ar * bl + br
+
+    a_loc, h_loc = jax.lax.associative_scan(comb, (ac, bc), axis=2)
+    a_last, h_last = a_loc[:, :, -1], h_loc[:, :, -1]  # (B, n, W)
+
+    def step(carry, xs):
+        ai, hi = xs
+        return ai * carry + hi, carry  # emit carry *into* this chunk
+
+    _, carry_in = jax.lax.scan(
+        step, jnp.zeros_like(a_last[:, 0]),
+        (jnp.moveaxis(a_last, 1, 0), jnp.moveaxis(h_last, 1, 0)))
+    carry_in = jnp.moveaxis(carry_in, 0, 1)  # (B, n, W)
+    h = h_loc + a_loc * carry_in[:, :, None, :]
+    return h.reshape(bsz, s, w)
+
+
+def rglru_block(params, x, rg: RGLRUConfig):
+    """Full-sequence Griffin recurrent block.  x: (B, S, D)."""
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    gate = shard(gate, "dp", "tp", None)   # stay sequence-sharded
+    xr = shard(x @ params["w_x"], "dp", "tp", None)
+    xc = _rglru_conv(xr, params)
+    a, b = _rglru_gates(params, xc)
+    h = _lru_scan(a, b)
+    y = h.astype(x.dtype) * gate
+    return (y @ params["w_out"]).astype(x.dtype)
+
+
+def _rglru_conv(xr, params):
+    k = params["conv_w"].shape[0]
+    pad = jnp.pad(xr, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xr.shape[1], :] * params["conv_w"][i][None, None, :]
+        for i in range(k)
+    )
+    return out + params["conv_b"]
+
+
+def init_rglru_state(d_model: int, rg: RGLRUConfig, batch: int) -> Dict:
+    width = rg.lru_width or d_model
+    return {
+        "conv": jnp.zeros((batch, rg.conv_width - 1, width), jnp.float32),
+        "h": jnp.zeros((batch, width), jnp.float32),
+    }
+
+
+def rglru_decode(params, x, state: Dict, rg: RGLRUConfig):
+    """Single-token step.  x: (B, 1, D)."""
+    gate = jax.nn.gelu(x[:, 0] @ params["w_gate"])
+    xr = x[:, 0] @ params["w_x"]
+    window = jnp.concatenate([state["conv"], xr[:, None, :].astype(jnp.float32)],
+                             axis=1)
+    xc = jnp.sum(window * params["conv_w"][None].astype(jnp.float32), axis=1)
+    xc = xc + params["conv_b"].astype(jnp.float32)
+    a, b = _rglru_gates(params, xc)
+    h = a * state["h"] + b
+    y = h.astype(x.dtype) * gate
+    out = (y @ params["w_out"])[:, None, :]
+    return out.astype(x.dtype), {"conv": window[:, 1:, :], "h": h}

@@ -1,0 +1,1162 @@
+"""Model assembly for all assigned architectures.
+
+One config-driven stack covers: dense GQA/MQA decoders (qwen1.5, starcoder2,
+olmo, gemma2, qwen2-vl), MoE decoders (kimi-k2, deepseek-v2-lite incl. MLA),
+attention-free Mamba-2, the Griffin hybrid (recurrentgemma), and the Whisper
+encoder-decoder.  Three entry points per model:
+
+* :func:`forward_train`  — full-sequence loss (+ MoE aux, FISH hotness carry)
+* :func:`prefill`        — full-sequence pass that also builds the decode cache
+* :func:`decode_step`    — one token against the cache (the ``serve_step``)
+
+Layers are ``lax.scan``-stacked (param leaves lead with the layer axis) with
+optional ``jax.checkpoint`` remat; heterogeneous stacks (gemma2 local/global
+alternation, griffin's rec-rec-attn pattern, MoE first-dense prefix) are
+handled by pattern-grouped scans so every attention mask stays static.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import ssm as ssm_mod
+from .attention import (decode_attention, flash_attention, mla_decode_scores,
+                        mla_expand)
+from .common import (apply_mrope, apply_norm, apply_rope, soft_cap)
+from .moe import init_hotness, init_moe_params, moe_ffn
+from .sharding import current_rules, shard, shard_seq
+
+__all__ = [
+    "init_params",
+    "init_hotness_state",
+    "forward_train",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "num_params",
+]
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab rows padded to a multiple of 128 (Megatron-style) so the
+    vocab dim shards evenly over tp; pad logits are masked to -inf."""
+    return -(-cfg.vocab_size // 128) * 128
+
+
+# ===========================================================================
+# Parameter init
+# ===========================================================================
+
+
+def _norm_params(cfg: ModelConfig, dim: int, dtype):
+    if cfg.norm == "nonparametric":
+        return {}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    if cfg.norm == "rmsnorm_plus_one":
+        return {"scale": jnp.zeros((dim,), dtype)}
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def _norm_apply(cfg: ModelConfig, p, x):
+    if cfg.norm == "nonparametric":
+        return apply_norm(x, None, "nonparametric", cfg.norm_eps)
+    return apply_norm(x, p, cfg.norm, cfg.norm_eps)
+
+
+def _init_attn(key, cfg: ModelConfig, dtype):
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, hq * dh), jnp.float32) * std).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, hkv * dh), jnp.float32) * std).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, hkv * dh), jnp.float32) * std).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (hq * dh, d), jnp.float32)
+               * (1.0 / math.sqrt(hq * dh))).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p.update(
+            bq=jnp.zeros((hq * dh,), dtype),
+            bk=jnp.zeros((hkv * dh,), dtype),
+            bv=jnp.zeros((hkv * dh,), dtype),
+        )
+    return p
+
+
+def _init_mla(key, cfg: ModelConfig, dtype):
+    mla = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    dn, dr, dv, r = mla.qk_nope_dim, mla.qk_rope_dim, mla.v_head_dim, mla.kv_lora_rank
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "w_q_mla": (jax.random.normal(ks[0], (d, h * (dn + dr)), jnp.float32)
+                    * std).astype(dtype),
+        "w_dkv": (jax.random.normal(ks[1], (d, r + dr), jnp.float32) * std
+                  ).astype(dtype),
+        "kv_norm": {"scale": jnp.ones((r,), dtype)},
+        "w_uk": (jax.random.normal(ks[2], (r, h, dn), jnp.float32)
+                 * (1.0 / math.sqrt(r))).astype(dtype),
+        "w_uv": (jax.random.normal(ks[3], (r, h, dv), jnp.float32)
+                 * (1.0 / math.sqrt(r))).astype(dtype),
+        "w_o_mla": (jax.random.normal(ks[4], (h * dv, d), jnp.float32)
+                    * (1.0 / math.sqrt(h * dv))).astype(dtype),
+    }
+
+
+def _init_mlp(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    std_in, std_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": (jax.random.normal(ks[0], (d, f), jnp.float32) * std_in
+                       ).astype(dtype),
+            "w_up": (jax.random.normal(ks[1], (d, f), jnp.float32) * std_in
+                     ).astype(dtype),
+            "w_down": (jax.random.normal(ks[2], (f, d), jnp.float32) * std_out
+                       ).astype(dtype),
+        }
+    return {  # plain 2-matrix MLP (starcoder2 / whisper)
+        "w_in": (jax.random.normal(ks[0], (d, f), jnp.float32) * std_in
+                 ).astype(dtype),
+        "b_in": jnp.zeros((f,), dtype),
+        "w_out": (jax.random.normal(ks[1], (f, d), jnp.float32) * std_out
+                  ).astype(dtype),
+        "b_out": jnp.zeros((d,), dtype),
+    }
+
+
+def _init_layer(key, cfg: ModelConfig, dtype, *, kind: str):
+    """kind: attn_mlp | mla_moe | attn_moe | mamba | rec_mlp | attn_mlp_local
+    | enc_layer | dec_layer | attn_dense_prefix | mla_dense_prefix"""
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": _norm_params(cfg, d, dtype),
+                         "ln2": _norm_params(cfg, d, dtype)}
+    if cfg.post_norms:
+        p["ln1_post"] = _norm_params(cfg, d, dtype)
+        p["ln2_post"] = _norm_params(cfg, d, dtype)
+
+    if kind in ("attn_mlp", "attn_moe", "attn_dense_prefix", "enc_layer"):
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+    elif kind in ("mla_moe", "mla_dense_prefix"):
+        p["attn"] = _init_mla(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = ssm_mod.init_mamba2_params(ks[0], d, cfg.ssm, dtype)
+        del p["ln2"]
+        return p
+    elif kind == "rec_mlp":
+        p["rec"] = ssm_mod.init_rglru_params(ks[0], d, cfg.rglru, dtype)
+    elif kind == "dec_layer":
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+        p["cross"] = _init_attn(ks[1], cfg, dtype)
+        p["ln_cross"] = _norm_params(cfg, d, dtype)
+    else:
+        raise ValueError(kind)
+
+    if kind in ("attn_moe", "mla_moe"):
+        p["moe"] = init_moe_params(ks[2], d, cfg.moe, dtype)
+    else:
+        p["mlp"] = _init_mlp(ks[3], cfg, dtype)
+    return p
+
+
+def _stack_init(key, cfg, dtype, kind, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_layer(k, cfg, dtype, kind=kind))(keys)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    """Full parameter pytree.  Run under jax.eval_shape for the dry-run."""
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    pv = padded_vocab(cfg)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (pv, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_norm": _norm_params(cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (
+            jax.random.normal(ks[1], (cfg.d_model, pv), jnp.float32)
+            * 0.02
+        ).astype(dtype)
+
+    if cfg.ssm is not None:  # mamba2
+        params["stack"] = _stack_init(ks[2], cfg, dtype, "mamba", cfg.num_layers)
+        return params
+
+    if cfg.rglru is not None:  # griffin / recurrentgemma
+        n_groups, tail = _griffin_layout(cfg)
+        params["rec_stack"] = jax.vmap(
+            lambda k: _stack_init(k, cfg, dtype, "rec_mlp", 2)
+        )(jax.random.split(ks[2], n_groups))
+        params["attn_stack"] = _stack_init(ks[3], cfg, dtype, "attn_mlp", n_groups)
+        if tail:
+            params["rec_tail"] = _stack_init(ks[4], cfg, dtype, "rec_mlp", tail)
+        return params
+
+    if cfg.encoder_layers:  # whisper
+        params["enc_stack"] = _stack_init(ks[2], cfg, dtype, "enc_layer",
+                                          cfg.encoder_layers)
+        params["enc_final_norm"] = _norm_params(cfg, cfg.d_model, dtype)
+        params["stack"] = _stack_init(ks[3], cfg, dtype, "dec_layer",
+                                      cfg.num_layers)
+        return params
+
+    if cfg.moe is not None:
+        nd = cfg.moe.first_dense_layers
+        kind = "mla_moe" if cfg.mla else "attn_moe"
+        pkind = "mla_dense_prefix" if cfg.mla else "attn_dense_prefix"
+        if nd:
+            params["prefix"] = [
+                _init_layer(k, cfg, dtype, kind=pkind)
+                for k in jax.random.split(ks[2], nd)
+            ]
+        params["stack"] = _stack_init(ks[3], cfg, dtype, kind,
+                                      cfg.num_layers - nd)
+        return params
+
+    # dense (possibly with a local/global pattern)
+    pat = len(cfg.local_global_pattern) if cfg.local_global_pattern else 1
+    assert cfg.num_layers % pat == 0
+    if pat == 1:
+        params["stack"] = _stack_init(ks[2], cfg, dtype, "attn_mlp",
+                                      cfg.num_layers)
+    else:
+        params["stack"] = jax.vmap(
+            lambda k: _stack_init(k, cfg, dtype, "attn_mlp", pat)
+        )(jax.random.split(ks[2], cfg.num_layers // pat))
+    return params
+
+
+def _griffin_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(full rec-rec-attn groups, trailing rec layers)."""
+    every = cfg.rglru.attention_every
+    n_groups = cfg.num_layers // every
+    tail = cfg.num_layers - n_groups * every
+    assert every == 3, "griffin layout assumes (rec, rec, attn)"
+    return n_groups, tail
+
+
+def init_hotness_state(cfg: ModelConfig) -> Optional[jnp.ndarray]:
+    if cfg.moe is None:
+        return None
+    n_moe = cfg.num_layers - cfg.moe.first_dense_layers
+    return jnp.zeros((n_moe, cfg.moe.num_experts), jnp.float32)
+
+
+def num_params(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ===========================================================================
+# Scan helper (cost_exact mode unrolls so HloCostAnalysis sees every layer)
+# ===========================================================================
+
+
+def _scan(body, carry, xs, *, unroll: bool):
+    """lax.scan, or an unrolled python loop with identical semantics."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    ys_stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    return carry, ys_stacked
+
+
+# ===========================================================================
+# Layer bodies
+# ===========================================================================
+
+
+def _attn_block(p, h, cfg: ModelConfig, *, positions, window, causal=True,
+                rope=True):
+    """Full-sequence attention sub-block.  Returns (out, (k_rot, v))."""
+    b, s, d = h.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if rope:
+        if cfg.rope_kind == "mrope":
+            q, k = apply_mrope(q, k, positions, cfg.mrope_sections,
+                               theta=cfg.rope_theta)
+        elif cfg.rope_kind == "rope":
+            q, k = apply_rope(q, k, positions[0] if positions.ndim == 3
+                              else positions, theta=cfg.rope_theta)
+    kv_cache = (k, v)  # caches keep the unrepeated kv heads
+
+    rules = current_rules()
+    heads_mode = rules is not None and rules.heads_shardable(hq)
+    if heads_mode:
+        # head-parallel attention: repeat kv to hq so the head dim shards
+        # evenly over tp (the (hkv, rep) split would not)
+        rep = hq // hkv
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        q = shard(q, "dp", None, "tp", None)
+        k = shard(k, "dp", None, "tp", None)
+        v = shard(v, "dp", None, "tp", None)
+    else:
+        # sequence-parallel attention (heads don't divide tp): shard the
+        # query sequence; kv stays whole per dp row (cheap all-gather)
+        q = shard(q, "dp", "tp", None, None)
+        k = shard(k, "dp", None, None, None)
+        v = shard(v, "dp", None, None, None)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap,
+        scale=cfg.query_scale,
+        block_k=(k.shape[1] if cfg.cost_exact else 1024),
+        remat_blocks=not cfg.cost_exact,
+    )
+    if heads_mode:
+        out = shard(out, "dp", None, "tp", None)
+    else:
+        out = shard(out, "dp", "tp", None, None)
+    out = out.reshape(b, s, hq * dh) @ p["wo"]
+    return out.astype(h.dtype), kv_cache
+
+
+def _cross_attn_block(p, h, enc_kv, cfg: ModelConfig):
+    """Decoder→encoder cross attention (whisper).  enc_kv = (k, v)."""
+    b, s, d = h.shape
+    hq, dh = cfg.num_heads, cfg.head_dim
+    q = h @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, s, hq, dh)
+    k, v = enc_kv
+    out = flash_attention(q, k, v, causal=False, window=None,
+                          block_k=min(512, k.shape[1]))
+    out = out.reshape(b, s, hq * dh) @ p["wo"]
+    return out.astype(h.dtype)
+
+
+def _cross_kv(p, enc_h, cfg: ModelConfig):
+    b, se, _ = enc_h.shape
+    hq, dh = cfg.num_heads, cfg.head_dim
+    k = enc_h @ p["wk"]
+    v = enc_h @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k.reshape(b, se, hq, dh), v.reshape(b, se, hq, dh)
+
+
+def _mla_block(p, h, cfg: ModelConfig, *, positions):
+    """DeepSeek-V2 MLA, expanded (train/prefill) form.
+
+    Returns (out, (c_kv, k_rope)) — the compressed decode cache entries.
+    """
+    mla = cfg.mla
+    b, s, d = h.shape
+    hq = cfg.num_heads
+    dn, dr, dv, r = mla.qk_nope_dim, mla.qk_rope_dim, mla.v_head_dim, mla.kv_lora_rank
+
+    q = (h @ p["w_q_mla"]).reshape(b, s, hq, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    dkv = h @ p["w_dkv"]
+    c_kv = apply_norm(dkv[..., :r], p["kv_norm"], "rmsnorm", cfg.norm_eps)
+    k_rope = dkv[..., r:].reshape(b, s, 1, dr)
+
+    q_rope, k_rope = apply_rope(
+        q_rope, k_rope, positions, theta=cfg.rope_theta
+    )
+    k_nope, v = mla_expand(c_kv, p["w_uk"], p["w_uv"])
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, hq, dr))],
+                        axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    rules = current_rules()
+    if rules is not None and rules.heads_shardable(hq):
+        qfull = shard(qfull, "dp", None, "tp", None)
+        k = shard(k, "dp", None, "tp", None)
+        v = shard(v, "dp", None, "tp", None)
+    else:
+        qfull = shard(qfull, "dp", "tp", None, None)
+    out = flash_attention(qfull, k, v, causal=True,
+                          scale=1.0 / math.sqrt(dn + dr),
+                          block_k=(k.shape[1] if cfg.cost_exact else 1024),
+                          remat_blocks=not cfg.cost_exact)
+    out = out.reshape(b, s, hq * dv) @ p["w_o_mla"]
+    return out.astype(h.dtype), (c_kv, k_rope[:, :, 0, :])
+
+
+def _mlp_block(p, h, cfg: ModelConfig):
+    from .common import activation_fn
+
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = activation_fn("silu" if cfg.mlp_kind == "swiglu" else "gelu_tanh")
+        gate = act(h @ p["w_gate"])
+        up = h @ p["w_up"]
+        return ((gate * up) @ p["w_down"]).astype(h.dtype)
+    act = activation_fn(cfg.activation)
+    return (act(h @ p["w_in"] + p["b_in"]) @ p["w_out"] + p["b_out"]).astype(h.dtype)
+
+
+def _residual(cfg, p, name, h, out):
+    """residual add, with gemma2-style post-norm sandwich if configured."""
+    out = shard_seq(out)  # partial sums lower to reduce-scatter (§Perf)
+    if cfg.post_norms:
+        out = _norm_apply(cfg, p.get(f"{name}_post"), out)
+    return h + out
+
+
+# ===========================================================================
+# Full-sequence stacks (train / prefill)
+# ===========================================================================
+
+
+def _layer_fwd(p, h, cfg: ModelConfig, *, positions, window, hot_row,
+               mode: str, enc_h=None):
+    """One decoder layer, full sequence.  Returns (h, cache_entry, new_hot, aux, metrics)."""
+    cache_entry = None
+    aux = jnp.float32(0.0)
+    new_hot = hot_row
+    metrics = {}
+
+    if "mamba" in p:
+        if mode == "prefill":
+            raise AssertionError("handled by _mamba_layer_fwd")
+        out = ssm_mod.mamba2_block(p["mamba"], _norm_apply(cfg, p["ln1"], h),
+                                   cfg.ssm,
+                                   impl="ref" if cfg.cost_exact else None)
+        h = shard(h + out, "dp", "tp", None)
+        return h, cache_entry, new_hot, aux, metrics
+
+    if "rec" in p:
+        out = ssm_mod.rglru_block(p["rec"], _norm_apply(cfg, p["ln1"], h),
+                                  cfg.rglru)
+        h = _residual(cfg, p, "ln1", h, out)
+    elif "cross" in p:  # whisper decoder layer
+        out, kv = _attn_block(p["attn"], _norm_apply(cfg, p["ln1"], h), cfg,
+                              positions=positions, window=None, rope=False)
+        cache_entry = kv
+        h = h + out
+        ck, cv = _cross_kv(p["cross"], enc_h, cfg)
+        out = _cross_attn_block(p["cross"], _norm_apply(cfg, p["ln_cross"], h),
+                                (ck, cv), cfg)
+        h = h + out
+        if mode == "prefill":
+            cache_entry = (cache_entry, (ck, cv))
+    elif cfg.mla is not None and "w_q_mla" in p.get("attn", {}):
+        out, kv = _mla_block(p["attn"], _norm_apply(cfg, p["ln1"], h), cfg,
+                             positions=positions)
+        cache_entry = kv
+        h = _residual(cfg, p, "ln1", h, out)
+    else:
+        causal = not (cfg.encoder_layers and enc_h is None and mode == "encode")
+        out, kv = _attn_block(
+            p["attn"], _norm_apply(cfg, p["ln1"], h), cfg,
+            positions=positions, window=window,
+            causal=(mode != "encode"),
+        )
+        cache_entry = kv
+        h = _residual(cfg, p, "ln1", h, out)
+
+    # FFN half
+    hin = _norm_apply(cfg, p["ln2"], h)
+    if "moe" in p:
+        t = hin.shape[0] * hin.shape[1]
+        if hot_row is None:  # prefill/serving: stateless routing
+            hot_row = jnp.zeros((cfg.moe.num_experts,), jnp.float32)
+        y, new_hot, aux, metrics = moe_ffn(
+            p["moe"], hin.reshape(t, -1), cfg.moe, hot_row
+        )
+        out = y.reshape(hin.shape)
+    else:
+        out = _mlp_block(p["mlp"], hin, cfg)
+    h = _residual(cfg, p, "ln2", h, out)
+    h = shard(h, "dp", "tp", None)  # sequence-parallel residual stream
+    return h, cache_entry, new_hot, aux, metrics
+
+
+def _stack_scan(stack_params, h, cfg: ModelConfig, *, positions, mode,
+                hotness=None, enc_h=None):
+    """Scan over a uniform (or pattern-grouped) layer stack.
+
+    Returns (h, caches, new_hotness, total_aux).
+    """
+    pat = cfg.local_global_pattern
+    pat_n = len(pat) if pat else 1
+    windows = [
+        (cfg.sliding_window if (pat and pat[i] == "local") else None)
+        for i in range(pat_n)
+    ]
+
+    has_hot = hotness is not None
+
+    def body(carry, xs):
+        h, aux_sum = carry
+        p_group, hot_rows = xs
+        caches, new_rows = [], []
+        aux_total = jnp.float32(0.0)
+        for i in range(pat_n):
+            p_i = jax.tree_util.tree_map(lambda x: x[i], p_group) if pat_n > 1 else p_group
+            hot_i = (hot_rows if pat_n == 1 else hot_rows[i]) if has_hot else None
+            h, ce, nh, aux, _ = _layer_fwd(
+                p_i, h, cfg, positions=positions, window=windows[i],
+                hot_row=hot_i, mode=mode, enc_h=enc_h,
+            )
+            caches.append(ce)
+            new_rows.append(nh)
+            aux_total += aux
+        caches = caches[0] if pat_n == 1 else jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *caches
+        )
+        if has_hot:
+            new_rows = new_rows[0] if pat_n == 1 else jnp.stack(new_rows)
+        else:
+            new_rows = None
+        return (h, aux_sum + aux_total), (caches, new_rows)
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    hot_xs = hotness  # (L, E) or (L//pat, pat, E) or None
+    if hotness is not None and pat_n > 1:
+        hot_xs = hotness.reshape(-1, pat_n, hotness.shape[-1])
+    n_steps = jax.tree_util.tree_leaves(stack_params)[0].shape[0]
+    if hot_xs is None:
+        hot_xs = jnp.zeros((n_steps, 0), jnp.float32)  # dummy scan input
+
+    (h, aux), (caches, new_hot) = _scan(
+        body, (h, jnp.float32(0.0)), (stack_params, hot_xs),
+        unroll=cfg.cost_exact,
+    )
+    if hotness is not None and pat_n > 1 and new_hot is not None:
+        new_hot = new_hot.reshape(-1, hotness.shape[-1])
+    return h, caches, (new_hot if hotness is not None else None), aux
+
+
+# ===========================================================================
+# Griffin (recurrentgemma) stack: (rec, rec, attn) groups + rec tail
+# ===========================================================================
+
+
+def _griffin_scan(params, h, cfg: ModelConfig, *, positions, mode):
+    window = cfg.rglru.local_window
+
+    def body(carry, xs):
+        h, aux = carry
+        rec_pair, attn_p = xs
+        caches = []
+        for i in range(2):
+            p_i = jax.tree_util.tree_map(lambda x: x[i], rec_pair)
+            h, ce, _, _, _ = _layer_fwd(p_i, h, cfg, positions=positions,
+                                        window=None, hot_row=None, mode=mode)
+        h, ce, _, _, _ = _layer_fwd(attn_p, h, cfg, positions=positions,
+                                    window=window, hot_row=None, mode=mode)
+        return (h, aux), ce
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux), attn_caches = _scan(
+        body, (h, jnp.float32(0.0)),
+        (params["rec_stack"], params["attn_stack"]), unroll=cfg.cost_exact,
+    )
+    if "rec_tail" in params:
+        for i in range(jax.tree_util.tree_leaves(params["rec_tail"])[0].shape[0]):
+            p_i = jax.tree_util.tree_map(lambda x: x[i], params["rec_tail"])
+            h, _, _, _, _ = _layer_fwd(p_i, h, cfg, positions=positions,
+                                       window=None, hot_row=None, mode=mode)
+    return h, attn_caches, None, aux
+
+
+# ===========================================================================
+# Embedding / head / loss
+# ===========================================================================
+
+
+def _embed(params, batch, cfg: ModelConfig):
+    if cfg.embeds_input:
+        h = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.scale_embeddings:
+        h = h * math.sqrt(cfg.d_model)
+    return shard(h, "dp", "tp", None)  # sequence-parallel residual stream
+
+
+def _head_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def _masked_logits(h_last, params, cfg: ModelConfig):
+    logits = (h_last @ _head_matrix(params, cfg)).astype(jnp.float32)
+    logits = soft_cap(logits, cfg.logit_softcap)
+    pv = padded_vocab(cfg)
+    if pv != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(pv) >= cfg.vocab_size, -1e30, logits)
+    return logits
+
+
+def _lm_loss(params, h, labels, cfg: ModelConfig, *, loss_chunks: int = 8):
+    """Chunked cross-entropy (keeps the (B,S,V) logits off HBM)."""
+    b, s, d = h.shape
+    head = _head_matrix(params, cfg)
+    if cfg.cost_exact:
+        loss_chunks = 1
+    chunks = loss_chunks if s % loss_chunks == 0 and s >= loss_chunks else 1
+    hc = h.reshape(b, chunks, s // chunks, d)
+    lc = labels.reshape(b, chunks, s // chunks)
+
+    pv = padded_vocab(cfg)
+    pad_mask = jnp.arange(pv) >= cfg.vocab_size  # (PV,)
+
+    def chunk_loss(carry, xs):
+        hx, lx = xs  # (B, Sc, D), (B, Sc)
+        logits = (hx @ head).astype(jnp.float32)
+        logits = soft_cap(logits, cfg.logit_softcap)
+        logits = jnp.where(pad_mask, -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(jnp.maximum(lx, 0), pv,
+                                dtype=logits.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", onehot, logits)
+        mask = (lx >= 0).astype(jnp.float32)
+        nll = (logz - gold) * mask
+        loss_sum, count = carry
+        return (loss_sum + jnp.sum(nll), count + jnp.sum(mask)), None
+
+    if not cfg.cost_exact:
+        chunk_loss = jax.checkpoint(chunk_loss, prevent_cse=False)
+    (loss_sum, count), _ = _scan(
+        chunk_loss, (jnp.float32(0.0), jnp.float32(0.0)),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)),
+        unroll=cfg.cost_exact,
+    )
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+# ===========================================================================
+# Public entry points
+# ===========================================================================
+
+
+def _positions_from(batch, cfg: ModelConfig, seq: int):
+    if cfg.rope_kind == "mrope":
+        return batch["positions"]  # (3, B, S)
+    b = (batch["tokens"].shape[0] if "tokens" in batch
+         else batch["embeds"].shape[0])
+    return jnp.broadcast_to(jnp.arange(seq)[None], (b, seq))
+
+
+def _run_stack(params, h, cfg, *, positions, mode, hotness, enc_h=None):
+    aux_total = jnp.float32(0.0)
+    caches_prefix = []
+    if "prefix" in params:
+        for p in params["prefix"]:
+            h, ce, _, aux, _ = _layer_fwd(p, h, cfg, positions=positions,
+                                          window=None, hot_row=None, mode=mode)
+            caches_prefix.append(ce)
+            aux_total += aux
+    if cfg.rglru is not None:
+        h, caches, new_hot, aux = _griffin_scan(params, h, cfg,
+                                                positions=positions, mode=mode)
+    else:
+        h, caches, new_hot, aux = _stack_scan(
+            params["stack"], h, cfg, positions=positions, mode=mode,
+            hotness=hotness, enc_h=enc_h,
+        )
+    return h, (caches_prefix, caches), new_hot, aux_total + aux
+
+
+def forward_train(params, batch, cfg: ModelConfig, hotness=None):
+    """Returns (loss, dict(new_hotness=..., metrics...))."""
+    seq = (batch["tokens"].shape[1] if "tokens" in batch
+           else batch["embeds"].shape[1])
+    positions = _positions_from(batch, cfg, seq)
+    h = _embed(params, batch, cfg)
+
+    enc_h = None
+    if cfg.encoder_layers:
+        enc_h = _encode(params, batch, cfg)
+
+    h, _, new_hot, aux = _run_stack(params, h, cfg, positions=positions,
+                                    mode="train", hotness=hotness, enc_h=enc_h)
+    h = _norm_apply(cfg, params["final_norm"], h)
+    loss = _lm_loss(params, h, batch["labels"], cfg)
+    total = loss + aux
+    return total, {"ce_loss": loss, "aux_loss": aux, "new_hotness": new_hot}
+
+
+def _encode(params, batch, cfg: ModelConfig):
+    """Whisper encoder over stubbed (pre-conv) frame embeddings."""
+    enc_h = batch["enc_embeds"].astype(jnp.dtype(cfg.dtype))
+    se = enc_h.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(se)[None], (enc_h.shape[0], se))
+
+    def body(h, p):
+        out, _ = _attn_block(p["attn"], _norm_apply(cfg, p["ln1"], h), cfg,
+                             positions=pos, window=None, causal=False,
+                             rope=False)
+        h = h + out
+        out = _mlp_block(p["mlp"], _norm_apply(cfg, p["ln2"], h), cfg)
+        return h + out, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    enc_h, _ = _scan(lambda c, p: body(c, p), enc_h,
+                     params["enc_stack"], unroll=cfg.cost_exact)
+    return _norm_apply(cfg, params["enc_final_norm"], enc_h)
+
+
+# ---------------------------------------------------------------------------
+# Prefill & decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Full-sequence pass building the decode cache.
+
+    Returns (cache dict, last-token logits (B, V)).
+    """
+    seq = (batch["tokens"].shape[1] if "tokens" in batch
+           else batch["embeds"].shape[1])
+    positions = _positions_from(batch, cfg, seq)
+    h = _embed(params, batch, cfg)
+
+    enc_h = _encode(params, batch, cfg) if cfg.encoder_layers else None
+
+    if cfg.ssm is not None:
+        return _mamba_prefill(params, h, cfg)
+    if cfg.rglru is not None:
+        return _griffin_prefill(params, h, cfg, positions)
+
+    h, (pre, caches), _, _ = _run_stack(params, h, cfg, positions=positions,
+                                        mode="prefill", hotness=None,
+                                        enc_h=enc_h)
+    h = _norm_apply(cfg, params["final_norm"], h)
+    logits = _masked_logits(h[:, -1], params, cfg)
+    cache = {"pos": jnp.int32(seq - 1), "layers": caches}
+    if pre:
+        cache["prefix"] = pre
+    return cache, logits
+
+
+def _mamba_prefill(params, h, cfg: ModelConfig):
+    # run layer-by-layer via scan, capturing final ssm/conv states
+    def body(h, p):
+        hin = _norm_apply(cfg, p["ln1"], h)
+        b, s, d = hin.shape
+        ssm = cfg.ssm
+        z, xbc, dt, d_inner, n_heads = ssm_mod._mamba2_preproc(p["mamba"], hin, ssm)
+        xbc_c = ssm_mod._causal_conv(xbc, p["mamba"]["conv_w"], p["mamba"]["conv_b"])
+        gn = ssm.n_groups * ssm.d_state
+        xs, bm, cm = jnp.split(xbc_c, [d_inner, d_inner + gn], axis=-1)
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["mamba"]["dt_bias"])
+        a = -jnp.exp(p["mamba"]["a_log"])
+        xh = xs.reshape(b, s, n_heads, ssm.head_dim)
+        from ..kernels import ops as kops
+        y, final = kops.ssd_scan(
+            xh.astype(jnp.float32) * dtp[..., None], a * dtp,
+            bm.reshape(b, s, ssm.n_groups, ssm.d_state),
+            cm.reshape(b, s, ssm.n_groups, ssm.d_state), chunk=ssm.chunk,
+            impl="ref" if cfg.cost_exact else None,
+        )
+        y = y + p["mamba"]["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, s, d_inner)
+        from .common import rms_norm
+        y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                     p["mamba"]["norm_scale"])
+        out = (y.astype(h.dtype) @ p["mamba"]["out_proj"]).astype(h.dtype)
+        conv_state = xbc[:, -(ssm.d_conv - 1):, :]
+        return h + out, {"conv": conv_state, "ssm": final}
+
+    h, states = _scan(body, h, params["stack"], unroll=cfg.cost_exact)
+    h = _norm_apply(cfg, params["final_norm"], h)
+    logits = _masked_logits(h[:, -1], params, cfg)
+    seq = h.shape[1]
+    return {"pos": jnp.int32(seq - 1), "layers": states}, logits
+
+
+def _griffin_prefill(params, h, cfg: ModelConfig, positions):
+    window = cfg.rglru.local_window
+    rg = cfg.rglru
+
+    def rec_apply(p, h):
+        hin = _norm_apply(cfg, p["ln1"], h)
+        gate = jax.nn.gelu(hin @ p["rec"]["w_gate"])
+        xr = hin @ p["rec"]["w_x"]
+        xc = ssm_mod._rglru_conv(xr, p["rec"])
+        a, bvec = ssm_mod._rglru_gates(p["rec"], xc)
+        hh = ssm_mod._lru_scan(a, bvec)
+        y = hh.astype(h.dtype) * gate
+        out = (y @ p["rec"]["w_out"]).astype(h.dtype)
+        h = _residual(cfg, p, "ln1", h, out)
+        out = _mlp_block(p["mlp"], _norm_apply(cfg, p["ln2"], h), cfg)
+        h = _residual(cfg, p, "ln2", h, out)
+        state = {"conv": xr[:, -(rg.conv_width - 1):, :].astype(jnp.float32),
+                 "h": hh[:, -1]}
+        return h, state
+
+    def body(h, xs):
+        rec_pair, attn_p = xs
+        sts = []
+        for i in range(2):
+            p_i = jax.tree_util.tree_map(lambda x: x[i], rec_pair)
+            h, st = rec_apply(p_i, h)
+            sts.append(st)
+        h, kv, _, _, _ = _layer_fwd(attn_p, h, cfg, positions=positions,
+                                    window=window, hot_row=None, mode="prefill")
+        sts = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *sts)
+        return h, (sts, kv)
+
+    h, (rec_states, attn_kv) = _scan(
+        body, h, (params["rec_stack"], params["attn_stack"]),
+        unroll=cfg.cost_exact,
+    )
+    tail_states = []
+    if "rec_tail" in params:
+        for i in range(jax.tree_util.tree_leaves(params["rec_tail"])[0].shape[0]):
+            p_i = jax.tree_util.tree_map(lambda x: x[i], params["rec_tail"])
+            h, st = rec_apply(p_i, h)
+            tail_states.append(st)
+    h = _norm_apply(cfg, params["final_norm"], h)
+    logits = _masked_logits(h[:, -1], params, cfg)
+    seq = positions.shape[-1]
+    # clip attention kv caches to the local window
+    k, v = attn_kv
+    if k.shape[2] > window:
+        k, v = k[:, :, -window:], v[:, :, -window:]
+    cache = {"pos": jnp.int32(seq - 1), "rec": rec_states,
+             "attn": (k, v), "tail": tail_states}
+    return cache, logits
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    """Zero-initialised decode cache (for decode-only dry-runs)."""
+    dtype = jnp.dtype(cfg.dtype)
+    hkv, dh, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    if cfg.ssm is not None:
+        d_inner, n_heads, conv_dim, _ = ssm_mod._mamba2_dims(cfg.d_model, cfg.ssm)
+        return {
+            "pos": jnp.int32(0),
+            "layers": {
+                "conv": jnp.zeros((L, batch, cfg.ssm.d_conv - 1, conv_dim), dtype),
+                "ssm": jnp.zeros((L, batch, n_heads, cfg.ssm.d_state,
+                                  cfg.ssm.head_dim), jnp.float32),
+            },
+        }
+    if cfg.rglru is not None:
+        n_groups, tail = _griffin_layout(cfg)
+        width = cfg.rglru.lru_width or cfg.d_model
+        w = min(max_seq, cfg.rglru.local_window)
+        return {
+            "pos": jnp.int32(0),
+            "rec": {
+                "conv": jnp.zeros((n_groups, 2, batch, cfg.rglru.conv_width - 1,
+                                   width), jnp.float32),
+                "h": jnp.zeros((n_groups, 2, batch, width), jnp.float32),
+            },
+            "attn": (
+                jnp.zeros((n_groups, batch, w, hkv, dh), dtype),
+                jnp.zeros((n_groups, batch, w, hkv, dh), dtype),
+            ),
+            "tail": [
+                {"conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, width),
+                                   jnp.float32),
+                 "h": jnp.zeros((batch, width), jnp.float32)}
+                for _ in range(tail)
+            ],
+        }
+    if cfg.mla is not None:
+        r, dr = cfg.mla.kv_lora_rank, cfg.mla.qk_rope_dim
+        nd = cfg.moe.first_dense_layers if cfg.moe else 0
+        cache = {
+            "pos": jnp.int32(0),
+            "layers": (
+                jnp.zeros((L - nd, batch, max_seq, r), dtype),
+                jnp.zeros((L - nd, batch, max_seq, dr), dtype),
+            ),
+        }
+        if nd:
+            cache["prefix"] = [
+                (jnp.zeros((batch, max_seq, r), dtype),
+                 jnp.zeros((batch, max_seq, dr), dtype))
+                for _ in range(nd)
+            ]
+        return cache
+    if cfg.encoder_layers:
+        return {
+            "pos": jnp.int32(0),
+            "layers": (
+                (jnp.zeros((L, batch, max_seq, hkv, dh), dtype),
+                 jnp.zeros((L, batch, max_seq, hkv, dh), dtype)),
+                (jnp.zeros((L, batch, cfg.encoder_seq, cfg.num_heads, dh), dtype),
+                 jnp.zeros((L, batch, cfg.encoder_seq, cfg.num_heads, dh), dtype)),
+            ),
+        }
+    nd = cfg.moe.first_dense_layers if cfg.moe else 0
+    pat = len(cfg.local_global_pattern) if cfg.local_global_pattern else 1
+    ls = L - nd
+    shape = ((ls // pat, pat, batch, max_seq, hkv, dh) if pat > 1
+             else (ls, batch, max_seq, hkv, dh))
+    cache = {
+        "pos": jnp.int32(0),
+        "layers": (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)),
+    }
+    if nd:
+        cache["prefix"] = [
+            (jnp.zeros((batch, max_seq, hkv, dh), dtype),
+             jnp.zeros((batch, max_seq, hkv, dh), dtype))
+            for _ in range(nd)
+        ]
+    return cache
+
+
+# --- decode layer bodies ----------------------------------------------------
+
+
+def _mla_decode(p, h, cache, pos, cfg: ModelConfig):
+    mla = cfg.mla
+    b = h.shape[0]
+    hq = cfg.num_heads
+    dn, dr, dv, r = mla.qk_nope_dim, mla.qk_rope_dim, mla.v_head_dim, mla.kv_lora_rank
+    q = (h @ p["w_q_mla"]).reshape(b, 1, hq, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    dkv = h @ p["w_dkv"]
+    c_kv = apply_norm(dkv[..., :r], p["kv_norm"], "rmsnorm", cfg.norm_eps)
+    k_rope = dkv[..., r:].reshape(b, 1, 1, dr)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q_rope, k_rope = apply_rope(q_rope, k_rope, posv, theta=cfg.rope_theta)
+
+    ckv_c, krope_c = cache
+    ckv_c = jax.lax.dynamic_update_slice(
+        ckv_c, c_kv.astype(ckv_c.dtype), (0, pos, 0))
+    krope_c = jax.lax.dynamic_update_slice(
+        krope_c, k_rope[:, :, 0, :].astype(krope_c.dtype), (0, pos, 0))
+    ctx = mla_decode_scores(
+        q_nope[:, 0], q_rope[:, 0], ckv_c, krope_c, p["w_uk"], p["w_uv"],
+        cur_pos=pos, scale=1.0 / math.sqrt(dn + dr),
+    )
+    out = ctx.reshape(b, 1, hq * dv) @ p["w_o_mla"]
+    return out.astype(h.dtype), (ckv_c, krope_c)
+
+
+def decode_step(params, cache: Dict, tokens, cfg: ModelConfig,
+                embeds=None):
+    """One decode step.  tokens: (B, 1) int32 (or embeds (B, 1, D)).
+
+    Returns (logits (B, V) f32, new cache).
+    """
+    pos = cache["pos"] + 1
+    if cfg.embeds_input and embeds is not None:
+        h = embeds.astype(jnp.dtype(cfg.dtype))
+    else:
+        h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        h = h * math.sqrt(cfg.d_model)
+
+    if cfg.ssm is not None:
+        h, layers = _mamba_decode_stack(params, h, cache["layers"], cfg)
+        new_cache = {"pos": pos, "layers": layers}
+    elif cfg.rglru is not None:
+        h, new_cache = _griffin_decode_stack(params, h, cache, cfg, pos)
+    else:
+        h, new_cache = _attn_decode_stack(params, h, cache, cfg, pos)
+
+    h = _norm_apply(cfg, params["final_norm"], h)
+    logits = _masked_logits(h[:, 0], params, cfg)
+    return logits, new_cache
+
+
+def _mamba_decode_stack(params, h, states, cfg):
+    def body(h, xs):
+        p, st = xs
+        hin = _norm_apply(cfg, p["ln1"], h)
+        out, new_st = ssm_mod.mamba2_decode(p["mamba"], hin, st, cfg.ssm)
+        return h + out, new_st
+
+    h, new_states = _scan(body, h, (params["stack"], states),
+                          unroll=cfg.cost_exact)
+    return h, new_states
+
+
+def _griffin_decode_stack(params, h, cache, cfg, pos):
+    rg = cfg.rglru
+    window = cache["attn"][0].shape[2]
+
+    def rec_apply(p, h, st):
+        hin = _norm_apply(cfg, p["ln1"], h)
+        out, new_st = ssm_mod.rglru_decode(p["rec"], hin, st, rg)
+        h = _residual(cfg, p, "ln1", h, out)
+        out = _mlp_block(p["mlp"], _norm_apply(cfg, p["ln2"], h), cfg)
+        return _residual(cfg, p, "ln2", h, out), new_st
+
+    def body(h, xs):
+        rec_pair, attn_p, rec_st, attn_kv = xs
+        new_rec = []
+        for i in range(2):
+            p_i = jax.tree_util.tree_map(lambda x: x[i], rec_pair)
+            s_i = jax.tree_util.tree_map(lambda x: x[i], rec_st)
+            h, st = rec_apply(p_i, h, s_i)
+            new_rec.append(st)
+        hin = _norm_apply(cfg, attn_p["ln1"], h)
+        out, new_kv = _attn_decode_ring(attn_p["attn"], hin, attn_kv, pos, cfg)
+        h = _residual(cfg, attn_p, "ln1", h, out)
+        out = _mlp_block(attn_p["mlp"], _norm_apply(cfg, attn_p["ln2"], h), cfg)
+        h = _residual(cfg, attn_p, "ln2", h, out)
+        new_rec = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_rec)
+        return h, (new_rec, new_kv)
+
+    h, (rec_states, attn_kv) = _scan(
+        body, h,
+        (params["rec_stack"], params["attn_stack"], cache["rec"], cache["attn"]),
+        unroll=cfg.cost_exact,
+    )
+    new_tail = []
+    for i, st in enumerate(cache["tail"]):
+        p_i = jax.tree_util.tree_map(lambda x: x[i], params["rec_tail"])
+        h, nst = rec_apply(p_i, h, st)
+        new_tail.append(nst)
+    return h, {"pos": pos, "rec": rec_states, "attn": attn_kv, "tail": new_tail}
+
+
+def _attn_decode_ring(p, h, kv_cache, pos, cfg):
+    """Decode against a ring-buffer (window-sized) cache."""
+    b = h.shape[0]
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (h @ p["wq"]).reshape(b, 1, hq, dh)
+    k = (h @ p["wk"]).reshape(b, 1, hkv, dh)
+    v = (h @ p["wv"]).reshape(b, 1, hkv, dh)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.rope_kind == "rope":
+        q, k = apply_rope(q, k, posv, theta=cfg.rope_theta)
+    kc, vc = kv_cache
+    w = kc.shape[1]
+    slot = pos % w
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, slot, 0, 0))
+    # ring buffer: every slot written so far is within the window
+    out = decode_attention(q, kc, vc, cur_pos=jnp.minimum(pos, w - 1),
+                           softcap=cfg.attn_softcap, scale=cfg.query_scale)
+    out = out.reshape(b, 1, hq * dh) @ p["wo"]
+    return out.astype(h.dtype), (kc, vc)
+
+
+def _attn_decode_stack(params, h, cache, cfg, pos):
+    pat = len(cfg.local_global_pattern) if cfg.local_global_pattern else 1
+    windows = [
+        (cfg.sliding_window if (cfg.local_global_pattern
+                                and cfg.local_global_pattern[i] == "local")
+         else None)
+        for i in range(pat)
+    ]
+    new_prefix = []
+    if "prefix" in cache:
+        for p, kv in zip(params["prefix"], cache["prefix"]):
+            hin = _norm_apply(cfg, p["ln1"], h)
+            if cfg.mla is not None:
+                out, nkv = _mla_decode(p["attn"], hin, kv, pos, cfg)
+            else:
+                out, nkv = _attn_decode_full(p["attn"], hin, kv, pos, cfg,
+                                             window=None)
+            h = _residual(cfg, p, "ln1", h, out)
+            out = _mlp_block(p["mlp"], _norm_apply(cfg, p["ln2"], h), cfg)
+            h = _residual(cfg, p, "ln2", h, out)
+            new_prefix.append(nkv)
+
+    is_whisper = bool(cfg.encoder_layers)
+
+    def body(h, xs):
+        p_group, kv_group = xs
+        new_kvs = []
+        for i in range(pat):
+            p_i = (jax.tree_util.tree_map(lambda x: x[i], p_group)
+                   if pat > 1 else p_group)
+            kv_i = (jax.tree_util.tree_map(lambda x: x[i], kv_group)
+                    if pat > 1 else kv_group)
+            hin = _norm_apply(cfg, p_i["ln1"], h)
+            if is_whisper:
+                self_kv, cross_kv = kv_i
+                out, nkv = _attn_decode_full(p_i["attn"], hin, self_kv, pos,
+                                             cfg, window=None)
+                h = h + out
+                hin2 = _norm_apply(cfg, p_i["ln_cross"], h)
+                q = (hin2 @ p_i["cross"]["wq"]).reshape(
+                    h.shape[0], 1, cfg.num_heads, cfg.head_dim)
+                if cfg.qkv_bias:
+                    q = q + p_i["cross"]["bq"].reshape(1, 1, cfg.num_heads,
+                                                       cfg.head_dim)
+                ck, cv = cross_kv
+                out = decode_attention(q, ck, cv, cur_pos=ck.shape[1] - 1)
+                out = out.reshape(h.shape[0], 1, -1) @ p_i["cross"]["wo"]
+                h = h + out.astype(h.dtype)
+                nkv = (nkv, cross_kv)
+            elif cfg.mla is not None:
+                out, nkv = _mla_decode(p_i["attn"], hin, kv_i, pos, cfg)
+                h = _residual(cfg, p_i, "ln1", h, out)
+            else:
+                out, nkv = _attn_decode_full(p_i["attn"], hin, kv_i, pos, cfg,
+                                             window=windows[i])
+                h = _residual(cfg, p_i, "ln1", h, out)
+            hin = _norm_apply(cfg, p_i["ln2"], h)
+            if "moe" in p_i:
+                t = hin.shape[0] * hin.shape[1]
+                y, _, _, _ = moe_ffn(p_i["moe"], hin.reshape(t, -1), cfg.moe,
+                                     jnp.zeros((cfg.moe.num_experts,),
+                                               jnp.float32))
+                out = y.reshape(hin.shape)
+            else:
+                out = _mlp_block(p_i["mlp"], hin, cfg)
+            h = _residual(cfg, p_i, "ln2", h, out)
+            new_kvs.append(nkv)
+        new_kv = (new_kvs[0] if pat == 1
+                  else jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                              *new_kvs))
+        return h, new_kv
+
+    h, new_layers = _scan(body, h, (params["stack"], cache["layers"]),
+                          unroll=cfg.cost_exact)
+    new_cache = {"pos": pos, "layers": new_layers}
+    if new_prefix:
+        new_cache["prefix"] = new_prefix
+    return h, new_cache
+
+
+def _attn_decode_full(p, h, kv_cache, pos, cfg, *, window):
+    """Decode against a full-length cache (windowing by mask)."""
+    b = h.shape[0]
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, hq, dh)
+    k = k.reshape(b, 1, hkv, dh)
+    v = v.reshape(b, 1, hkv, dh)
+    if cfg.rope_kind == "mrope":
+        posv = jnp.full((3, b, 1), pos, jnp.int32)
+        q, k = apply_mrope(q, k, posv, cfg.mrope_sections, theta=cfg.rope_theta)
+    elif cfg.rope_kind == "rope":
+        posv = jnp.full((b, 1), pos, jnp.int32)
+        q, k = apply_rope(q, k, posv, theta=cfg.rope_theta)
+    kc, vc = kv_cache
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+    out = decode_attention(q, kc, vc, cur_pos=pos, window=window,
+                           softcap=cfg.attn_softcap, scale=cfg.query_scale)
+    out = out.reshape(b, 1, hq * dh) @ p["wo"]
+    return out.astype(h.dtype), (kc, vc)

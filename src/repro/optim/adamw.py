@@ -1,0 +1,160 @@
+"""AdamW (with optional Adafactor-style factored second moment), gradient
+clipping, cosine schedule, and ZeRO-friendly state.
+
+Optimizer states are elementwise (or factored) pytrees of the params, so
+they inherit the params' sharding (including the ZeRO dp-dim sharding from
+``models.sharding``).  Two memory levers for the 1T-param config (kimi-k2
+would not fit fp32 m/v in 16 GB HBM — DESIGN.md §3):
+
+* ``state_dtype='bfloat16'`` keeps m (and unfactored v) in bf16;
+* ``factored_v=True`` replaces v with per-row/per-column accumulators for
+  rank>=2 leaves (Adafactor, arXiv:1804.04235) — O(n+m) instead of O(nm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "adamw_update",
+           "cosine_schedule", "global_norm", "opt_state_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    state_dtype: str = "float32"
+    factored_v: bool = False
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any   # per-leaf: array, or {"r": ..., "c": ...} when factored
+
+
+def _is_factored(p, cfg: AdamWConfig) -> bool:
+    return cfg.factored_v and p.ndim >= 2
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> OptState:
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def zeros_v(p):
+        if _is_factored(p, cfg):
+            return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return jnp.zeros(p.shape, dt)
+
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, dt), params),
+        v=jax.tree_util.tree_map(zeros_v, params),
+    )
+
+
+def opt_state_specs(params, pspecs, cfg: AdamWConfig):
+    """PartitionSpec trees for (m, v) matching init_opt_state's structure."""
+    from jax.sharding import PartitionSpec as P
+
+    m_specs = pspecs
+
+    def v_spec(p, spec):
+        if _is_factored(p, cfg):
+            parts = list(spec) + [None] * (p.ndim - len(spec))
+            return {"r": P(*parts[:-1]),
+                    "c": P(*(parts[:-2] + parts[-1:]))}
+        return spec
+
+    v_specs = jax.tree_util.tree_map(v_spec, params, pspecs)
+    return m_specs, v_specs
+
+
+def cosine_schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+_NO_DECAY = ("scale", "bias", "a_log", "dt_bias", "d_skip", "lambda",
+             "norm", "b_in", "b_out", "bq", "bk", "bv", "bo")
+
+
+def _decay_mask(params):
+    def mask(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        return not any(name.endswith(s) or f"/{s}" in name for s in _NO_DECAY)
+
+    return jax.tree_util.tree_map_with_path(mask, params)
+
+
+def adamw_update(
+    grads, state: OptState, params, cfg: AdamWConfig,
+) -> Tuple[Any, OptState, dict]:
+    """One AdamW / factored-AdamW step.  Returns (params, state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = cosine_schedule(step, cfg)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    decay_mask = _decay_mask(params)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(g, m, v, p, do_decay):
+        gf = g.astype(jnp.float32) * clip
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        mhat = mf / b1c
+        if _is_factored(p, cfg):
+            g2 = jnp.square(gf) + 1e-30
+            r = cfg.b2 * v["r"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            c = cfg.b2 * v["c"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            # Adafactor rank-1 reconstruction: V̂ = (R ⊗ C) / mean(R)
+            rmean = jnp.mean(r, axis=-1, keepdims=True)
+            vhat = (r / jnp.maximum(rmean, 1e-30))[..., None] * c[..., None, :]
+            new_v = {"r": r, "c": c}
+        else:
+            vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(gf)
+            vhat = vf / b2c
+            new_v = vf.astype(sdt)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if do_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), mf.astype(sdt), new_v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_mask = treedef.flatten_up_to(decay_mask)
+    out = [upd(g, m, v, p, dm) for g, m, v, p, dm in
+           zip(flat_g, flat_m, flat_v, flat_p, flat_mask)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm, "lr": lr,
+    }

@@ -1,0 +1,168 @@
+"""Continuous-batching serving engine with a FISH request router.
+
+Requests carry *session keys* (user / conversation ids) whose popularity is
+time-evolving — exactly the paper's workload.  The router is the paper's
+full pipeline:
+
+* hot sessions are spread across several replicas (CHK), cold sessions get
+  2 candidates (PKG fallback) — bounding per-session state replication;
+* the replica choice among candidates uses *inferred* backlog (Alg. 3 /
+  Eq. 1-2), never a queue-depth RPC;
+* replica failure / scale-out remaps sessions via consistent hashing (§5),
+  so most sessions keep replica affinity (their KV/prefix state survives).
+
+The engine can run pure-simulation (logical per-token service times) or
+drive a real reduced model's ``decode_step`` per tick (see
+examples/serve_stream.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.baselines import FishGrouper, make_grouper
+from ..core.fish import FishParams
+from .kvcache import SlotManager
+
+__all__ = ["Request", "ServingEngine", "EngineMetrics"]
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    session: object
+    arrival: float
+    target_tokens: int
+    finished: float = -1.0
+    replica: int = -1
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    latency_avg: float
+    latency_p50: float
+    latency_p99: float
+    throughput_tokens: float
+    session_replicas: int          # Σ replicas holding state per session
+    session_replicas_norm: float   # normalised to 1 replica/session
+    dropped: int
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        num_replicas: int,
+        slots_per_replica: int = 8,
+        tokens_per_tick: Optional[np.ndarray] = None,  # replica speed (hetero)
+        grouping: str = "fish",
+        fish_params: Optional[FishParams] = None,
+        step_fn: Optional[Callable[[int, List[dict]], None]] = None,
+    ):
+        self.num_replicas = num_replicas
+        speeds = (np.ones(num_replicas) if tokens_per_tick is None
+                  else np.asarray(tokens_per_tick, dtype=np.float64))
+        self.speeds = speeds
+        caps = 1.0 / np.maximum(speeds, 1e-9)  # seconds(ticks)/token = P_w
+        if grouping == "fish":
+            self.router = FishGrouper(num_replicas,
+                                      params=fish_params or FishParams(),
+                                      capacities=caps, interval=4.0)
+        else:
+            self.router = make_grouper(grouping, num_replicas)
+        self.slots = [SlotManager(slots_per_replica) for _ in range(num_replicas)]
+        self.queues: List[deque] = [deque() for _ in range(num_replicas)]
+        self.step_fn = step_fn
+        self.done: List[Request] = []
+        self.now = 0.0
+        self._alive = set(range(num_replicas))
+        self._token_budget = np.zeros(num_replicas)
+        self.total_tokens = 0
+
+    # -- ingress -------------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        replica = self.router.assign(req.session, self.now)
+        req.replica = replica
+        self.queues[replica].append(req)
+        return replica
+
+    # -- one scheduling tick ---------------------------------------------------
+    def tick(self) -> None:
+        self.now += 1.0
+        for r in sorted(self._alive):
+            sm = self.slots[r]
+            q = self.queues[r]
+            while q and sm.free:
+                req = q.popleft()
+                slot = sm.allocate(req.request_id, req.session, self.now)
+                sm.active[slot]["req"] = req
+            # decode: each replica advances `speed` tokens spread over slots
+            self._token_budget[r] += self.speeds[r]
+            steps = int(self._token_budget[r])
+            self._token_budget[r] -= steps
+            for _ in range(steps):
+                if not sm.active:
+                    break
+                if self.step_fn is not None:
+                    self.step_fn(r, list(sm.active.values()))
+                for slot in list(sm.active):
+                    meta = sm.active[slot]
+                    meta["tokens"] += 1
+                    self.total_tokens += 1
+                    req = meta["req"]
+                    if meta["tokens"] >= req.target_tokens:
+                        req.finished = self.now
+                        self.done.append(req)
+                        sm.release(slot)
+
+    def run(self, until_done: int, max_ticks: int = 100_000) -> None:
+        t = 0
+        while len(self.done) < until_done and t < max_ticks:
+            self.tick()
+            t += 1
+
+    # -- fault tolerance / elasticity -------------------------------------------
+    def fail_replica(self, r: int) -> int:
+        """Kill a replica: requeue its in-flight + queued requests via the
+        router (consistent-hash remap).  Returns # requests rerouted."""
+        self._alive.discard(r)
+        moved = 0
+        orphans = [m["req"] for m in self.slots[r].active.values()]
+        orphans += list(self.queues[r])
+        self.queues[r].clear()
+        self.slots[r] = SlotManager(self.slots[r].num_slots)
+        self.router.on_membership_change(sorted(self._alive))
+        for req in orphans:
+            self.submit(req)
+            moved += 1
+        return moved
+
+    def add_replica(self, speed: float = 1.0, slots: int = 8) -> int:
+        r = self.num_replicas
+        self.num_replicas += 1
+        self.speeds = np.concatenate([self.speeds, [speed]])
+        self._token_budget = np.concatenate([self._token_budget, [0.0]])
+        self.slots.append(SlotManager(slots))
+        self.queues.append(deque())
+        self._alive.add(r)
+        self.router.on_membership_change(sorted(self._alive))
+        return r
+
+    # -- metrics ------------------------------------------------------------------
+    def metrics(self) -> EngineMetrics:
+        lats = np.array([r.finished - r.arrival for r in self.done
+                         if r.finished >= 0])
+        sessions = self.router.replicas
+        total_rep = sum(len(v) for v in sessions.values())
+        return EngineMetrics(
+            latency_avg=float(lats.mean()) if len(lats) else 0.0,
+            latency_p50=float(np.percentile(lats, 50)) if len(lats) else 0.0,
+            latency_p99=float(np.percentile(lats, 99)) if len(lats) else 0.0,
+            throughput_tokens=self.total_tokens / max(self.now, 1.0),
+            session_replicas=total_rep,
+            session_replicas_norm=total_rep / max(len(sessions), 1),
+            dropped=0,
+        )

@@ -1,0 +1,82 @@
+"""Consistent hashing (paper §5): monotonicity, balance, virtual nodes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ConsistentHashRing
+
+
+def test_lookup_deterministic():
+    ring = ConsistentHashRing(range(8))
+    assert ring.lookup("abc") == ring.lookup("abc")
+
+
+def test_lookup_n_distinct_workers():
+    ring = ConsistentHashRing(range(8))
+    cands = ring.lookup_n("key", 5)
+    assert len(cands) == len(set(cands)) == 5
+
+
+def test_lookup_n_caps_at_worker_count():
+    ring = ConsistentHashRing(range(3))
+    assert len(ring.lookup_n("key", 10)) == 3
+
+
+@given(st.integers(3, 20), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_removal_only_remaps_removed_workers_keys(n_workers, seed):
+    """Monotonicity (Fig. 8b): removing w only moves keys owned by w."""
+    ring = ConsistentHashRing(range(n_workers), virtual_nodes=16)
+    keys = [f"k{seed}_{i}" for i in range(200)]
+    before = {k: ring.lookup(k) for k in keys}
+    victim = seed % n_workers
+    ring.remove_worker(victim)
+    for k in keys:
+        after = ring.lookup(k)
+        if before[k] != victim:
+            assert after == before[k], "non-victim key remapped"
+        else:
+            assert after != victim
+
+
+@given(st.integers(3, 20), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_addition_only_steals_keys_for_new_worker(n_workers, seed):
+    """Monotonicity (Fig. 8c): adding w only moves keys onto w."""
+    ring = ConsistentHashRing(range(n_workers), virtual_nodes=16)
+    keys = [f"a{seed}_{i}" for i in range(200)]
+    before = {k: ring.lookup(k) for k in keys}
+    new = n_workers + 1
+    ring.add_worker(new)
+    for k in keys:
+        after = ring.lookup(k)
+        assert after == before[k] or after == new
+
+
+def test_virtual_nodes_improve_balance():
+    """Fig. 8(d): more virtual nodes -> more even key distribution."""
+    keys = [f"key{i}" for i in range(20_000)]
+
+    def imbalance(vn):
+        ring = ConsistentHashRing(range(8), virtual_nodes=vn)
+        counts = {}
+        for k in keys:
+            w = ring.lookup(k)
+            counts[w] = counts.get(w, 0) + 1
+        loads = np.array([counts.get(w, 0) for w in range(8)], float)
+        return loads.max() / loads.mean()
+
+    assert imbalance(128) < imbalance(1)
+
+
+def test_expected_remap_fraction_small():
+    """Removing 1 of n workers should remap ~1/n of keys (paper §5)."""
+    n = 16
+    ring = ConsistentHashRing(range(n), virtual_nodes=64)
+    keys = [f"key{i}" for i in range(20_000)]
+    before = {k: ring.lookup(k) for k in keys}
+    ring.remove_worker(0)
+    moved = sum(1 for k in keys if ring.lookup(k) != before[k])
+    frac = moved / len(keys)
+    assert frac < 2.5 / n, f"remapped {frac:.3f}, expected ~{1/n:.3f}"

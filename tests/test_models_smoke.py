@@ -1,0 +1,157 @@
+"""Per-arch smoke tests: reduced config, one fwd/train step on CPU,
+asserting output shapes + finiteness (assignment requirement)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs, reduced_config
+from repro.models import transformer as T
+
+B, S = 2, 64
+
+
+def _batch(cfg, key, with_labels=True):
+    batch = {}
+    if cfg.embeds_input:
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if with_labels:
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.rope_kind == "mrope":
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S))
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_smoke(arch):
+    cfg = reduced_config(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    hot = T.init_hotness_state(cfg)
+    batch = _batch(cfg, key)
+    loss, out = jax.jit(
+        lambda p, b, h: T.forward_train(p, b, cfg, h))(params, batch, hot)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    assert float(loss) > 0
+    if cfg.moe is not None:
+        assert out["new_hotness"].shape == hot.shape
+        assert np.isfinite(np.asarray(out["new_hotness"])).all()
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_then_decode_continues(arch):
+    """prefill(S tokens) then one decode step — shapes + finite logits."""
+    cfg = reduced_config(get_config(arch))
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(cfg, key)
+    batch = _batch(cfg, key, with_labels=False)
+    cache, logits = jax.jit(lambda p, b: T.prefill(p, b, cfg))(params, batch)
+    pv = T.padded_vocab(cfg)
+    assert logits.shape == (B, pv)
+    assert np.isfinite(np.asarray(logits[:, :cfg.vocab_size])).all()
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    emb = (jax.random.normal(key, (B, 1, cfg.d_model), jnp.bfloat16)
+           if cfg.embeds_input else None)
+    lg2, cache2 = jax.jit(
+        lambda p, c, t, e: T.decode_step(p, c, t, cfg, e))(
+        params, cache, tok, emb)
+    assert lg2.shape == (B, pv)
+    assert np.isfinite(np.asarray(lg2[:, :cfg.vocab_size])).all()
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "recurrentgemma-9b",
+                                  "qwen1.5-0.5b"])
+def test_prefill_decode_consistency(arch):
+    """Teacher-forcing consistency: decoding token-by-token from a prefix
+    must match the prefill logits of the longer sequence."""
+    cfg = reduced_config(get_config(arch))
+    key = jax.random.PRNGKey(2)
+    params = T.init_params(cfg, key)
+    toks = jax.random.randint(key, (1, 16), 0, cfg.vocab_size)
+
+    # full prefill over 16 tokens
+    _, logits_full = jax.jit(lambda p, b: T.prefill(p, b, cfg))(
+        params, {"tokens": toks})
+
+    # prefill over 15, then decode token 16
+    cache, _ = jax.jit(lambda p, b: T.prefill(p, b, cfg))(
+        params, {"tokens": toks[:, :15]})
+    # decode caches from prefill are sized to the prefix; rebuild at 16 for
+    # attention archs by re-prefilling into a padded cache is framework work —
+    # here we exercise the ssm/hybrid paths whose state is seq-independent.
+    if cfg.ssm is not None or cfg.rglru is not None:
+        logits_step, _ = jax.jit(
+            lambda p, c, t: T.decode_step(p, c, t, cfg))(
+            params, cache, toks[:, 15:16])
+        np.testing.assert_allclose(
+            np.asarray(logits_step[0, :cfg.vocab_size]),
+            np.asarray(logits_full[0, :cfg.vocab_size]),
+            rtol=0.08, atol=0.35,
+        )
+
+
+def test_mamba_decode_matches_train_path():
+    """Recurrent decode == chunked SSD train path, token by token."""
+    cfg = reduced_config(get_config("mamba2-780m"))
+    key = jax.random.PRNGKey(3)
+    params = T.init_params(cfg, key)
+    n = 8
+    toks = jax.random.randint(key, (1, n), 0, cfg.vocab_size)
+
+    # train-path logits at each position via prefill on growing prefixes
+    _, logits_prefill = T.prefill(params, {"tokens": toks}, cfg)
+
+    # decode path: feed tokens one by one
+    cache = T.init_cache(cfg, 1, n)
+    # decode_step increments pos first; start at -1
+    cache["pos"] = jnp.int32(-1)
+    lg = None
+    for i in range(n):
+        lg, cache = T.decode_step(params, cache, toks[:, i:i + 1], cfg)
+    np.testing.assert_allclose(
+        np.asarray(lg[0, :cfg.vocab_size]),
+        np.asarray(logits_prefill[0, :cfg.vocab_size]),
+        rtol=0.08, atol=0.35,
+    )
+
+
+def test_gemma2_softcaps_bound_logits():
+    cfg = reduced_config(get_config("gemma2-2b"))
+    key = jax.random.PRNGKey(4)
+    params = T.init_params(cfg, key)
+    _, logits = T.prefill(params, {"tokens": jax.random.randint(
+        key, (1, 32), 0, cfg.vocab_size)}, cfg)
+    real = np.asarray(logits[0, :cfg.vocab_size])
+    assert np.abs(real).max() <= cfg.logit_softcap + 1e-3
+
+
+def test_moe_hotness_evolves_and_decays():
+    cfg = reduced_config(get_config("deepseek-v2-lite-16b"))
+    key = jax.random.PRNGKey(5)
+    params = T.init_params(cfg, key)
+    hot = T.init_hotness_state(cfg)
+    batch = _batch(cfg, key)
+    _, out = jax.jit(lambda p, b, h: T.forward_train(p, b, cfg, h))(
+        params, batch, hot)
+    h1 = out["new_hotness"]
+    assert float(jnp.sum(h1)) > 0
+    _, out2 = jax.jit(lambda p, b, h: T.forward_train(p, b, cfg, h))(
+        params, batch, h1)
+    h2 = out2["new_hotness"]
+    # inter-epoch decay: h2 = alpha*h1 + counts, counts equal for same batch
+    alpha = cfg.moe.fish_alpha
+    np.testing.assert_allclose(np.asarray(h2), alpha * np.asarray(h1)
+                               + np.asarray(h1), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,70 @@
+"""Roofline formula tests: analytic MODEL_FLOPS vs exact parameter counts."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from benchmarks.roofline import (hbm_traffic_bytes, matmul_params,
+                                 model_flops)
+from repro.configs import SHAPES, get_config, list_archs
+from repro.models import transformer as T
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_matmul_params_close_to_true_count(arch):
+    """Analytic matmul-param count must track the real (eval_shape) count:
+    within 5% after removing the embedding table (not a matmul)."""
+    cfg = get_config(arch)
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    true_total = sum(int(np.prod(x.shape))
+                     for x in jax.tree_util.tree_leaves(params))
+    emb = int(np.prod(params["embed"].shape))
+    # embedding lookup is not a matmul; tied archs reuse it as the head
+    true_matmul = true_total - (0 if cfg.tie_embeddings else emb)
+    counts = matmul_params(cfg)
+    analytic = counts["total"]  # includes the encoder term for whisper
+    ratio = analytic / true_matmul
+    assert 0.93 < ratio < 1.07, f"{arch}: analytic/true = {ratio:.3f}"
+
+
+def test_moe_active_well_below_total():
+    counts = matmul_params(get_config("kimi-k2-1t-a32b"))
+    assert counts["active"] < 0.08 * counts["total"]  # ~32B of ~1T
+    assert counts["total"] > 0.9e12  # the 1T check
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "kimi-k2-1t-a32b"])
+def test_train_flops_is_6nd(arch):
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    mf = model_flops(cfg, shape)
+    n_act = matmul_params(cfg)["active"]
+    assert mf == pytest.approx(6.0 * n_act * shape.global_batch
+                               * shape.seq_len)
+
+
+def test_decode_flops_per_token():
+    cfg = get_config("gemma2-2b")
+    shape = SHAPES["decode_32k"]
+    mf = model_flops(cfg, shape)
+    n = matmul_params(cfg)["active"]
+    assert mf == pytest.approx(2.0 * n * shape.global_batch)
+
+
+def test_hbm_traffic_decode_dominated_by_cache():
+    cfg = get_config("gemma2-2b")
+    shape = SHAPES["decode_32k"]
+    art = {"devices": 256, "param_bytes_global": 6e9,
+           "memory_analysis": {"argument_size_in_bytes": int(1.6 * 2**30)}}
+    b = hbm_traffic_bytes(cfg, shape, art)
+    # cache r/w (2 x ~1.58 GiB) >> params/device (23 MB)
+    assert b > 3e9
+
+
+def test_whisper_encoder_flops_counted():
+    cfg = get_config("whisper-large-v3")
+    mf_train = model_flops(cfg, SHAPES["train_4k"])
+    dec_only = 6.0 * matmul_params(cfg)["active"] * 256 * 4096
+    assert mf_train > dec_only  # encoder term present

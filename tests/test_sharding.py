@@ -1,0 +1,97 @@
+"""Partitioning-rule tests: every arch's param tree gets valid, divisible
+PartitionSpecs on both production meshes (no device state needed)."""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.models import transformer as T
+from repro.models.sharding import ShardingRules, param_specs
+
+MESH_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axis_size(entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return MESH_SIZES[entry]
+    return int(np.prod([MESH_SIZES[a] for a in entry]))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible(arch, multi_pod):
+    """Every sharded dim must divide its mesh-axis product — this is the
+    property the dry-run's in_shardings enforce at lower time."""
+    cfg = get_config(arch)
+    dp = ("pod", "data") if multi_pod else ("data",)
+    rules = ShardingRules(dp=dp, tp="model", tp_size=16,
+                          zero=cfg.zero_sharding)
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    specs = param_specs(params, rules)
+
+    def check(path, leaf, spec):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        assert len(spec) <= leaf.ndim, (name, spec, leaf.shape)
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            size = _axis_size(entry)
+            assert dim % size == 0, \
+                f"{arch}: {name} dim {dim} % mesh {entry}({size})"
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l: check(p, l, None) if False else None, params)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        check(path, leaf, spec)
+
+
+@pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "recurrentgemma-9b"])
+def test_big_params_fully_sharded(arch):
+    """Large weight tensors must shard over >1 axis so per-device bytes fit
+    16 GB HBM (the 1T-param feasibility requirement)."""
+    cfg = get_config(arch)
+    rules = ShardingRules(dp=("pod", "data"), tp="model", tp_size=16,
+                          zero=True)
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    specs = param_specs(params, rules)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    total_dev_bytes = 0
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        ways = int(np.prod([_axis_size(e) for e in tuple(spec)])) or 1
+        total_dev_bytes += leaf.size * leaf.dtype.itemsize / ways
+    assert total_dev_bytes < 9e9, \
+        f"{arch}: {total_dev_bytes/2**30:.1f} GiB params/device"
+
+
+def test_moe_expert_weights_use_ep_plus_zero():
+    cfg = get_config("kimi-k2-1t-a32b")
+    rules = ShardingRules(dp=("pod", "data"), tp="model", tp_size=16,
+                          zero=True)
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    specs = param_specs(params, rules)
+    wg = specs["stack"]["moe"]["w_gate"]  # (L, E, D, F)
+    assert tuple(wg) [1] == "model"            # EP over tp
+    assert tuple(wg)[3] == ("pod", "data")     # ZeRO over dp
+    sh = specs["stack"]["moe"]["shared"]["w_gate"]  # (L, D, Fs)
+    assert tuple(sh)[1] == ("pod", "data") and tuple(sh)[2] == "model"
+
+
+def test_heads_vs_seq_attention_policy():
+    r = ShardingRules(dp=("data",), tp="model", tp_size=16, zero=False)
+    assert r.heads_shardable(64) and r.heads_shardable(16)
+    assert not r.heads_shardable(24)  # starcoder2
+    assert not r.heads_shardable(8)   # gemma2
+    assert not r.heads_shardable(20)  # whisper

@@ -1,0 +1,92 @@
+"""Stream-simulator + grouping-scheme behaviour tests (paper §2.3 / §6)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (FishGrouper, FishParams, MembershipEvent,
+                        make_grouper, simulate_stream)
+from repro.data.synthetic import zipf_time_evolving
+
+
+@pytest.fixture(scope="module")
+def skewed_keys():
+    return zipf_time_evolving(30_000, num_keys=3_000, z=1.4, seed=0)
+
+
+def _run(name, keys, workers=16, **kw):
+    g = make_grouper(name, workers)
+    caps = np.full(workers, 0.9 * workers / 20_000.0)
+    return g, simulate_stream(g, keys, capacities=caps, arrival_rate=20_000.0,
+                              **kw)
+
+
+def test_sg_balances_but_replicates(skewed_keys):
+    g, m = _run("sg", skewed_keys)
+    assert m.imbalance < 0.01
+    assert m.memory_overhead_norm > 2.0   # heavy state replication
+
+
+def test_fg_minimal_memory_but_imbalanced(skewed_keys):
+    g, m = _run("fg", skewed_keys)
+    assert m.memory_overhead_norm == pytest.approx(1.0)
+    assert m.imbalance > 0.5
+
+
+def test_pkg_bounded_two_workers(skewed_keys):
+    g, _ = _run("pkg", skewed_keys)
+    assert max(len(ws) for ws in g.replicas.values()) <= 2
+
+
+def test_fish_near_sg_latency_near_fg_memory(skewed_keys):
+    """The paper's headline: FISH ≈ SG load balance at ≈ FG memory."""
+    _, m_sg = _run("sg", skewed_keys)
+    _, m_fg = _run("fg", skewed_keys)
+    _, m_fish = _run("fish", skewed_keys)
+    # execution time within 1.35x of SG (paper: worst case 1.32x)
+    assert m_fish.execution_time <= 1.35 * m_sg.execution_time
+    # memory within a small multiple of FG, far below SG
+    assert m_fish.memory_overhead_norm <= 3.0
+    assert m_fish.memory_overhead_norm < 0.5 * m_sg.memory_overhead_norm
+
+
+def test_fish_beats_wc_on_time_evolving(skewed_keys):
+    _, m_wc = _run("wc", skewed_keys)
+    _, m_fish = _run("fish", skewed_keys)
+    assert m_fish.latency_p99 <= m_wc.latency_p99 * 1.05
+
+
+def test_fish_handles_heterogeneous_workers():
+    keys = zipf_time_evolving(20_000, num_keys=2_000, z=1.2, seed=3)
+    w = 8
+    caps = np.concatenate([np.full(4, 2.0), np.full(4, 1.0)]) * 0.9 * w / 2e4
+    g_fish = make_grouper("fish", w)
+    m_fish = simulate_stream(g_fish, keys, capacities=caps,
+                             arrival_rate=2e4)
+    g_sg = make_grouper("sg", w)
+    m_sg = simulate_stream(g_sg, keys, capacities=caps, arrival_rate=2e4)
+    # SG ignores capacity; FISH's Eq. 2 should not be slower (hwa, Fig. 16)
+    assert m_fish.execution_time <= m_sg.execution_time * 1.10
+
+
+def test_membership_event_rescale():
+    keys = zipf_time_evolving(12_000, num_keys=1_000, z=1.2, seed=5)
+    g = FishGrouper(8)
+    m = simulate_stream(
+        g, keys, arrival_rate=2e4,
+        events=[MembershipEvent(at=6_000, workers=list(range(7)))],
+    )
+    assert m.execution_time > 0
+    # no tuples assigned to the removed worker after the event
+    assert 7 not in set(g.ring.workers)
+
+
+def test_fish_without_ch_remaps_more():
+    """RQ4 (Fig. 17): consistent hashing bounds remapping on rescale."""
+    keys = zipf_time_evolving(16_000, num_keys=1_500, z=1.1, seed=6)
+    ev = [MembershipEvent(at=8_000, workers=list(range(9)))]
+
+    g_ch = FishGrouper(8, use_consistent_hash=True)
+    m_ch = simulate_stream(g_ch, keys, arrival_rate=2e4, events=ev)
+    g_no = FishGrouper(8, use_consistent_hash=False)
+    m_no = simulate_stream(g_no, keys, arrival_rate=2e4, events=ev)
+    assert m_ch.memory_overhead <= m_no.memory_overhead * 1.05

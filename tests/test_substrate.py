@@ -1,0 +1,246 @@
+"""Checkpointing, data pipeline, runtime (fault/elastic/straggler), serving."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpointing import checkpoint as ckpt
+from repro.core.fish import FishParams
+from repro.data.pipeline import StreamingPipeline
+from repro.data.synthetic import token_stream
+from repro.runtime.elastic import ElasticPool
+from repro.runtime.fault import HeartbeatMonitor, RestartPolicy
+from repro.runtime.stragglers import StragglerMitigator
+from repro.serving.engine import Request, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones(4, jnp.bfloat16)},
+            "step": jnp.int32(7)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 3, tree)
+    restored, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert restored["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_latest_step_ignores_uncommitted(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 1, tree)
+    # simulate a crashed save: directory without COMMITTED
+    os.makedirs(tmp_path / "step_000000009")
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_keep_policy_removes_old(tmp_path):
+    tree = _tree()
+    for s in range(6):
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [4, 5]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 0, _tree())
+    bad = {"params": {"w": jnp.zeros((2, 2)), "b": jnp.ones(4)},
+           "step": jnp.int32(0)}
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), bad)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_batches_and_balance():
+    pipe = StreamingPipeline(num_hosts=4, seq_len=32, batch_per_host=2,
+                             grouping="fish",
+                             fish_params=FishParams(epoch=200, k_max=64))
+    stream = token_stream(600, num_keys=100, doc_len=40, vocab_size=1000,
+                          z=1.4, seed=0)
+    pipe.ingest_stream(stream)
+    batch = pipe.next_global_batch()
+    assert batch is not None
+    assert batch["tokens"].shape == (8, 32)
+    assert batch["labels"].shape == (8, 32)
+    # next-token alignment
+    np.testing.assert_array_equal(batch["tokens"][:, 1:],
+                                  batch["labels"][:, :-1])
+    # memory bounded: far fewer replicas than shuffle would create
+    assert pipe.memory_overhead() <= 4 * 100
+
+
+def test_pipeline_straggler_feedback_shifts_load():
+    caps = np.array([1.0, 1.0, 1.0, 8.0])  # host 3 is 8x slower
+    pipe = StreamingPipeline(num_hosts=4, seq_len=16, batch_per_host=1,
+                             grouping="fish", host_capacities=caps)
+    stream = token_stream(2000, num_keys=500, doc_len=8, vocab_size=100,
+                          z=1.1, seed=1)
+    pipe.ingest_stream(stream)
+    routed = pipe._docs_routed
+    assert routed[3] < routed[:3].mean() * 0.8, routed
+
+
+def test_pipeline_elastic_rescale():
+    pipe = StreamingPipeline(num_hosts=4, seq_len=16, batch_per_host=1)
+    stream = list(token_stream(300, num_keys=50, doc_len=8, vocab_size=100,
+                               seed=2))
+    pipe.ingest_stream(iter(stream[:150]))
+    routed_before = pipe._docs_routed.copy()
+    pipe.rescale([0, 1, 2])  # host 3 died
+    pipe.ingest_stream(iter(stream[150:]))
+    routed_after = pipe._docs_routed.copy()
+    # no new docs reached the dead host
+    assert routed_after[3] == routed_before[3]
+    assert routed_after.sum() == 300
+
+
+# ---------------------------------------------------------------------------
+# runtime: fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_detects_death_and_rejoin():
+    mon = HeartbeatMonitor(range(4), timeout=5.0)
+    for t in range(4):
+        for h in range(4):
+            if h != 2:
+                mon.heartbeat(h, float(t))
+    dead = mon.check(7.0)
+    assert dead == [2]
+    assert mon.alive() == [0, 1, 3]
+    mon.heartbeat(2, 8.0)
+    assert mon.alive() == [0, 1, 2, 3]
+
+
+def test_restart_policy_elastic_vs_restart():
+    events = {"rescale": 0, "restart": 0}
+    pol = RestartPolicy(
+        total_hosts=8, max_lost_frac=0.25,
+        on_rescale=lambda alive: events.__setitem__("rescale",
+                                                    events["rescale"] + 1),
+        on_restart=lambda: events.__setitem__("restart",
+                                              events["restart"] + 1) or 0,
+    )
+    mon = HeartbeatMonitor(range(8), timeout=5.0)
+    for h in range(8):
+        mon.heartbeat(h, 0.0)
+    # one host silent -> elastic continue
+    for h in range(7):
+        mon.heartbeat(h, 4.0)
+    mon.check(8.0)
+    assert pol.handle(mon, 8.0) == "rescaled"
+    # hosts 4-7 silent -> 4/8 lost -> checkpoint restart
+    for h in range(4):
+        mon.heartbeat(h, 9.0)
+    mon.check(12.0)
+    assert pol.handle(mon, 12.0) == "restarted"
+    assert events == {"rescale": 1, "restart": 1}
+
+
+def test_elastic_pool_remap_fraction():
+    pool = ElasticPool(range(8), virtual_nodes=64)
+    keys = [f"k{i}" for i in range(4000)]
+    moved = pool.remove_host(3, sample_keys=keys)
+    assert moved / len(keys) < 0.3  # ~1/8 expected
+
+
+def test_straggler_mitigator_shares():
+    sm = StragglerMitigator(num_hosts=4, interval=1.0)
+    sm.record_step_time(0, 1.0)
+    sm.record_step_time(1, 1.0)
+    sm.record_step_time(2, 1.0)
+    sm.record_step_time(3, 4.0)  # straggler
+    shares = sm.shares()
+    assert shares.sum() == pytest.approx(1.0)
+    assert shares[3] < shares[:3].min()
+    assert sm.slowest() in range(4)
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+
+def _mk_requests(n, rng, hot_frac=0.8, sessions=50):
+    reqs = []
+    for i in range(n):
+        # time-evolving sessions: hot set flips halfway
+        if rng.random() < hot_frac:
+            base = 0 if i < n // 2 else sessions
+            sess = f"hot{base + rng.integers(0, 3)}"
+        else:
+            sess = f"cold{rng.integers(0, sessions)}"
+        reqs.append(Request(i, sess, arrival=float(i) * 0.1,
+                            target_tokens=int(rng.integers(4, 12))))
+    return reqs
+
+
+def test_engine_completes_all_requests():
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(num_replicas=4, slots_per_replica=4,
+                        grouping="fish")
+    reqs = _mk_requests(80, rng)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(until_done=80)
+    assert len(eng.done) == 80
+    m = eng.metrics()
+    assert m.throughput_tokens > 0
+    assert m.session_replicas_norm < 4.0  # bounded replication
+
+
+def test_engine_fish_beats_fg_latency_under_skew():
+    rng = np.random.default_rng(1)
+    reqs = _mk_requests(150, rng)
+    lat = {}
+    for scheme in ("fg", "fish"):
+        eng = ServingEngine(num_replicas=4, slots_per_replica=4,
+                            grouping=scheme)
+        for r in reqs:
+            r2 = Request(r.request_id, r.session, r.arrival, r.target_tokens)
+            eng.submit(r2)
+        eng.run(until_done=150)
+        lat[scheme] = eng.metrics().latency_p99
+    assert lat["fish"] <= lat["fg"]
+
+
+def test_engine_replica_failure_reroutes():
+    rng = np.random.default_rng(2)
+    eng = ServingEngine(num_replicas=3, slots_per_replica=4, grouping="fish")
+    for r in _mk_requests(60, rng):
+        eng.submit(r)
+    for _ in range(5):
+        eng.tick()
+    moved = eng.fail_replica(1)
+    assert moved > 0
+    eng.run(until_done=60)
+    assert len(eng.done) == 60
+    # nothing ran on the dead replica after failure
+    assert len(eng.slots[1]) == 0
+
+
+def test_engine_scale_out():
+    rng = np.random.default_rng(3)
+    eng = ServingEngine(num_replicas=2, slots_per_replica=2, grouping="fish")
+    for r in _mk_requests(40, rng):
+        eng.submit(r)
+    eng.add_replica(speed=2.0, slots=4)
+    eng.run(until_done=40)
+    assert len(eng.done) == 40
