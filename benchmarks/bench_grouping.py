@@ -1,0 +1,50 @@
+"""Grouping-engine throughput: batched vs per-tuple reference (ISSUE 1).
+
+Times every scheme through both simulator engines on the AM proxy stream and
+emits ``artifacts/BENCH_grouping.json`` — tuples/sec per scheme per engine
+plus the speedup — so later PRs have a perf trajectory to regress against.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import make_grouper
+
+from .common import ARTIFACT_DIR, Reporter, SCHEMES, am_proxy_keys, run_scheme
+
+_WORKERS = 32
+
+
+def run(rep: Reporter) -> dict:
+    keys = am_proxy_keys()
+    out = {"n_tuples": int(len(keys)), "workers": _WORKERS, "schemes": {}}
+    make_grouper("fish", _WORKERS)  # warm the consistent-hash ring cache so
+    # neither timed window pays one-off SHA-1 ring construction
+    for scheme in SCHEMES:
+        t0 = time.time()
+        _, m_b = run_scheme(scheme, keys, _WORKERS, simulator="batched")
+        t_batched = time.time() - t0
+        t0 = time.time()
+        _, m_r = run_scheme(scheme, keys, _WORKERS, simulator="reference")
+        t_reference = time.time() - t0
+        row = {
+            "batched_tps": round(len(keys) / t_batched, 1),
+            "reference_tps": round(len(keys) / t_reference, 1),
+            "speedup": round(t_reference / t_batched, 2),
+            "batched_exec_time": round(m_b.execution_time, 4),
+            "reference_exec_time": round(m_r.execution_time, 4),
+        }
+        out["schemes"][scheme] = row
+        rep.add(f"grouping_tps/{scheme}/batched", t_batched * 1e6,
+                row["batched_tps"])
+        rep.add(f"grouping_tps/{scheme}/reference", t_reference * 1e6,
+                row["reference_tps"])
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, "BENCH_grouping.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    rep.add("grouping_tps/artifact", 0.0, path)
+    return out

@@ -10,13 +10,14 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
-from repro.core import make_grouper, simulate_stream
+from repro.core import make_grouper, simulate_stream, simulate_stream_reference
 from repro.data.synthetic import piecewise_zipf, zipf_time_evolving
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 
-# CPU-friendly scale: the simulator is O(tuples); the paper's 50M-tuple runs
-# use identical code at scale=1 (see data/synthetic.py Table-2 proxies).
+# CPU-friendly scale: the batched engine is O(tuples) NumPy work; the paper's
+# 50M-tuple runs use identical code at scale=1 (see data/synthetic.py Table-2
+# proxies).
 N_TUPLES = 30_000
 N_KEYS = 3_000
 WORKERS = (16, 32, 64, 128)
@@ -24,12 +25,17 @@ SCHEMES = ("fg", "pkg", "sg", "dc", "wc", "fish")
 
 
 def run_scheme(scheme: str, keys, workers: int, capacities=None,
-               arrival_rate: float = 20_000.0, **kw):
+               arrival_rate: float = 20_000.0, simulator: str = "batched",
+               **kw):
+    """Route ``keys`` through ``scheme``; ``simulator`` picks the batched
+    engine (default — ISSUE 1) or the per-tuple ``"reference"`` oracle."""
+    if simulator not in ("batched", "reference"):
+        raise ValueError(f"unknown simulator {simulator!r}")
     g = make_grouper(scheme, workers)
     if capacities is None:
         capacities = np.full(workers, 0.9 * workers / arrival_rate)
-    m = simulate_stream(g, keys, capacities=capacities,
-                        arrival_rate=arrival_rate, **kw)
+    sim = simulate_stream if simulator == "batched" else simulate_stream_reference
+    m = sim(g, keys, capacities=capacities, arrival_rate=arrival_rate, **kw)
     return g, m
 
 

@@ -20,12 +20,13 @@ def main() -> None:
                     help="substring filter on benchmark module name")
     args = ap.parse_args()
 
-    from . import (bench_breakdown, bench_chash, bench_deploy, bench_latency,
-                   bench_memory, bench_moe, bench_motivating, bench_params,
-                   roofline)
+    from . import (bench_breakdown, bench_chash, bench_deploy, bench_grouping,
+                   bench_latency, bench_memory, bench_moe, bench_motivating,
+                   bench_params, roofline)
 
     modules = [
         ("bench_motivating", bench_motivating),   # Figs. 2-3
+        ("bench_grouping", bench_grouping),       # batched engine tps (ISSUE 1)
         ("bench_latency", bench_latency),         # Figs. 9-10
         ("bench_memory", bench_memory),           # Fig. 11
         ("bench_params", bench_params),           # Figs. 12-13

@@ -22,7 +22,12 @@ from .fish import (
     epoch_update,
     init_fish_state,
 )
-from .stream import MembershipEvent, StreamMetrics, simulate_stream
+from .stream import (
+    MembershipEvent,
+    StreamMetrics,
+    simulate_stream,
+    simulate_stream_reference,
+)
 
 __all__ = [
     "WorkerStateEstimator",
@@ -47,4 +52,5 @@ __all__ = [
     "MembershipEvent",
     "StreamMetrics",
     "simulate_stream",
+    "simulate_stream_reference",
 ]

@@ -23,12 +23,43 @@ and the stream simulator.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Iterable, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["WorkerStateEstimator", "select_min_wait"]
+__all__ = ["WorkerStateEstimator", "select_min_wait", "greedy_allocate"]
+
+
+def greedy_allocate(waits: np.ndarray, caps: np.ndarray, count: int) -> np.ndarray:
+    """Exact batched replay of the Alg. 3 Eq. 2 greedy.
+
+    Applying :meth:`WorkerStateEstimator.select` ``count`` times is: pick the
+    candidate with the least estimated wait, bump its wait by ``P_w``,
+    repeat.  Replayed here over a (wait, index) heap — O(count log k) with
+    ``count`` bounded by the engine's sub-chunk size, and bit-identical to
+    the sequential trajectory (heap ties break on the smaller index, exactly
+    like ``np.argmin``).  Returns integer allocations aligned with
+    ``waits``/``caps``.
+    """
+    k = waits.shape[0]
+    alloc = np.zeros(k, dtype=np.int64)
+    if count <= 0:
+        return alloc
+    if k == 1:
+        alloc[0] = count
+        return alloc
+    heap = [(w, i) for i, w in enumerate(waits.tolist())]
+    heapq.heapify(heap)
+    caps_l = caps.tolist()
+    alloc_l = [0] * k
+    for _ in range(count):
+        w, i = heapq.heappop(heap)
+        alloc_l[i] += 1
+        heapq.heappush(heap, (w + caps_l[i], i))
+    alloc[:] = alloc_l
+    return alloc
 
 
 @dataclasses.dataclass

@@ -15,15 +15,31 @@ import bisect
 import hashlib
 from typing import Dict, Hashable, Iterable, List, Optional
 
+import numpy as np
+
 __all__ = ["hash32", "ConsistentHashRing"]
 
 _RING = 1 << 32
 
 
+def _canon(value):
+    """Canonicalise numpy scalars so ``np.int32(5)`` and ``5`` hash alike.
+
+    The batched grouping engine interns keys to int32 ids while the sequential
+    reference iterates numpy scalars out of the same array; both must land on
+    the same ring position.
+    """
+    if isinstance(value, np.generic):
+        return value.item()
+    if isinstance(value, tuple):
+        return tuple(_canon(v) for v in value)
+    return value
+
+
 def hash32(value) -> int:
     """SHA-1 based 32-bit bucket id (paper footnote 3)."""
     if not isinstance(value, bytes):
-        value = repr(value).encode("utf-8")
+        value = repr(_canon(value)).encode("utf-8")
     return int.from_bytes(hashlib.sha1(value).digest()[:4], "big")
 
 
@@ -60,6 +76,19 @@ class ConsistentHashRing:
             del self._owner[pos]
             idx = bisect.bisect_left(self._points, pos)
             del self._points[idx]
+
+    def clone(self) -> "ConsistentHashRing":
+        """Structural copy without re-hashing any virtual node.
+
+        Building a W=128 ring costs W×v SHA-1 calls; cloning is a few dict
+        copies.  Used by the grouper factory to amortise ring construction
+        across benchmark runs.
+        """
+        ring = ConsistentHashRing((), virtual_nodes=self.virtual_nodes)
+        ring._points = list(self._points)
+        ring._owner = dict(self._owner)
+        ring._workers = {w: list(ps) for w, ps in self._workers.items()}
+        return ring
 
     @property
     def workers(self) -> List[Hashable]:

@@ -18,6 +18,7 @@ Two implementations live here:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -33,6 +34,7 @@ __all__ = [
     "epoch_update",
     "classify_hot_keys",
     "chk_num_workers",
+    "chk_num_workers_batch",
 ]
 
 
@@ -102,8 +104,62 @@ class EpochFrequencyTracker:
         self.total_seen += 1
 
     def update_many(self, keys: Sequence) -> None:
-        for k in keys:
-            self.update(k)
+        """Bulk Alg. 1 over epoch-aligned chunks (ISSUE 1 tentpole).
+
+        Instead of one Python call per tuple, each epoch-sized chunk is one
+        ``np.unique`` count plus a single batched ReplaceMin — the host mirror
+        of :func:`epoch_update`.  Exact while the table is under capacity;
+        at capacity it is the same epoch-batched approximation the device
+        path uses (bounded divergence, see DESIGN.md §4/§6).
+        """
+        arr = np.asarray(keys)
+        if arr.ndim != 1 or arr.dtype.kind not in "iu":
+            for k in keys:  # non-integer keys: exact sequential path
+                self.update(k)
+            return
+        p = self.params
+        n = arr.shape[0]
+        i = 0
+        while i < n:
+            if self._tuples_in_epoch == p.epoch:
+                self._time_decaying_update()
+                self._tuples_in_epoch = 0
+                self.epochs_completed += 1
+            take = min(n - i, p.epoch - self._tuples_in_epoch)
+            self._update_chunk(arr[i : i + take])
+            self._tuples_in_epoch += take
+            self.total_seen += take
+            i += take
+
+    def _update_chunk(self, chunk: np.ndarray) -> None:
+        """One intra-epoch bulk count + batched ReplaceMin."""
+        uniq, cnt = np.unique(chunk, return_counts=True)
+        counts = self.counts
+        new_keys: List[int] = []
+        new_cnts: List[int] = []
+        for k, c in zip(uniq.tolist(), cnt.tolist()):
+            if k in counts:
+                counts[k] += float(c)
+            else:
+                new_keys.append(k)
+                new_cnts.append(c)
+        if not new_keys:
+            return
+        order = np.argsort(-np.asarray(new_cnts), kind="stable")
+        free = self.params.k_max - len(counts)
+        for j in order[:free].tolist():  # fill empty slots, hottest first
+            counts[new_keys[j]] = float(new_cnts[j])
+        rest = order[free:]
+        if rest.size == 0:
+            return
+        # batched ReplaceMin: the m hottest remaining candidates evict the m
+        # smallest counters, each inheriting c_min + its epoch frequency
+        # (Alg. 1 line 22 generalised to a batch).
+        m = min(rest.size, self.params.k_max)
+        victims = heapq.nsmallest(m, counts.items(), key=lambda kv: kv[1])
+        for (k_old, c_old), j in zip(victims, rest[:m].tolist()):
+            del counts[k_old]
+            counts[new_keys[j]] = c_old + float(new_cnts[j])
 
     # -- Alg. 1 ReplaceMin -----------------------------------------------------
     def _replace_min(self, key) -> None:
@@ -178,6 +234,35 @@ def chk_num_workers(
     return d, m_k
 
 
+def chk_num_workers_batch(
+    f_k: np.ndarray,
+    f_top: float,
+    theta: float,
+    num_workers: int,
+    d_min: int = 2,
+    m_k: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorised :func:`chk_num_workers` over an array of frequencies.
+
+    Element-for-element identical to the scalar form (property-tested);
+    the batched grouping engine runs it once per sub-chunk over the chunk's
+    unique keys.  Returns ``(d, new_m_k)`` as int64 arrays.
+    """
+    f_k = np.asarray(f_k, dtype=np.float64)
+    if m_k is None:
+        m_k = np.zeros(f_k.shape[0], dtype=np.int64)
+    hot = (f_k > theta) & (f_k > 0.0) & (f_top > 0.0)
+    ratio = np.maximum(f_top / np.maximum(f_k, 1e-300), 1.0)
+    index = np.floor(np.log2(ratio))
+    # W // 2**index via exact power-of-two float division; index >= 63 -> 0
+    d = np.where(index < 63,
+                 np.floor(num_workers / np.exp2(np.minimum(index, 63))), 0.0)
+    d = np.clip(d, d_min, num_workers).astype(np.int64)
+    new_m_k = np.where(hot, np.maximum(m_k, d), m_k)
+    d = np.where(hot, np.maximum(d, m_k), 2)
+    return d, new_m_k
+
+
 # ---------------------------------------------------------------------------
 # Device-side state + epoch-batched update (jax.lax, jit-able)
 # ---------------------------------------------------------------------------
@@ -227,6 +312,7 @@ def epoch_update(
     alpha: float,
     max_new: int = 64,
     match_fn=None,
+    fused_fn=None,
 ) -> FishState:
     """Process one epoch of keys through the bounded counter table.
 
@@ -237,53 +323,71 @@ def epoch_update(
        (the O(N·K_max) hotspot — ``match_fn`` defaults to the pure-jnp oracle;
        the Pallas kernel from kernels/ops.py can be passed instead)
     3. batched ReplaceMin: the ``max_new`` most frequent *unmatched* keys of
-       this epoch are merged, each evicting the current minimum and inheriting
-       ``c_min + its epoch frequency`` (Alg. 1 line 22 generalised to a batch).
+       this epoch are merged via a vectorised sort-based merge — the bottom
+       ``max_new`` counters (ascending) are paired against the top ``max_new``
+       candidates (descending); each inserted key inherits ``c_min + its
+       epoch frequency`` (Alg. 1 line 22 generalised to a batch).
+
+    ``fused_fn``, when given, is the single-launch Pallas path
+    (``repro.kernels.ops.fish_epoch_count``): one kernel yields the decayed
+    counts + epoch delta, the match flags, and the unmatched-candidate epoch
+    histogram, replacing steps 1-2 *and* the sort/segment candidate pass.
 
     ``batch_keys``: (n,) int32 key ids (>= 0).  Static shapes throughout.
     """
-    if match_fn is None:
-        match_fn = _match_counts
     table_keys = state["keys"]
-    counts = state["counts"] * jnp.float32(alpha)  # TimeDecayingUpdate
-
-    counts_delta, matched = match_fn(table_keys, batch_keys)
-    counts = counts + counts_delta
-
-    # --- candidate new keys: frequency of unmatched keys within this epoch ---
-    # Sort unmatched keys so identical ids are adjacent, then segment-count.
     n = batch_keys.shape[0]
-    cand_keys = jnp.where(matched, jnp.int32(-1), batch_keys)
-    sorted_keys = jnp.sort(cand_keys)
-    new_run = jnp.concatenate(
-        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]]
+    # top_k cannot take k larger than its operand; a partial final epoch may
+    # carry fewer tuples than max_new, and more than k_max inserts per epoch
+    # can never land anyway
+    max_new = min(max_new, int(table_keys.shape[0]), n)
+
+    if fused_fn is not None:
+        # fused: decay + match-count + candidate histogram in one launch
+        counts, matched, cand_count, is_first = fused_fn(
+            table_keys, state["counts"], batch_keys, alpha=alpha
+        )
+        scores = jnp.where(is_first & ~matched, cand_count, 0.0)
+        top_len, top_idx = jax.lax.top_k(scores, max_new)
+        top_key = batch_keys[top_idx]
+    else:
+        if match_fn is None:
+            match_fn = _match_counts
+        counts = state["counts"] * jnp.float32(alpha)  # TimeDecayingUpdate
+        counts_delta, matched = match_fn(table_keys, batch_keys)
+        counts = counts + counts_delta
+
+        # --- candidate new keys: epoch frequency of unmatched keys ----------
+        # Sort unmatched keys so identical ids are adjacent, then
+        # segment-count.
+        cand_keys = jnp.where(matched, jnp.int32(-1), batch_keys)
+        sorted_keys = jnp.sort(cand_keys)
+        new_run = jnp.concatenate(
+            [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]]
+        )
+        run_id = jnp.cumsum(new_run.astype(jnp.int32)) - 1
+        run_len = jax.ops.segment_sum(
+            jnp.ones((n,), jnp.float32), run_id, num_segments=n
+        )
+        run_key = jax.ops.segment_max(sorted_keys, run_id, num_segments=n)
+        run_len = jnp.where(run_key >= 0, run_len, 0.0)  # drop matched/-1 run
+
+        # top `max_new` candidate keys by epoch frequency
+        top_len, top_idx = jax.lax.top_k(run_len, max_new)
+        top_key = run_key[top_idx]
+
+    # --- batched ReplaceMin: vectorised sort-based merge ---------------------
+    # (replaces the former O(max_new · k_max) lax.scan — ISSUE 1 tentpole)
+    empty = table_keys < 0
+    eff = jnp.where(empty, 0.0, counts)  # empty slots are free minima
+    bottom = jnp.argsort(eff)[:max_new]  # slots ascending by counter
+    do = top_len > 0.0
+    merged_counts = eff[bottom] + top_len
+    table_keys = table_keys.at[bottom].set(
+        jnp.where(do, top_key, table_keys[bottom])
     )
-    run_id = jnp.cumsum(new_run.astype(jnp.int32)) - 1
-    run_len = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), run_id, num_segments=n)
-    run_key = jax.ops.segment_max(sorted_keys, run_id, num_segments=n)
-    run_len = jnp.where(run_key >= 0, run_len, 0.0)  # drop the matched/-1 run
-
-    # top `max_new` candidate keys by epoch frequency
-    top_len, top_idx = jax.lax.top_k(run_len, max_new)
-    top_key = run_key[top_idx]
-
-    # --- batched ReplaceMin merge -------------------------------------------
-    def merge_one(carry, kv):
-        tk, tc = carry
-        key, freq = kv
-        empty = tk < 0
-        # empty slots count as min with counter 0 (insert path, Alg.1 l.12-14)
-        eff = jnp.where(empty, 0.0, tc)
-        slot = jnp.argmin(eff)
-        c_min = eff[slot]
-        do = freq > 0.0
-        new_count = jnp.where(tk[slot] < 0, freq, c_min + freq)
-        tk = jnp.where(do, tk.at[slot].set(key), tk)
-        tc = jnp.where(do, tc.at[slot].set(new_count), tc)
-        return (tk, tc), None
-
-    (table_keys, counts), _ = jax.lax.scan(
-        merge_one, (table_keys, counts), (top_key, top_len)
+    counts = counts.at[bottom].set(
+        jnp.where(do, merged_counts, counts[bottom])
     )
     return FishState(keys=table_keys, counts=counts)
 

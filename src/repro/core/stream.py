@@ -14,6 +14,18 @@ processing capacity ``P_w`` (seconds per tuple — heterogeneous per paper
   FG-normalised form.
 * ``imbalance``       — (max_w load − mean_w load) / mean_w load.
 
+Two engines share the metric plumbing (ISSUE 1 tentpole):
+
+* :func:`simulate_stream` — the **batched** engine: the stream is cut into
+  event-free segments (membership events + capacity-sample points are the
+  only cut sites), each segment is routed with one ``grouper.assign_batch``
+  call, and the per-worker FIFO recurrence ``f_j = max(f_{j-1}, t_j) + P_w``
+  is solved in closed form with ``np.maximum.accumulate`` — zero Python work
+  per tuple.
+* :func:`simulate_stream_reference` — the original per-tuple loop, kept as
+  the oracle for the batched-vs-reference equivalence tests (exact for
+  SG/FG/PKG, bounded drift for DC/WC/FISH — see DESIGN.md §6).
+
 Dynamic membership events (paper §5 / RQ4) are supported via
 :class:`MembershipEvent`; capacity sampling for FISH's estimator (Alg. 3) is
 emulated with a periodic noisy sample of the true ``P_w``.
@@ -28,7 +40,12 @@ import numpy as np
 
 from .baselines import Grouper
 
-__all__ = ["MembershipEvent", "StreamMetrics", "simulate_stream"]
+__all__ = [
+    "MembershipEvent",
+    "StreamMetrics",
+    "simulate_stream",
+    "simulate_stream_reference",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +75,83 @@ class StreamMetrics:
         return d
 
 
+def _setup(grouper, capacities, arrival_rate, events):
+    """Shared preamble: capacities, initial samples, busy array sizing."""
+    w = grouper.num_workers
+    if capacities is None:
+        # feasible utilisation ~0.9 across the initial worker set
+        capacities = np.full(w, 0.9 * w / arrival_rate)
+    capacities = np.asarray(capacities, dtype=np.float64).copy()
+
+    # give capacity-aware groupers their initial (noisy) samples
+    for wk in range(w):
+        grouper.record_capacity_sample(wk, float(capacities[wk]))
+
+    busy_until = np.zeros(
+        max(w, 1 + max((max(e.workers) for e in events if e.workers),
+                       default=w - 1)),
+        dtype=np.float64,
+    )
+    if capacities.shape[0] < busy_until.shape[0]:
+        pad = np.full(busy_until.shape[0] - capacities.shape[0],
+                      capacities.mean())
+        capacities = np.concatenate([capacities, pad])
+    return capacities, busy_until
+
+
+def _metrics(grouper, busy_until, latencies, n) -> StreamMetrics:
+    makespan = float(busy_until.max()) if n else 0.0
+    counts = grouper.assigned_counts[: len(busy_until)].astype(np.float64)
+    imbalance = float((counts.max() - counts.mean()) / max(counts.mean(), 1e-12))
+    return StreamMetrics(
+        execution_time=makespan,
+        latency_avg=float(latencies.mean()) if n else 0.0,
+        latency_p50=float(np.percentile(latencies, 50)) if n else 0.0,
+        latency_p95=float(np.percentile(latencies, 95)) if n else 0.0,
+        latency_p99=float(np.percentile(latencies, 99)) if n else 0.0,
+        throughput=n / makespan if makespan > 0 else 0.0,
+        memory_overhead=grouper.memory_overhead(),
+        memory_overhead_norm=grouper.memory_overhead_normalized(),
+        imbalance=imbalance,
+        per_worker_busy=busy_until.copy(),
+    )
+
+
+def _advance_fifo(busy_until: np.ndarray, workers: np.ndarray,
+                  times: np.ndarray, capacities: np.ndarray,
+                  latencies_out: np.ndarray) -> None:
+    """Vectorised per-worker FIFO advance for one segment.
+
+    For a worker with service time P and tuples at times t_0 <= t_1 <= ...,
+    the FIFO recurrence ``f_j = max(f_{j-1}, t_j) + P`` (with ``f_{-1}`` the
+    carried busy-until b0) unrolls to::
+
+        f_j = (j + 1) P + max(b0, max_{k<=j}(t_k - k P))
+
+    i.e. a single ``np.maximum.accumulate`` per worker.  Writes per-tuple
+    latencies (finish - arrival) into ``latencies_out`` and updates
+    ``busy_until`` in place.
+    """
+    order = np.argsort(workers, kind="stable")
+    ws = workers[order]
+    ts = times[order]
+    finishes = np.empty_like(ts)
+    seg_starts = np.concatenate(
+        [[0], np.flatnonzero(ws[1:] != ws[:-1]) + 1]
+    ) if ws.shape[0] else np.empty(0, dtype=np.int64)
+    seg_ends = np.concatenate([seg_starts[1:], [ws.shape[0]]])
+    for s, e in zip(seg_starts.tolist(), seg_ends.tolist()):
+        wk = int(ws[s])
+        cap = capacities[wk]
+        tt = ts[s:e]
+        j = np.arange(e - s, dtype=np.float64)
+        m = np.maximum.accumulate(tt - j * cap)
+        f = (j + 1.0) * cap + np.maximum(busy_until[wk], m)
+        finishes[s:e] = f
+        busy_until[wk] = f[-1]
+    latencies_out[order] = finishes - ts
+
+
 def simulate_stream(
     grouper: Grouper,
     keys: Sequence,
@@ -69,29 +163,79 @@ def simulate_stream(
     events: Sequence[MembershipEvent] = (),
     seed: int = 0,
 ) -> StreamMetrics:
-    """Run ``keys`` through ``grouper`` over heterogeneous workers.
+    """Run ``keys`` through ``grouper`` with the batched engine.
 
     capacities:   true seconds/tuple per worker (default: all 1/arrival_rate
                   scaled so ~W tuples are in flight — i.e. balanced feasible).
     arrival_rate: tuples per second entering the source.
     sample_every: period (in tuples) of the Alg.-3 capacity sampling hook.
+
+    ``keys`` must be a 1-D integer array of interned key ids for the batched
+    path (``repro.data.synthetic`` generators emit int32); anything else
+    falls back to :func:`simulate_stream_reference`.
+    """
+    keys_arr = np.asarray(keys)
+    if keys_arr.ndim != 1 or keys_arr.dtype.kind not in "iu":
+        return simulate_stream_reference(
+            grouper, keys, capacities=capacities, arrival_rate=arrival_rate,
+            sample_every=sample_every, sample_noise=sample_noise,
+            events=events, seed=seed,
+        )
+    rng = np.random.default_rng(seed)
+    w = grouper.num_workers
+    capacities, busy_until = _setup(grouper, capacities, arrival_rate, events)
+
+    n = keys_arr.shape[0]
+    dt = 1.0 / arrival_rate
+    latencies = np.empty(n, dtype=np.float64)
+    ev = sorted(events, key=lambda e: e.at)
+    active = set(range(w))
+
+    # segment cut sites: membership events + capacity-sample points
+    cuts = {0, n}
+    cuts.update(e.at for e in ev if 0 <= e.at < n)
+    if sample_every:
+        cuts.update(range(sample_every, n, sample_every))
+    bounds = sorted(cuts)
+    ev_idx = 0
+
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        while ev_idx < len(ev) and ev[ev_idx].at == lo:
+            active = set(ev[ev_idx].workers)
+            grouper.on_membership_change(sorted(active))
+            ev_idx += 1
+        seg_workers = grouper.assign_batch(keys_arr[lo:hi], lo * dt, dt)
+        seg_times = np.arange(lo, hi, dtype=np.float64) * dt
+        _advance_fifo(busy_until, seg_workers, seg_times, capacities,
+                      latencies[lo:hi])
+        if sample_every and hi % sample_every == 0:
+            for wk in sorted(active):
+                noisy = capacities[wk] * (1.0 + rng.normal(0.0, sample_noise))
+                grouper.record_capacity_sample(wk, float(max(noisy, 1e-12)))
+
+    return _metrics(grouper, busy_until, latencies, n)
+
+
+def simulate_stream_reference(
+    grouper: Grouper,
+    keys: Sequence,
+    *,
+    capacities: Optional[np.ndarray] = None,
+    arrival_rate: float = 10_000.0,
+    sample_every: int = 5_000,
+    sample_noise: float = 0.02,
+    events: Sequence[MembershipEvent] = (),
+    seed: int = 0,
+) -> StreamMetrics:
+    """Per-tuple oracle engine (the original sequential simulator).
+
+    Semantically authoritative: the batched engine is tested against this
+    (exact for stateless-per-tuple schemes, bounded drift for the
+    frequency-tracking ones).
     """
     rng = np.random.default_rng(seed)
     w = grouper.num_workers
-    if capacities is None:
-        # feasible utilisation ~0.9 across the initial worker set
-        capacities = np.full(w, 0.9 * w / arrival_rate)
-    capacities = np.asarray(capacities, dtype=np.float64).copy()
-
-    # give capacity-aware groupers their initial (noisy) samples
-    for wk in range(w):
-        grouper.record_capacity_sample(wk, float(capacities[wk]))
-
-    busy_until = np.zeros(max(w, 1 + max((max(e.workers) for e in events if e.workers),
-                                          default=w - 1)), dtype=np.float64)
-    if capacities.shape[0] < busy_until.shape[0]:
-        pad = np.full(busy_until.shape[0] - capacities.shape[0], capacities.mean())
-        capacities = np.concatenate([capacities, pad])
+    capacities, busy_until = _setup(grouper, capacities, arrival_rate, events)
 
     dt = 1.0 / arrival_rate
     latencies = np.empty(len(keys), dtype=np.float64)
@@ -115,20 +259,4 @@ def simulate_stream(
                 noisy = capacities[wk] * (1.0 + rng.normal(0.0, sample_noise))
                 grouper.record_capacity_sample(wk, float(max(noisy, 1e-12)))
 
-    makespan = float(busy_until.max()) if len(keys) else 0.0
-    loads = busy_until.copy()  # per-worker busy time in seconds
-    counts = grouper.assigned_counts[: len(busy_until)].astype(np.float64)
-    imbalance = float((counts.max() - counts.mean()) / max(counts.mean(), 1e-12))
-
-    return StreamMetrics(
-        execution_time=makespan,
-        latency_avg=float(latencies.mean()) if len(keys) else 0.0,
-        latency_p50=float(np.percentile(latencies, 50)) if len(keys) else 0.0,
-        latency_p95=float(np.percentile(latencies, 95)) if len(keys) else 0.0,
-        latency_p99=float(np.percentile(latencies, 99)) if len(keys) else 0.0,
-        throughput=len(keys) / makespan if makespan > 0 else 0.0,
-        memory_overhead=grouper.memory_overhead(),
-        memory_overhead_norm=grouper.memory_overhead_normalized(),
-        imbalance=imbalance,
-        per_worker_busy=loads,
-    )
+    return _metrics(grouper, busy_until, latencies, len(keys))

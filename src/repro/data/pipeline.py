@@ -68,12 +68,45 @@ class StreamingPipeline:
         self._docs_routed[host] += 1
         return host
 
+    def ingest_batch(self, doc_keys: Sequence,
+                     token_arrays: Sequence[np.ndarray]) -> np.ndarray:
+        """Route a whole chunk of documents with one ``assign_batch`` call.
+
+        ``doc_keys`` must be interned integer ids (see
+        :func:`repro.data.synthetic.intern_keys`); returns the host id per
+        document.  This is the data-pipeline face of the batched grouping
+        engine — no per-document Python hashing or routing.
+        """
+        keys = np.asarray(doc_keys)
+        hosts = self.grouper.assign_batch(keys, self._clock, 1e-4)
+        self._clock += 1e-4 * keys.shape[0]
+        for h, toks in zip(hosts.tolist(), token_arrays):
+            self._buffers.setdefault(h, deque()).extend(toks.tolist())
+        counts = np.bincount(hosts, minlength=self._docs_routed.shape[0])
+        if counts.shape[0] > self._docs_routed.shape[0]:
+            self._docs_routed = np.concatenate(
+                [self._docs_routed,
+                 np.zeros(counts.shape[0] - self._docs_routed.shape[0],
+                          dtype=np.int64)]
+            )
+        self._docs_routed[: counts.shape[0]] += counts
+        return hosts
+
     def ingest_stream(self, stream: Iterator[Tuple[int, np.ndarray]],
-                      max_docs: Optional[int] = None) -> None:
+                      max_docs: Optional[int] = None, batch: int = 1024) -> None:
+        """Drain ``stream`` through :meth:`ingest_batch` in chunks."""
+        pending_k: List[int] = []
+        pending_t: List[np.ndarray] = []
         for i, (key, tokens) in enumerate(stream):
             if max_docs is not None and i >= max_docs:
                 break
-            self.ingest(key, tokens)
+            pending_k.append(key)
+            pending_t.append(tokens)
+            if len(pending_k) >= batch:
+                self.ingest_batch(np.asarray(pending_k), pending_t)
+                pending_k, pending_t = [], []
+        if pending_k:
+            self.ingest_batch(np.asarray(pending_k), pending_t)
 
     # -- batching ----------------------------------------------------------------
     def host_ready(self, host: int) -> bool:

@@ -14,11 +14,28 @@
 
 from __future__ import annotations
 
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["zipf_probs", "zipf_time_evolving", "piecewise_zipf", "token_stream"]
+__all__ = [
+    "zipf_probs",
+    "zipf_time_evolving",
+    "piecewise_zipf",
+    "token_stream",
+    "intern_keys",
+]
+
+
+def intern_keys(keys: Sequence) -> Tuple[np.ndarray, np.ndarray]:
+    """Map arbitrary hashable keys to contiguous int32 ids.
+
+    Returns ``(ids, vocab)`` with ``vocab[ids[i]] == keys[i]``.  The batched
+    grouping engine routes on interned ids so the per-tuple hot path never
+    hashes Python objects (ISSUE 1); generators below emit int32 directly.
+    """
+    vocab, ids = np.unique(np.asarray(keys), return_inverse=True)
+    return ids.astype(np.int32), vocab
 
 
 def zipf_probs(num_keys: int, z: float) -> np.ndarray:
@@ -35,7 +52,8 @@ def zipf_time_evolving(
     flip_head: int = 10_000,
     seed: int = 0,
 ) -> np.ndarray:
-    """Paper §6.1 ZF generator.  Returns int64 key ids in [0, num_keys)."""
+    """Paper §6.1 ZF generator.  Returns interned int32 key ids in
+    [0, num_keys) — contiguous ids keep the batched engine hash-free."""
     rng = np.random.default_rng(seed)
     n1 = int(flip_at * num_tuples)
     n2 = num_tuples - n1
@@ -49,7 +67,7 @@ def zipf_time_evolving(
     p2 = p2 / p2.sum()
     part1 = rng.choice(num_keys, size=n1, p=p1)
     part2 = rng.choice(num_keys, size=n2, p=p2)
-    return np.concatenate([part1, part2])
+    return np.concatenate([part1, part2]).astype(np.int32)
 
 
 def piecewise_zipf(
@@ -59,10 +77,11 @@ def piecewise_zipf(
     phases: int = 5,
     seed: int = 0,
 ) -> np.ndarray:
-    """Hot set rotates every num_tuples/phases tuples (real-dataset proxy)."""
+    """Hot set rotates every num_tuples/phases tuples (real-dataset proxy).
+    Returns interned int32 key ids."""
     rng = np.random.default_rng(seed)
     p = zipf_probs(num_keys, z)
-    out = np.empty(num_tuples, dtype=np.int64)
+    out = np.empty(num_tuples, dtype=np.int32)
     per = num_tuples // phases
     perm = np.arange(num_keys)
     start = 0

@@ -16,7 +16,7 @@ from . import fish_count as _fish_count
 from . import ssd as _ssd
 from . import ref as ref  # re-exported for tests/benchmarks
 
-__all__ = ["fish_count", "ssd_scan", "ref"]
+__all__ = ["fish_count", "fish_epoch_count", "ssd_scan", "ref"]
 
 
 def _interpret() -> bool:
@@ -33,6 +33,25 @@ def fish_count(table_keys: jnp.ndarray, batch_keys: jnp.ndarray, *,
         padded, batch_keys, block_n=block_n, interpret=_interpret()
     )
     return counts[:k], matched
+
+
+def fish_epoch_count(table_keys: jnp.ndarray, table_counts: jnp.ndarray,
+                     batch_keys: jnp.ndarray, *, alpha: float,
+                     block_n: int = 1024):
+    """Fused epoch pass (decay + match-count + candidate histogram).
+
+    Pads the table to lane width (128; empty slots key=-1, count=0) and is
+    the ``fused_fn`` plugged into ``repro.core.fish.epoch_update``.
+    """
+    k = table_keys.shape[0]
+    k_pad = -k % 128
+    padded_k = jnp.pad(table_keys, (0, k_pad), constant_values=-1)
+    padded_c = jnp.pad(table_counts, (0, k_pad))
+    counts, matched, cand, first = _fish_count.fish_epoch_count(
+        padded_k, padded_c, batch_keys, alpha=float(alpha), block_n=block_n,
+        interpret=_interpret(),
+    )
+    return counts[:k], matched, cand, first
 
 
 def ssd_scan(x, a, b, c, *, chunk: int = 128, initial_state=None,

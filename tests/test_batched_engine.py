@@ -1,0 +1,264 @@
+"""Batched grouping engine vs the sequential reference oracle (ISSUE 1).
+
+Contract (DESIGN.md §6):
+
+* SG / FG / PKG — *identical* assignments and metrics: the batched paths are
+  exact vectorisations (round-robin arithmetic, cached unique-key hashes,
+  cumulative-count two-choice loop).
+* DC / WC / FISH — *bounded divergence*: frequencies are read at sub-chunk
+  granularity and Alg. 3 is water-filled per unique key, so individual
+  assignments may differ but the paper's metrics must stay within tight
+  bands of the oracle.
+* the fused Pallas epoch kernel matches the unfused jnp pipeline
+  (``_match_counts`` + segment-count) slot for slot.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core import make_grouper, simulate_stream, simulate_stream_reference
+from repro.data.synthetic import intern_keys, zipf_time_evolving
+
+EXACT_SCHEMES = ("sg", "fg", "pkg")
+DRIFT_SCHEMES = ("dc", "wc", "fish")
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return zipf_time_evolving(30_000, num_keys=3_000, z=1.4, seed=0)
+
+
+def _pair(scheme, keys, workers=16, **kw):
+    m_ref = simulate_stream_reference(
+        make_grouper(scheme, workers), keys, arrival_rate=2e4, **kw
+    )
+    m_bat = simulate_stream(
+        make_grouper(scheme, workers), keys, arrival_rate=2e4, **kw
+    )
+    return m_ref, m_bat
+
+
+# ---------------------------------------------------------------------------
+# assign_batch-level equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", EXACT_SCHEMES)
+def test_assign_batch_exact(scheme, keys):
+    g_ref = make_grouper(scheme, 16)
+    seq = np.array([g_ref.assign(k, i * 5e-5) for i, k in enumerate(keys)])
+    g_bat = make_grouper(scheme, 16)
+    bat = g_bat.assign_batch(keys, 0.0, 5e-5)
+    np.testing.assert_array_equal(seq, bat)
+    np.testing.assert_array_equal(g_ref.assigned_counts, g_bat.assigned_counts)
+    assert g_ref.memory_overhead() == g_bat.memory_overhead()
+
+
+@pytest.mark.parametrize("scheme", DRIFT_SCHEMES)
+def test_assign_batch_bounded_drift(scheme, keys):
+    g_ref = make_grouper(scheme, 16)
+    for i, k in enumerate(keys):
+        g_ref.assign(k, i * 5e-5)
+    g_bat = make_grouper(scheme, 16)
+    g_bat.assign_batch(keys, 0.0, 5e-5)
+    c_ref = g_ref.assigned_counts.astype(float)
+    c_bat = g_bat.assigned_counts.astype(float)
+    # per-worker assigned mass within 15% of the oracle's
+    np.testing.assert_allclose(c_bat, c_ref, rtol=0.15, atol=50)
+    # replica memory within 20%
+    assert g_bat.memory_overhead() == pytest.approx(
+        g_ref.memory_overhead(), rel=0.20
+    )
+
+
+# ---------------------------------------------------------------------------
+# simulator-level equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", EXACT_SCHEMES)
+def test_simulator_metrics_identical(scheme, keys):
+    m_ref, m_bat = _pair(scheme, keys)
+    for field, v_ref in m_ref.row().items():
+        assert m_bat.row()[field] == pytest.approx(v_ref, rel=1e-9), field
+    np.testing.assert_allclose(m_bat.per_worker_busy, m_ref.per_worker_busy,
+                               rtol=1e-9)
+
+
+@pytest.mark.parametrize("scheme", DRIFT_SCHEMES)
+def test_simulator_metrics_bounded(scheme, keys):
+    m_ref, m_bat = _pair(scheme, keys)
+    assert m_bat.execution_time == pytest.approx(m_ref.execution_time, rel=0.05)
+    assert m_bat.throughput == pytest.approx(m_ref.throughput, rel=0.05)
+    assert m_bat.memory_overhead == pytest.approx(m_ref.memory_overhead,
+                                                  rel=0.20)
+    # load balance must not degrade materially vs the oracle
+    assert m_bat.imbalance <= m_ref.imbalance + 0.05
+    # queueing latency stays the same order of magnitude
+    assert m_bat.latency_p99 <= max(m_ref.latency_p99 * 10.0, 0.05)
+
+
+def test_simulator_object_keys_fall_back():
+    """Non-integer keys take the reference path transparently."""
+    str_keys = np.array([f"k{i % 7}" for i in range(300)], dtype=object)
+    m = simulate_stream(make_grouper("pkg", 4), str_keys, arrival_rate=1e3)
+    assert m.execution_time > 0
+
+    # interned ids take the batched path and stay exact vs their own oracle
+    ids, vocab = intern_keys(str_keys)
+    assert ids.dtype == np.int32 and vocab.shape[0] == 7
+    m_bat = simulate_stream(make_grouper("pkg", 4), ids, arrival_rate=1e3)
+    m_ref = simulate_stream_reference(make_grouper("pkg", 4), ids,
+                                      arrival_rate=1e3)
+    assert m_bat.execution_time == pytest.approx(m_ref.execution_time)
+
+
+def test_assign_batch_and_pipeline_accept_object_keys():
+    """String keys must keep working through the batch paths (the caches
+    are dtype-agnostic; only replica recording needs the slow path)."""
+    from repro.data.pipeline import StreamingPipeline
+
+    str_keys = np.array(["a", "b", "a", "c", "b", "a"] * 40, dtype=object)
+    for scheme in EXACT_SCHEMES + DRIFT_SCHEMES:
+        g = make_grouper(scheme, 4)
+        workers = g.assign_batch(str_keys, 0.0, 1e-4)
+        assert workers.shape == str_keys.shape
+        assert set(g.replicas) == {"a", "b", "c"}
+
+    pipe = StreamingPipeline(4, 8, 2, grouping="fg")
+    pipe.ingest_stream(iter([("docA", np.arange(3)), ("docB", np.arange(2))]))
+    assert pipe.memory_overhead() == 2
+
+
+def test_sampling_and_heterogeneous_capacities_match(keys):
+    caps = np.concatenate([np.full(8, 2.0), np.full(8, 1.0)]) * 0.9 * 16 / 2e4
+    m_ref, m_bat = _pair("fg", keys[:20_000], capacities=caps,
+                         sample_every=4_000)
+    for field, v_ref in m_ref.row().items():
+        assert m_bat.row()[field] == pytest.approx(v_ref, rel=1e-9), field
+
+
+# ---------------------------------------------------------------------------
+# vectorised CHK vs the scalar Alg. 2
+# ---------------------------------------------------------------------------
+
+
+def test_chk_batch_matches_scalar_elementwise():
+    from repro.core import chk_num_workers
+    from repro.core.fish import chk_num_workers_batch
+
+    rng = np.random.default_rng(11)
+    for w in (2, 16, 64, 256):
+        theta = 0.25 / w
+        f = np.concatenate([
+            rng.uniform(0.0, 1.0, 200),
+            np.array([0.0, theta, np.nextafter(theta, 1.0), 1.0]),
+        ])
+        f_top = float(f.max())
+        m_prev = rng.integers(0, w + 1, f.shape[0])
+        d_b, m_b = chk_num_workers_batch(f, f_top, theta, w, m_k=m_prev)
+        for i in range(f.shape[0]):
+            d_s, m_s = chk_num_workers(float(f[i]), f_top, theta, w,
+                                       m_k=int(m_prev[i]))
+            assert (int(d_b[i]), int(m_b[i])) == (d_s, m_s), (i, f[i])
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas epoch kernel vs the unfused jnp pipeline
+# ---------------------------------------------------------------------------
+
+
+def _fused_vs_unfused(table, tcounts, batch, alpha):
+    import jax.numpy as jnp
+
+    from repro.core.fish import _match_counts
+    from repro.kernels import ops
+
+    new_c, matched, cand, first = ops.fish_epoch_count(
+        jnp.asarray(table), jnp.asarray(tcounts), jnp.asarray(batch),
+        alpha=alpha,
+    )
+    delta, matched_ref = _match_counts(jnp.asarray(table), jnp.asarray(batch))
+    np.testing.assert_allclose(np.asarray(new_c),
+                               np.asarray(tcounts) * alpha + np.asarray(delta),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(matched), np.asarray(matched_ref))
+    # candidate histogram: per-position epoch frequency of its own key,
+    # deduped by the first-occurrence flag == np.unique segment counts
+    cand = np.asarray(cand)
+    first = np.asarray(first)
+    uniq, counts = np.unique(batch, return_counts=True)
+    seen = {}
+    for i, k in enumerate(batch.tolist()):
+        assert cand[i] == counts[np.searchsorted(uniq, k)]
+        assert first[i] == (k not in seen)
+        seen[k] = True
+
+
+def test_fused_epoch_kernel_matches_unfused():
+    rng = np.random.default_rng(3)
+    table = np.full(128, -1, np.int32)
+    table[:90] = rng.choice(4_000, 90, replace=False)
+    tcounts = np.zeros(128, np.float32)
+    tcounts[:90] = rng.gamma(2.0, 3.0, 90).astype(np.float32)
+    batch = rng.integers(0, 5_000, 1_500).astype(np.int32)
+    _fused_vs_unfused(table, tcounts, batch, alpha=0.2)
+
+
+@given(st.integers(1, 300), st.integers(1, 80), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_fused_epoch_kernel_property(n_keys, n_table, seed):
+    rng = np.random.default_rng(seed)
+    k_slots = 128
+    table = np.full(k_slots, -1, np.int32)
+    table[:n_table] = rng.choice(1_000, n_table, replace=False)
+    tcounts = np.zeros(k_slots, np.float32)
+    tcounts[:n_table] = rng.gamma(2.0, 2.0, n_table).astype(np.float32)
+    batch = rng.integers(0, 1_200, n_keys).astype(np.int32)
+    _fused_vs_unfused(table, tcounts, batch, alpha=0.5)
+
+
+def test_epoch_update_partial_epoch_smaller_than_max_new():
+    """A final partial epoch with fewer tuples than max_new must not crash
+    (top_k k-clamp) on either the jnp or the fused path."""
+    import jax.numpy as jnp
+
+    from repro.core.fish import epoch_update, init_fish_state
+    from repro.kernels import ops
+
+    state = init_fish_state(128)
+    state = epoch_update(state, jnp.arange(10, dtype=jnp.int32), alpha=0.2,
+                         max_new=64)
+    state = epoch_update(state, jnp.arange(5, 15, dtype=jnp.int32), alpha=0.2,
+                         max_new=64, fused_fn=ops.fish_epoch_count)
+    assert int((np.asarray(state["keys"]) >= 0).sum()) == 15
+
+
+def test_epoch_update_fused_tracks_sequential_oracle():
+    """End-to-end: fused-kernel epoch_update follows the sequential Alg. 1
+    tracker through the ZF hot-set flip (same bound as the jnp path)."""
+    import jax.numpy as jnp
+
+    from repro.core import EpochFrequencyTracker, FishParams
+    from repro.core.fish import epoch_update, init_fish_state
+    from repro.kernels import ops
+
+    p = FishParams(alpha=0.2, epoch=1000, k_max=256)
+    zkeys = zipf_time_evolving(16_000, num_keys=2_000, z=1.4, seed=7
+                               ).astype(np.int32)
+    seq = EpochFrequencyTracker(p)
+    seq.update_many(zkeys.tolist())
+
+    state = init_fish_state(p.k_max)
+    for i in range(0, len(zkeys), p.epoch):
+        state = epoch_update(state, jnp.asarray(zkeys[i:i + p.epoch]),
+                             alpha=p.alpha, max_new=64,
+                             fused_fn=ops.fish_epoch_count)
+    top_seq = set(sorted(seq.counts, key=seq.counts.get, reverse=True)[:20])
+    ks = np.asarray(state["keys"])
+    cs = np.asarray(state["counts"])
+    top_dev = set(ks[np.argsort(-cs)][:20].tolist())
+    jac = len(top_seq & top_dev) / len(top_seq | top_dev)
+    assert jac >= 0.6, f"fused/oracle hot-set Jaccard too low: {jac}"

@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (EpochFrequencyTracker, FishParams, chk_num_workers,
                         classify_hot_keys, epoch_update, init_fish_state)
