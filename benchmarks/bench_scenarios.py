@@ -1,0 +1,66 @@
+"""Time-evolving scenario suite: every scheme × every scenario (ISSUE 2).
+
+The RQ4/Fig. 17 analogue: each scenario from
+:func:`repro.scenarios.default_scenarios` (hot-key flip, straggler
+onset/recovery on a heterogeneous pool, scale-out, failure with elastic
+continue, churn storm) is run for all six grouping schemes through
+
+* the batched DSPE simulator (latency / throughput / memory overhead /
+  imbalance + tuples remapped per membership event), and
+* the continuous-batching ServingEngine with the runtime control plane
+  (heartbeat failure detection, restart policy, elastic pool remap
+  accounting, straggler mitigation) in the loop.
+
+Emits ``artifacts/BENCH_scenarios.json``.  Module-level ``N_TUPLES`` /
+``N_REQUESTS`` are the CI-scale knobs (see .github/workflows/ci.yml).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.scenarios import (default_scenarios, run_dspe_scenario,
+                             run_serving_scenario)
+
+from .common import ARTIFACT_DIR, Reporter, SCHEMES
+
+N_TUPLES = 24_000
+N_KEYS = 2_400
+WORKERS = 8
+N_REQUESTS = 160
+ONLY = ()  # scenario-name filter; empty = the full default suite
+
+
+def run(rep: Reporter) -> dict:
+    out = {"n_tuples": N_TUPLES, "n_keys": N_KEYS, "workers": WORKERS,
+           "n_requests": N_REQUESTS, "scenarios": {}}
+    suite = default_scenarios(N_TUPLES, N_KEYS, WORKERS)
+    if ONLY:
+        suite = [sc for sc in suite if sc.name in ONLY]
+    for sc in suite:
+        row = {"dspe": {}, "serving": {}}
+        for scheme in SCHEMES:
+            t0 = time.time()
+            r = run_dspe_scenario(sc, scheme)
+            us = (time.time() - t0) * 1e6
+            row["dspe"][scheme] = r
+            rep.add(f"scenario/{sc.name}/dspe/{scheme}", us,
+                    f"p99={r['latency_p99']:.4f} "
+                    f"remap={r['remap_frac_mean']}")
+        for scheme in SCHEMES:
+            t0 = time.time()
+            r = run_serving_scenario(sc, scheme, num_requests=N_REQUESTS)
+            us = (time.time() - t0) * 1e6
+            row["serving"][scheme] = r
+            rep.add(f"scenario/{sc.name}/serving/{scheme}", us,
+                    f"done={r['completed']}/{r['submitted']} "
+                    f"p99={r['latency_p99']:.1f}")
+        out["scenarios"][sc.name] = row
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, "BENCH_scenarios.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    rep.add("scenario/artifact", 0.0, path)
+    return out

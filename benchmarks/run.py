@@ -22,7 +22,7 @@ def main() -> None:
 
     from . import (bench_breakdown, bench_chash, bench_deploy, bench_grouping,
                    bench_latency, bench_memory, bench_moe, bench_motivating,
-                   bench_params, roofline)
+                   bench_params, bench_scenarios, roofline)
 
     modules = [
         ("bench_motivating", bench_motivating),   # Figs. 2-3
@@ -32,6 +32,7 @@ def main() -> None:
         ("bench_params", bench_params),           # Figs. 12-13
         ("bench_breakdown", bench_breakdown),     # Figs. 14-16
         ("bench_chash", bench_chash),             # Fig. 17
+        ("bench_scenarios", bench_scenarios),     # RQ4 scenario suite (ISSUE 2)
         ("bench_deploy", bench_deploy),           # Figs. 18-20
         ("bench_moe", bench_moe),                 # beyond-paper MoE routing
         ("roofline", roofline),                   # §Roofline table

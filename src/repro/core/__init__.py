@@ -23,6 +23,7 @@ from .fish import (
     init_fish_state,
 )
 from .stream import (
+    CapacityEvent,
     MembershipEvent,
     StreamMetrics,
     simulate_stream,
@@ -49,6 +50,7 @@ __all__ = [
     "classify_hot_keys",
     "epoch_update",
     "init_fish_state",
+    "CapacityEvent",
     "MembershipEvent",
     "StreamMetrics",
     "simulate_stream",

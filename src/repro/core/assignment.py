@@ -81,6 +81,16 @@ class WorkerStateEstimator:
     def num_workers(self) -> int:
         return self.capacities.shape[0]
 
+    def ensure_size(self, num_workers: int) -> None:
+        """Grow the per-worker arrays for scale-out (ids are never reused).
+        New workers start at capacity 1.0 with empty backlog until a real
+        sample arrives."""
+        grow = num_workers - self.capacities.shape[0]
+        if grow > 0:
+            self.capacities = np.concatenate([self.capacities, np.ones(grow)])
+            self.backlog = np.concatenate([self.backlog, np.zeros(grow)])
+            self.assigned = np.concatenate([self.assigned, np.zeros(grow)])
+
     # -- Alg. 3 lines 3-10: periodic state estimation --------------------------
     def maybe_estimate(self, now: float) -> None:
         if now - self._t_prior > self.interval:

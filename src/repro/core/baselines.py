@@ -9,14 +9,23 @@ and expose ``state_replicas()`` — the set of (key -> workers) mappings they
 created, which is the paper's memory-overhead metric (Σ_w distinct keys held
 on w, normalised to FG's 1 replica per key).
 
+Membership is first class (ISSUE 2 tentpole): every grouper tracks the live
+worker set and honors it from both ``assign`` and ``assign_batch``.  SG
+round-robins over the live list; the hash-based schemes (FG/PKG/DC/WC/FISH)
+draw candidates from a shared consistent-hash ring over the live set (the
+paper's §5 mechanism), so a membership change only remaps keys whose ring
+arcs are affected.  Scale-out grows the per-worker arrays in place — worker
+ids are never reused.  Per-scheme semantics are tabulated in DESIGN.md §5.
+
 Baselines:
   * SG  — Shuffle Grouping: round-robin, ignores the key.
-  * FG  — Field Grouping: hash(key) mod W.
-  * PKG — Partial Key Grouping: power-of-two-choices between 2 hashed
-          candidates, pick the one with the smaller local assigned count.
+  * FG  — Field Grouping: single owner per key (nearest live worker
+          clockwise on the ring).
+  * PKG — Partial Key Grouping: power-of-two-choices between the first 2
+          ring candidates, pick the one with the smaller local count.
   * DC  — D-Choices: SpaceSaving heavy hitters over the *entire lifetime* get
-          d hashed candidates; the rest use PKG.
-  * WC  — W-Choices: like DC but heavy hitters may use *all* workers.
+          d ring candidates; the rest use PKG.
+  * WC  — W-Choices: like DC but heavy hitters may use all live workers.
   * FISH — epoch-decayed hot keys (Alg. 1) + CHK (Alg. 2) + heuristic worker
           assignment (Alg. 3) over consistent-hash candidates (§5).
 """
@@ -46,15 +55,39 @@ __all__ = [
 ]
 
 
+_RING_CACHE: Dict[tuple, ConsistentHashRing] = {}
+
+
+def _initial_ring(num_workers: int, virtual_nodes: int) -> ConsistentHashRing:
+    """Memoised pristine ring for the initial [0, W) worker set — each
+    grouper gets a private clone, so membership mutations never leak."""
+    key = (num_workers, virtual_nodes)
+    ring = _RING_CACHE.get(key)
+    if ring is None:
+        ring = _RING_CACHE[key] = ConsistentHashRing(
+            range(num_workers), virtual_nodes=virtual_nodes
+        )
+    return ring.clone()
+
+
 class Grouper:
-    """Base class: tracks key->worker replicas and per-worker assigned counts."""
+    """Base class: key->worker replicas, per-worker counts, live membership."""
 
     name = "base"
+    _uses_ring = True  # SG routes without hashing and skips ring construction
 
-    def __init__(self, num_workers: int):
-        self.num_workers = num_workers
+    def __init__(self, num_workers: int, virtual_nodes: int = 64):
+        self.num_workers = num_workers  # worker-id universe size (array length)
         self.replicas: Dict[object, Set[int]] = {}
         self.assigned_counts = np.zeros(num_workers, dtype=np.int64)
+        self._active: List[int] = list(range(num_workers))
+        self.ring: Optional[ConsistentHashRing] = (
+            _initial_ring(num_workers, virtual_nodes) if self._uses_ring
+            else None
+        )
+        # unique-key cache of the clockwise live-worker order, shared by every
+        # ring-based scheme; invalidated on membership change
+        self._ring_order: Dict[object, List[int]] = {}
 
     # -- interface ---------------------------------------------------------------
     def assign(self, key, now: float = 0.0) -> int:
@@ -98,6 +131,31 @@ class Grouper:
                 self.replicas.setdefault(k, set()).add(int(w))
         return workers
 
+    # -- live-set helpers ----------------------------------------------------------
+    @property
+    def active_workers(self) -> List[int]:
+        return list(self._active)
+
+    def _ring_prefix(self, key, d: int) -> List[int]:
+        """First ``d`` distinct live workers clockwise from ``key``.
+
+        The clockwise order is stable, so ``lookup_n(key, d)`` is a prefix of
+        ``lookup_n(key, d')`` for d' > d: cache the longest walk so far and
+        extend lazily (non-hot keys only ever walk 1-2 steps).
+        """
+        order = self._ring_order.get(key)
+        if order is None or (len(order) < d and len(order) < len(self.ring)):
+            order = self._ring_order[key] = self.ring.lookup_n(key, d)
+        return order[:d]
+
+    def probe_route(self, key) -> Optional[int]:
+        """Primary route for ``key`` without recording anything — the remap
+        accounting probe (Fig. 17 "keys moved per membership event").  None
+        for schemes with no key affinity (SG)."""
+        if self.ring is None:
+            return None
+        return self._ring_prefix(key, 1)[0]
+
     # -- metrics -----------------------------------------------------------------
     def memory_overhead(self) -> int:
         """Σ_w |distinct keys on worker w|  (paper's memory metric)."""
@@ -109,70 +167,101 @@ class Grouper:
         return self.memory_overhead() / float(n_keys)
 
     # hooks for heterogeneous-capacity runtimes; default no-op
-    def record_capacity_sample(self, worker: int, seconds_per_tuple: float) -> None:
+    def record_capacity_sample(self, worker: int, seconds_per_tuple: float,
+                               ema: float = 0.5) -> None:
         pass
 
+    # -- elasticity (paper §5) -----------------------------------------------------
     def on_membership_change(self, workers: Sequence[int]) -> None:
-        raise NotImplementedError(f"{self.name} does not support elasticity")
+        """Switch the live worker set.  Honored by every scheme: SG
+        round-robins over the new list, ring-based schemes remap only the
+        keys on affected arcs.  Worker ids beyond the current universe grow
+        the per-worker arrays in place (ids are never reused)."""
+        target = sorted(int(w) for w in workers)
+        if not target:
+            raise ValueError("membership change needs at least one live worker")
+        if target[-1] >= self.num_workers:
+            self._grow_arrays(target[-1] + 1)
+            self.num_workers = target[-1] + 1
+        if self.ring is not None:
+            current = set(self.ring.workers)
+            tset = set(target)
+            for w in current - tset:
+                self.ring.remove_worker(w)
+            for w in tset - current:
+                self.ring.add_worker(w)
+        self._active = target
+        self._ring_order.clear()  # candidate caches are keyed on membership
+        self._membership_caches_clear()
+
+    def _grow_arrays(self, new_size: int) -> None:
+        grow = new_size - self.assigned_counts.shape[0]
+        if grow > 0:
+            self.assigned_counts = np.concatenate(
+                [self.assigned_counts, np.zeros(grow, dtype=np.int64)]
+            )
+
+    def _membership_caches_clear(self) -> None:
+        pass
 
 
 class ShuffleGrouping(Grouper):
     name = "sg"
+    _uses_ring = False
 
     def __init__(self, num_workers: int):
         super().__init__(num_workers)
         self._rr = 0
 
     def assign(self, key, now: float = 0.0) -> int:
-        w = self._rr
-        self._rr = (self._rr + 1) % self.num_workers
+        act = self._active
+        w = act[self._rr]
+        self._rr = (self._rr + 1) % len(act)
         return self._record(key, w)
 
     def assign_batch(self, keys, now0: float = 0.0, dt: float = 0.0) -> np.ndarray:
         keys = np.asarray(keys)
         n = keys.shape[0]
-        workers = (self._rr + np.arange(n, dtype=np.int64)) % self.num_workers
-        self._rr = int((self._rr + n) % self.num_workers)
+        act = np.asarray(self._active, dtype=np.int64)
+        workers = act[(self._rr + np.arange(n, dtype=np.int64)) % act.shape[0]]
+        self._rr = int((self._rr + n) % act.shape[0])
         return self._record_batch(keys, workers)
+
+    def _membership_caches_clear(self) -> None:
+        self._rr %= len(self._active)
 
 
 class FieldGrouping(Grouper):
+    """One owner per key: the nearest live worker clockwise on the ring.
+
+    With a static membership this is the paper's FG (a fixed hash of the
+    key); under churn the consistent-hash property keeps every key whose
+    owner survived on the same worker (tested in tests/test_membership.py).
+    """
+
     name = "fg"
 
-    def __init__(self, num_workers: int):
-        super().__init__(num_workers)
-        self._worker_of: Dict[int, int] = {}  # unique-key hash cache
-
     def assign(self, key, now: float = 0.0) -> int:
-        return self._record(key, hash32((key, 0)) % self.num_workers)
+        return self._record(key, self._ring_prefix(key, 1)[0])
 
     def assign_batch(self, keys, now0: float = 0.0, dt: float = 0.0) -> np.ndarray:
         keys = np.asarray(keys)
         uniq, inv = np.unique(keys, return_inverse=True)
-        cache = self._worker_of
         w_uniq = np.empty(uniq.shape[0], dtype=np.int64)
         for j, k in enumerate(uniq.tolist()):
-            w = cache.get(k)
-            if w is None:
-                w = cache[k] = hash32((k, 0)) % self.num_workers
-            w_uniq[j] = w
+            w_uniq[j] = self._ring_prefix(k, 1)[0]
         return self._record_batch(keys, w_uniq[inv])
 
 
 class PartialKeyGrouping(Grouper):
-    """Power of two choices between two hash candidates [14]."""
+    """Power of two choices between the first two ring candidates [14]."""
 
     name = "pkg"
-    _salts = (0, 1)
-
-    def __init__(self, num_workers: int):
-        super().__init__(num_workers)
-        self._pair_of: Dict[int, tuple] = {}  # unique-key candidate-pair cache
 
     def _candidates(self, key) -> List[int]:
-        cands = [hash32((key, s)) % self.num_workers for s in self._salts]
-        if cands[0] == cands[1] and self.num_workers > 1:
-            cands[1] = (cands[1] + 1) % self.num_workers
+        cands = self._ring_prefix(key, 2)
+        if len(cands) == 1:  # single live worker
+            return [cands[0], cands[0]]
         return cands
 
     def _pick_least_loaded(self, cands: Sequence[int]) -> int:
@@ -183,14 +272,10 @@ class PartialKeyGrouping(Grouper):
         return self._record(key, self._pick_least_loaded(self._candidates(key)))
 
     def _pairs_for(self, uniq: np.ndarray) -> np.ndarray:
-        """(U, 2) candidate pairs, SHA-1 hashed once per unique key ever."""
-        cache = self._pair_of
+        """(U, 2) candidate pairs; ring walks cached per unique key ever."""
         pairs = np.empty((uniq.shape[0], 2), dtype=np.int64)
         for j, k in enumerate(uniq.tolist()):
-            pr = cache.get(k)
-            if pr is None:
-                pr = cache[k] = tuple(self._candidates(k))
-            pairs[j] = pr
+            pairs[j] = self._candidates(k)
         return pairs
 
     def _two_choice_loop(self, c0: np.ndarray, c1: np.ndarray) -> np.ndarray:
@@ -228,7 +313,7 @@ class DChoices(PartialKeyGrouping):
     # epoch-batching discipline of FISH applied to the D-C/W-C trackers)
     _batch_cap = 2048
 
-    # sentinel returned by _heavy_candidates meaning "every worker": the
+    # sentinel returned by _heavy_candidates meaning "every live worker": the
     # batched selection loop dispatches on it to the global-least-loaded
     # heap instead of scanning a W-element candidate list per tuple
     _FULL_SET: List[int] = []
@@ -239,41 +324,30 @@ class DChoices(PartialKeyGrouping):
         self.tracker = EpochFrequencyTracker(
             FishParams(alpha=1.0, epoch=2**62, k_max=k_max)
         )
-        self.theta = theta_frac / num_workers
-        self._dcands_of: Dict[tuple, List[int]] = {}  # (key, d) -> candidates
-        self._salt_seq: Dict[object, List[int]] = {}  # key -> hashes by salt
+        self.theta_frac = theta_frac
+
+    @property
+    def theta(self) -> float:
+        """Heavy-hitter threshold theta_frac/W — tracks the worker universe
+        as it grows on scale-out (same rule FISH applies per call)."""
+        return self.theta_frac / self.num_workers
 
     def _heavy_d(self, f_k: float) -> int:
         d = int(math.ceil(f_k * self.num_workers / max(self.theta, 1e-12) ** 0.5))
         return max(2, min(d, self.num_workers))
 
-    def _candidates_d(self, key, d: int) -> List[int]:
-        """Distinct workers from the first ``d`` salted hashes.  The salted
-        hash sequence is cached per key (d drifts with the key's frequency,
-        so only salts beyond the previous maximum are ever SHA-1'd)."""
-        ck = (key, d)
-        cands = self._dcands_of.get(ck)
-        if cands is None:
-            seq = self._salt_seq.get(key)
-            if seq is None:
-                seq = self._salt_seq[key] = []
-            while len(seq) < d:
-                seq.append(hash32((key, len(seq))) % self.num_workers)
-            cands = self._dcands_of[ck] = list(dict.fromkeys(seq[:d]))
-        return cands
-
     def assign(self, key, now: float = 0.0) -> int:
         self.tracker.update(key)
         f_k = self.tracker.frequency(key)
         if f_k > self.theta:
-            cands = self._candidates_d(key, self._heavy_d(f_k))
+            cands = self._ring_prefix(key, self._heavy_d(f_k))
         else:
             cands = self._candidates(key)
         return self._record(key, self._pick_least_loaded(cands))
 
     # -- batched path ------------------------------------------------------------
     def _heavy_candidates(self, key: int, f_k: float) -> List[int]:
-        return self._candidates_d(key, self._heavy_d(f_k))
+        return self._ring_prefix(key, self._heavy_d(f_k))
 
     def assign_batch(self, keys, now0: float = 0.0, dt: float = 0.0) -> np.ndarray:
         """Sub-chunked D-C/W-C: one batched SpaceSaving update per sub-chunk,
@@ -306,11 +380,12 @@ class DChoices(PartialKeyGrouping):
                     a, b = c0[j], c1[j]
                     w = a if counts[a] <= counts[b] else b
                 elif cl is full_set:
-                    # global least-loaded (W-Choices heavy hitters): a lazy
-                    # heap replaces the O(W) scan; (count, idx) ordering
-                    # reproduces np.argmin's smallest-index tie-breaking
+                    # global least-loaded over the live set (W-Choices heavy
+                    # hitters): a lazy heap replaces the O(W) scan;
+                    # (count, idx) ordering reproduces np.argmin's
+                    # smallest-index tie-breaking
                     if heap is None:
-                        heap = [(c, wk) for wk, c in enumerate(counts)]
+                        heap = [(counts[wk], wk) for wk in self._active]
                         heapq.heapify(heap)
                     while True:
                         ch, w = heap[0]
@@ -328,7 +403,7 @@ class DChoices(PartialKeyGrouping):
 
 
 class WChoices(DChoices):
-    """W-Choices [15]: heavy hitters may use the entire worker set."""
+    """W-Choices [15]: heavy hitters may use the entire live worker set."""
 
     name = "wc"
 
@@ -336,28 +411,13 @@ class WChoices(DChoices):
         self.tracker.update(key)
         f_k = self.tracker.frequency(key)
         if f_k > self.theta:
-            cands = list(range(self.num_workers))
+            cands = self._active
         else:
             cands = self._candidates(key)
         return self._record(key, self._pick_least_loaded(cands))
 
     def _heavy_candidates(self, key: int, f_k: float) -> List[int]:
-        return self._FULL_SET  # sentinel: global least-loaded over all workers
-
-
-_RING_CACHE: Dict[tuple, ConsistentHashRing] = {}
-
-
-def _initial_ring(num_workers: int, virtual_nodes: int) -> ConsistentHashRing:
-    """Memoised pristine ring for the initial [0, W) worker set — each
-    grouper gets a private clone, so membership mutations never leak."""
-    key = (num_workers, virtual_nodes)
-    ring = _RING_CACHE.get(key)
-    if ring is None:
-        ring = _RING_CACHE[key] = ConsistentHashRing(
-            range(num_workers), virtual_nodes=virtual_nodes
-        )
-    return ring.clone()
+        return self._FULL_SET  # sentinel: least-loaded over the live set
 
 
 class FishGrouper(Grouper):
@@ -374,7 +434,7 @@ class FishGrouper(Grouper):
         virtual_nodes: int = 64,
         use_consistent_hash: bool = True,
     ):
-        super().__init__(num_workers)
+        super().__init__(num_workers, virtual_nodes=virtual_nodes)
         self.params = params or FishParams()
         self.tracker = EpochFrequencyTracker(self.params)
         self.estimator = WorkerStateEstimator(
@@ -384,15 +444,21 @@ class FishGrouper(Grouper):
             interval=interval,
         )
         self.use_consistent_hash = use_consistent_hash
-        self.ring = _initial_ring(num_workers, virtual_nodes)
-        self._active = list(range(num_workers))
         self.m_k: Dict[object, int] = {}  # CHK monotone memory M
-        # unique-key candidate caches (invalidated on membership change):
-        # consistent-hash path caches the full clockwise worker order per key
-        # (prefix of length d == lookup_n(key, d)); the mod-hash strawman
-        # caches per (key, d).
-        self._ring_order: Dict[int, List[int]] = {}
+        # mod-hash candidate cache per (key, d) — the §5 strawman path only
         self._mod_cands: Dict[tuple, List[int]] = {}
+
+    def _mod_candidates(self, key, d: int) -> List[int]:
+        """Mod-hash candidates (the §5 strawman — remaps everything on
+        membership change; used for the RQ4 w/o-CH comparison)."""
+        ck = (key, d)
+        cands = self._mod_cands.get(ck)
+        if cands is None:
+            n_active = len(self._active)
+            cands = self._mod_cands[ck] = list(
+                {self._active[hash32((key, s)) % n_active] for s in range(d)}
+            )
+        return cands
 
     def assign(self, key, now: float = 0.0) -> int:
         self.tracker.update(key)
@@ -406,35 +472,17 @@ class FishGrouper(Grouper):
         if m_new:
             self.m_k[key] = m_new
         if self.use_consistent_hash:
-            candidates = self.ring.lookup_n(key, d)
+            candidates = self._ring_prefix(key, d)
         else:
-            # mod-hash candidates (the §5 strawman — remaps everything on
-            # membership change; used for the RQ4 w/o-CH comparison)
-            n_active = len(self._active)
-            candidates = list(
-                {self._active[hash32((key, s)) % n_active] for s in range(d)}
-            )
+            candidates = self._mod_candidates(key, d)
         worker = self.estimator.select(candidates, now)
         return self._record(key, worker)
 
     # -- batched path --------------------------------------------------------------
     def _candidates_batch(self, key: int, d: int) -> List[int]:
         if self.use_consistent_hash:
-            # the clockwise order is stable, so lookup_n(key, d) is a prefix
-            # of lookup_n(key, d') for d' > d: cache the longest walk so far
-            # and extend lazily (non-hot keys only ever walk 2 steps)
-            order = self._ring_order.get(key)
-            if order is None or (len(order) < d and len(order) < len(self.ring)):
-                order = self._ring_order[key] = self.ring.lookup_n(key, d)
-            return order[:d]
-        ck = (key, d)
-        cands = self._mod_cands.get(ck)
-        if cands is None:
-            n_active = len(self._active)
-            cands = self._mod_cands[ck] = list(
-                {self._active[hash32((key, s)) % n_active] for s in range(d)}
-            )
-        return cands
+            return self._ring_prefix(key, d)
+        return self._mod_candidates(key, d)
 
     def assign_batch(self, keys, now0: float = 0.0, dt: float = 0.0) -> np.ndarray:
         """Epoch-batched FISH: per sub-chunk one bulk Alg. 1 update, one
@@ -561,35 +609,21 @@ class FishGrouper(Grouper):
         est.assigned[: len(a_l)] = a_l
 
     # -- heterogeneity + elasticity hooks -----------------------------------------
-    def record_capacity_sample(self, worker: int, seconds_per_tuple: float) -> None:
-        self.estimator.record_capacity_sample(worker, seconds_per_tuple)
+    def record_capacity_sample(self, worker: int, seconds_per_tuple: float,
+                               ema: float = 0.5) -> None:
+        self.estimator.record_capacity_sample(worker, seconds_per_tuple, ema)
 
-    def on_membership_change(self, workers: Sequence[int]) -> None:
-        """Elastic add/remove via consistent hashing (paper §5)."""
-        current = set(self.ring.workers)
-        target = set(workers)
-        self._active = sorted(target)
-        self._ring_order.clear()  # candidate caches keyed on membership
+    def probe_route(self, key) -> Optional[int]:
+        if self.use_consistent_hash:
+            return self._ring_prefix(key, 1)[0]
+        return self._active[hash32((key, 0)) % len(self._active)]
+
+    def _grow_arrays(self, new_size: int) -> None:
+        super()._grow_arrays(new_size)
+        self.estimator.ensure_size(new_size)
+
+    def _membership_caches_clear(self) -> None:
         self._mod_cands.clear()
-        for w in current - target:
-            self.ring.remove_worker(w)
-        for w in target - current:
-            self.ring.add_worker(w)
-            if w >= self.num_workers:
-                grow = w + 1 - self.num_workers
-                self.assigned_counts = np.concatenate(
-                    [self.assigned_counts, np.zeros(grow, dtype=np.int64)]
-                )
-                self.estimator.capacities = np.concatenate(
-                    [self.estimator.capacities, np.ones(grow)]
-                )
-                self.estimator.backlog = np.concatenate(
-                    [self.estimator.backlog, np.zeros(grow)]
-                )
-                self.estimator.assigned = np.concatenate(
-                    [self.estimator.assigned, np.zeros(grow)]
-                )
-                self.num_workers = w + 1
 
 
 _GROUPERS = {

@@ -17,8 +17,8 @@ processing capacity ``P_w`` (seconds per tuple — heterogeneous per paper
 Two engines share the metric plumbing (ISSUE 1 tentpole):
 
 * :func:`simulate_stream` — the **batched** engine: the stream is cut into
-  event-free segments (membership events + capacity-sample points are the
-  only cut sites), each segment is routed with one ``grouper.assign_batch``
+  event-free segments (membership/capacity events + capacity-sample points
+  are the only cut sites), each segment is routed with one ``grouper.assign_batch``
   call, and the per-worker FIFO recurrence ``f_j = max(f_{j-1}, t_j) + P_w``
   is solved in closed form with ``np.maximum.accumulate`` — zero Python work
   per tuple.
@@ -27,20 +27,25 @@ Two engines share the metric plumbing (ISSUE 1 tentpole):
   SG/FG/PKG, bounded drift for DC/WC/FISH — see DESIGN.md §6).
 
 Dynamic membership events (paper §5 / RQ4) are supported via
-:class:`MembershipEvent`; capacity sampling for FISH's estimator (Alg. 3) is
-emulated with a periodic noisy sample of the true ``P_w``.
+:class:`MembershipEvent`; mid-stream capacity changes (straggler onset /
+recovery, heterogeneity shifts — Fig. 7) via :class:`CapacityEvent`.  Both
+kinds are segment cut sites in the batched engine and may be mixed freely in
+the ``events`` sequence.  Capacity sampling for FISH's estimator (Alg. 3) is
+emulated with a periodic noisy sample of the true ``P_w`` — a straggler is
+therefore *discovered* at the next sample point, not instantaneously.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
 from .baselines import Grouper
 
 __all__ = [
+    "CapacityEvent",
     "MembershipEvent",
     "StreamMetrics",
     "simulate_stream",
@@ -54,6 +59,15 @@ class MembershipEvent:
 
     at: int
     workers: Sequence[int]
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityEvent:
+    """At tuple index ``at``, set the *true* seconds-per-tuple of the listed
+    workers (straggler onset when slower, recovery when restored)."""
+
+    at: int
+    capacities: Mapping[int, float]
 
 
 @dataclasses.dataclass
@@ -75,7 +89,50 @@ class StreamMetrics:
         return d
 
 
-def _setup(grouper, capacities, arrival_rate, events):
+def _split_events(events, n: int):
+    """Partition a mixed event sequence into (membership, capacity) lists
+    sorted by tuple index.  Events outside [0, n) can never fire (there is
+    no tuple at their index) and are dropped here — keeping them would
+    stall the in-order event cursor and silently suppress later events."""
+    for e in events:
+        if not isinstance(e, (MembershipEvent, CapacityEvent)):
+            raise TypeError(
+                f"unknown event type {type(e).__name__!r}; expected "
+                "MembershipEvent or CapacityEvent"
+            )
+    mem = sorted((e for e in events
+                  if isinstance(e, MembershipEvent) and 0 <= e.at < n),
+                 key=lambda e: e.at)
+    cap = sorted((e for e in events
+                  if isinstance(e, CapacityEvent) and 0 <= e.at < n),
+                 key=lambda e: e.at)
+    return mem, cap
+
+
+def _apply_events(i, mem_ev, ev_idx, cap_ev, cap_idx, grouper, capacities,
+                  active, event_observer):
+    """Fire every event scheduled at tuple index ``i`` (shared by both
+    engines).  Returns the advanced cursors and active set."""
+    while ev_idx < len(mem_ev) and mem_ev[ev_idx].at == i:
+        e = mem_ev[ev_idx]
+        if event_observer is not None:
+            event_observer("pre_membership", grouper, e)
+        active = set(e.workers)
+        grouper.on_membership_change(sorted(active))
+        if event_observer is not None:
+            event_observer("post_membership", grouper, e)
+        ev_idx += 1
+    while cap_idx < len(cap_ev) and cap_ev[cap_idx].at == i:
+        e = cap_ev[cap_idx]
+        for wk, cap in e.capacities.items():
+            capacities[wk] = cap
+        if event_observer is not None:
+            event_observer("capacity", grouper, e)
+        cap_idx += 1
+    return ev_idx, cap_idx, active
+
+
+def _setup(grouper, capacities, arrival_rate, mem_ev, cap_ev):
     """Shared preamble: capacities, initial samples, busy array sizing."""
     w = grouper.num_workers
     if capacities is None:
@@ -87,11 +144,14 @@ def _setup(grouper, capacities, arrival_rate, events):
     for wk in range(w):
         grouper.record_capacity_sample(wk, float(capacities[wk]))
 
-    busy_until = np.zeros(
-        max(w, 1 + max((max(e.workers) for e in events if e.workers),
-                       default=w - 1)),
-        dtype=np.float64,
-    )
+    hi_w = w - 1
+    for e in mem_ev:
+        if e.workers:
+            hi_w = max(hi_w, max(e.workers))
+    for e in cap_ev:
+        if e.capacities:
+            hi_w = max(hi_w, max(e.capacities))
+    busy_until = np.zeros(hi_w + 1, dtype=np.float64)
     if capacities.shape[0] < busy_until.shape[0]:
         pad = np.full(busy_until.shape[0] - capacities.shape[0],
                       capacities.mean())
@@ -160,8 +220,9 @@ def simulate_stream(
     arrival_rate: float = 10_000.0,
     sample_every: int = 5_000,
     sample_noise: float = 0.02,
-    events: Sequence[MembershipEvent] = (),
+    events: Sequence[object] = (),
     seed: int = 0,
+    event_observer: Optional[Callable[[str, Grouper, object], None]] = None,
 ) -> StreamMetrics:
     """Run ``keys`` through ``grouper`` with the batched engine.
 
@@ -169,6 +230,12 @@ def simulate_stream(
                   scaled so ~W tuples are in flight — i.e. balanced feasible).
     arrival_rate: tuples per second entering the source.
     sample_every: period (in tuples) of the Alg.-3 capacity sampling hook.
+    events:       mixed :class:`MembershipEvent` / :class:`CapacityEvent`
+                  sequence; each event index is a segment cut site.
+    event_observer: optional ``f(kind, grouper, event)`` callback fired with
+                  kind "pre_membership"/"post_membership" around membership
+                  changes and "capacity" after a capacity change — the
+                  scenario subsystem's remap-accounting hook.
 
     ``keys`` must be a 1-D integer array of interned key ids for the batched
     path (``repro.data.synthetic`` generators emit int32); anything else
@@ -179,31 +246,33 @@ def simulate_stream(
         return simulate_stream_reference(
             grouper, keys, capacities=capacities, arrival_rate=arrival_rate,
             sample_every=sample_every, sample_noise=sample_noise,
-            events=events, seed=seed,
+            events=events, seed=seed, event_observer=event_observer,
         )
     rng = np.random.default_rng(seed)
     w = grouper.num_workers
-    capacities, busy_until = _setup(grouper, capacities, arrival_rate, events)
-
     n = keys_arr.shape[0]
+    mem_ev, cap_ev = _split_events(events, n)
+    capacities, busy_until = _setup(grouper, capacities, arrival_rate,
+                                    mem_ev, cap_ev)
+
     dt = 1.0 / arrival_rate
     latencies = np.empty(n, dtype=np.float64)
-    ev = sorted(events, key=lambda e: e.at)
     active = set(range(w))
 
-    # segment cut sites: membership events + capacity-sample points
+    # segment cut sites: membership/capacity events + capacity-sample points
     cuts = {0, n}
-    cuts.update(e.at for e in ev if 0 <= e.at < n)
+    cuts.update(e.at for e in mem_ev)
+    cuts.update(e.at for e in cap_ev)
     if sample_every:
         cuts.update(range(sample_every, n, sample_every))
     bounds = sorted(cuts)
     ev_idx = 0
+    cap_idx = 0
 
     for lo, hi in zip(bounds[:-1], bounds[1:]):
-        while ev_idx < len(ev) and ev[ev_idx].at == lo:
-            active = set(ev[ev_idx].workers)
-            grouper.on_membership_change(sorted(active))
-            ev_idx += 1
+        ev_idx, cap_idx, active = _apply_events(
+            lo, mem_ev, ev_idx, cap_ev, cap_idx, grouper, capacities,
+            active, event_observer)
         seg_workers = grouper.assign_batch(keys_arr[lo:hi], lo * dt, dt)
         seg_times = np.arange(lo, hi, dtype=np.float64) * dt
         _advance_fifo(busy_until, seg_workers, seg_times, capacities,
@@ -224,8 +293,9 @@ def simulate_stream_reference(
     arrival_rate: float = 10_000.0,
     sample_every: int = 5_000,
     sample_noise: float = 0.02,
-    events: Sequence[MembershipEvent] = (),
+    events: Sequence[object] = (),
     seed: int = 0,
+    event_observer: Optional[Callable[[str, Grouper, object], None]] = None,
 ) -> StreamMetrics:
     """Per-tuple oracle engine (the original sequential simulator).
 
@@ -235,19 +305,20 @@ def simulate_stream_reference(
     """
     rng = np.random.default_rng(seed)
     w = grouper.num_workers
-    capacities, busy_until = _setup(grouper, capacities, arrival_rate, events)
+    mem_ev, cap_ev = _split_events(events, len(keys))
+    capacities, busy_until = _setup(grouper, capacities, arrival_rate,
+                                    mem_ev, cap_ev)
 
     dt = 1.0 / arrival_rate
     latencies = np.empty(len(keys), dtype=np.float64)
-    ev = sorted(events, key=lambda e: e.at)
     ev_idx = 0
+    cap_idx = 0
     active = set(range(w))
 
     for i, key in enumerate(keys):
-        while ev_idx < len(ev) and ev[ev_idx].at == i:
-            active = set(ev[ev_idx].workers)
-            grouper.on_membership_change(sorted(active))
-            ev_idx += 1
+        ev_idx, cap_idx, active = _apply_events(
+            i, mem_ev, ev_idx, cap_ev, cap_idx, grouper, capacities,
+            active, event_observer)
         now = i * dt
         worker = grouper.assign(key, now)
         start = max(busy_until[worker], now)

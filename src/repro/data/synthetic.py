@@ -70,6 +70,38 @@ def zipf_time_evolving(
     return np.concatenate([part1, part2]).astype(np.int32)
 
 
+def _piecewise_key_chunks(
+    rng: np.random.Generator,
+    num_tuples: int,
+    num_keys: int,
+    z: float,
+    phases: int,
+    chunk: int = 4096,
+) -> Iterator[np.ndarray]:
+    """Lazy piecewise-Zipf key chunks: the hot set rotates (rank->key
+    permutation reshuffles) every ``num_tuples/phases`` tuples.  Shared by
+    :func:`piecewise_zipf` (which concatenates) and :func:`token_stream`
+    (which streams — callers routinely pass ``num_docs=10**9`` as
+    "infinite", so nothing may be materialised upfront).
+
+    Exactly ``phases`` rotations: the last phase absorbs the remainder when
+    ``phases`` does not divide ``num_tuples``."""
+    p = zipf_probs(num_keys, z)
+    per = num_tuples // phases
+    starts = [ph * per for ph in range(phases)] + [num_tuples]
+    perm = np.arange(num_keys)
+    for ph in range(phases):
+        n_phase = starts[ph + 1] - starts[ph]
+        if n_phase <= 0:
+            continue
+        rng.shuffle(perm)  # new rank->key mapping = new hot set
+        done = 0
+        while done < n_phase:
+            n = min(chunk, n_phase - done)
+            yield perm[rng.choice(num_keys, size=n, p=p)]
+            done += n
+
+
 def piecewise_zipf(
     num_tuples: int,
     num_keys: int,
@@ -80,18 +112,9 @@ def piecewise_zipf(
     """Hot set rotates every num_tuples/phases tuples (real-dataset proxy).
     Returns interned int32 key ids."""
     rng = np.random.default_rng(seed)
-    p = zipf_probs(num_keys, z)
-    out = np.empty(num_tuples, dtype=np.int32)
-    per = num_tuples // phases
-    perm = np.arange(num_keys)
-    start = 0
-    for ph in range(phases):
-        n = per if ph < phases - 1 else num_tuples - start
-        rng.shuffle(perm)  # new rank->key mapping = new hot set
-        draws = rng.choice(num_keys, size=n, p=p)
-        out[start : start + n] = perm[draws]
-        start += n
-    return out
+    return np.concatenate(
+        list(_piecewise_key_chunks(rng, num_tuples, num_keys, z, phases))
+    ).astype(np.int32)
 
 
 # Table 2 cardinality-matched proxies (tuples scaled down 50x for CI speed;
@@ -120,11 +143,16 @@ def token_stream(
 
     Token payloads are zipf-distributed with a key-dependent rotation, so a
     language model has learnable (unigram + doc-conditional) structure.
+
+    Keys stream lazily from :func:`_piecewise_key_chunks` (same phase
+    structure as :func:`piecewise_zipf`).  Callers routinely pass
+    ``num_docs=10**9`` as "infinite"; materialising that key array upfront
+    cost ~4 GB and minutes of rng.choice before the first doc was yielded.
     """
     rng = np.random.default_rng(seed)
     p_tok = zipf_probs(vocab_size, token_z)
-    keys = piecewise_zipf(num_docs, num_keys, z=z, phases=phases, seed=seed)
-    for k in keys:
-        draws = rng.choice(vocab_size, size=doc_len, p=p_tok)
-        toks = (draws + (int(k) * 7)) % vocab_size  # doc-conditional shift
-        yield int(k), toks.astype(np.int32)
+    for keys in _piecewise_key_chunks(rng, num_docs, num_keys, z, phases):
+        for k in keys.tolist():
+            draws = rng.choice(vocab_size, size=doc_len, p=p_tok)
+            toks = (draws + (k * 7)) % vocab_size  # doc-conditional shift
+            yield int(k), toks.astype(np.int32)

@@ -25,6 +25,10 @@ class StragglerMitigator:
         self.est = WorkerStateEstimator(np.ones(num_hosts), interval=interval)
         self.min_share = min_share
 
+    def ensure_hosts(self, num_hosts: int) -> None:
+        """Grow the estimator arrays for scale-out (host ids never reused)."""
+        self.est.ensure_size(num_hosts)
+
     def record_step_time(self, host: int, seconds_per_item: float) -> None:
         self.est.record_capacity_sample(host, seconds_per_item)
 

@@ -1,0 +1,435 @@
+"""Declarative time-evolving scenario subsystem (ISSUE 2 tentpole).
+
+The paper's whole argument is behavior under *time-evolving* conditions
+(§5, RQ4, Figs. 7/17): hot-key drift, heterogeneous/straggling workers, and
+elastic membership.  A :class:`Scenario` composes those three orthogonal
+axes declaratively:
+
+* **workload** — the key distribution over time (:class:`WorkloadSpec`):
+  the §6.1 ZF hot-key flip or piecewise-Zipf hot-set drift.
+* **capacity** — static heterogeneity (Fig. 7 fast/slow worker mix) plus a
+  straggler onset/recovery episode (:class:`CapacitySpec`).
+* **churn** — membership ops over the stream (:class:`ChurnOp`):
+  scale-out/in and failures.
+
+A scenario compiles to ``(keys, events, capacities)`` for the DSPE
+simulator (:func:`run_dspe_scenario` — `MembershipEvent`/`CapacityEvent`
+cut sites in the batched engine), or drives the continuous-batching
+:class:`~repro.serving.engine.ServingEngine` with the full runtime control
+plane in the loop (:func:`run_serving_scenario`): failures are *detected*
+by :class:`~repro.runtime.fault.HeartbeatMonitor`, adjudicated by
+:class:`~repro.runtime.fault.RestartPolicy` (elastic-continue vs restart),
+remap cost is accounted by :class:`~repro.runtime.elastic.ElasticPool`,
+and stragglers are observed by
+:class:`~repro.runtime.stragglers.StragglerMitigator`.
+
+``benchmarks/bench_scenarios.py`` runs every grouping scheme through the
+default scenario suite and emits ``artifacts/BENCH_scenarios.json``
+(RQ4/Fig. 17 analogues: latency, throughput, memory overhead, and tuples
+remapped per membership event).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .core import (CapacityEvent, MembershipEvent, make_grouper,
+                   simulate_stream, simulate_stream_reference)
+from .data.synthetic import piecewise_zipf, zipf_time_evolving
+from .runtime.elastic import ElasticPool
+from .runtime.fault import HeartbeatMonitor, RestartPolicy
+from .runtime.stragglers import StragglerMitigator
+from .serving.engine import Request, ServingEngine
+
+__all__ = [
+    "WorkloadSpec",
+    "StragglerSpec",
+    "CapacitySpec",
+    "ChurnOp",
+    "Scenario",
+    "RemapAccountant",
+    "build_keys",
+    "compile_events",
+    "base_capacities",
+    "run_dspe_scenario",
+    "run_serving_scenario",
+    "default_scenarios",
+]
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Key distribution over time.  ``zf_flip`` is the paper's §6.1 ZF
+    generator (hot head flips at 0.8·N); ``piecewise`` rotates the hot set
+    every N/phases tuples (the MemeTracker/Amazon-Movie proxy)."""
+
+    kind: str = "zf_flip"  # "zf_flip" | "piecewise"
+    num_tuples: int = 24_000
+    num_keys: int = 2_400
+    z: float = 1.2
+    phases: int = 6  # piecewise only
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerSpec:
+    """One worker slows down by ``slowdown``× at ``onset`` (stream fraction)
+    and recovers at ``recovery``; ``recovery >= 1.0`` never recovers."""
+
+    worker: int = 0
+    onset: float = 0.3
+    recovery: float = 0.7
+    slowdown: float = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacitySpec:
+    """``hetero`` lists relative worker speeds, cycled over the worker set
+    (paper Fig. 7 fast/slow mix); empty means homogeneous."""
+
+    hetero: Tuple[float, ...] = ()
+    straggler: Optional[StragglerSpec] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnOp:
+    """Membership op at stream fraction ``at``: ``remove`` (failure /
+    scale-in) or ``add`` (scale-out) of ``worker``."""
+
+    at: float
+    op: str  # "remove" | "add"
+    worker: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    workers: int = 8
+    arrival_rate: float = 20_000.0
+    utilization: float = 0.9
+    workload: WorkloadSpec = WorkloadSpec()
+    capacity: CapacitySpec = CapacitySpec()
+    churn: Tuple[ChurnOp, ...] = ()
+
+
+# ---------------------------------------------------------------------------
+# compilation: scenario -> (keys, events, capacities)
+# ---------------------------------------------------------------------------
+
+
+def build_keys(w: WorkloadSpec) -> np.ndarray:
+    if w.kind == "zf_flip":
+        return zipf_time_evolving(w.num_tuples, num_keys=w.num_keys, z=w.z,
+                                  flip_head=max(w.num_keys // 3, 1),
+                                  seed=w.seed)
+    if w.kind == "piecewise":
+        return piecewise_zipf(w.num_tuples, w.num_keys, z=w.z,
+                              phases=w.phases, seed=w.seed)
+    raise ValueError(f"unknown workload kind {w.kind!r}")
+
+
+def relative_speeds(s: Scenario) -> np.ndarray:
+    rel = np.ones(s.workers)
+    if s.capacity.hetero:
+        pat = np.asarray(s.capacity.hetero, dtype=np.float64)
+        rel = pat[np.arange(s.workers) % pat.shape[0]]
+    return rel
+
+
+def base_capacities(s: Scenario) -> np.ndarray:
+    """True seconds/tuple per worker such that aggregate utilisation is
+    ``s.utilization`` at ``s.arrival_rate`` (matches the simulator's
+    homogeneous convention ``0.9·W/λ`` when ``hetero`` is empty)."""
+    rel = relative_speeds(s)
+    return s.utilization * float(rel.sum()) / (s.arrival_rate * rel)
+
+
+def compile_events(s: Scenario, n: int) -> List[object]:
+    """Lower churn + straggler specs onto tuple-index event records."""
+    caps0 = base_capacities(s)
+    mean_cap = float(caps0.mean())
+    events: List[object] = []
+    live = set(range(s.workers))
+    for op in sorted(s.churn, key=lambda o: o.at):
+        at = int(op.at * n)
+        if op.op == "remove":
+            live.discard(op.worker)
+        elif op.op == "add":
+            live.add(op.worker)
+            # newcomers get the mean base capacity unless a straggler spec
+            # or later CapacityEvent says otherwise
+            events.append(CapacityEvent(at=at,
+                                        capacities={op.worker: mean_cap}))
+        else:
+            raise ValueError(f"unknown churn op {op.op!r}")
+        events.append(MembershipEvent(at=at, workers=tuple(sorted(live))))
+    st = s.capacity.straggler
+    if st is not None:
+        base = float(caps0[st.worker]) if st.worker < s.workers else mean_cap
+        events.append(CapacityEvent(at=int(st.onset * n),
+                                    capacities={st.worker: base * st.slowdown}))
+        if st.recovery < 1.0:
+            events.append(CapacityEvent(at=int(st.recovery * n),
+                                        capacities={st.worker: base}))
+    return events
+
+
+# ---------------------------------------------------------------------------
+# remap accounting (Fig. 17 "keys moved per membership event")
+# ---------------------------------------------------------------------------
+
+
+class RemapAccountant:
+    """simulate_stream ``event_observer`` that probes a fixed key sample
+    around each membership event and counts primary-route changes."""
+
+    def __init__(self, sample_keys: Sequence):
+        self.sample = list(sample_keys)
+        self.per_event: List[Dict] = []
+        self._before: Optional[List[Optional[int]]] = None
+
+    def __call__(self, kind: str, grouper, event) -> None:
+        if kind == "pre_membership":
+            self._before = [grouper.probe_route(k) for k in self.sample]
+        elif kind == "post_membership":
+            after = [grouper.probe_route(k) for k in self.sample]
+            row = {"at": int(event.at), "sampled": len(self.sample)}
+            if self.sample and after[0] is not None:
+                moved = sum(1 for a, b in zip(self._before, after) if a != b)
+                row["moved"] = moved
+                row["frac"] = moved / len(self.sample)
+            else:  # scheme with no key affinity (SG)
+                row["moved"] = None
+                row["frac"] = None
+            self.per_event.append(row)
+            self._before = None
+
+
+def _sample_keys(keys: np.ndarray, cap: int) -> List[int]:
+    uniq = np.unique(keys)
+    if uniq.shape[0] > cap:
+        uniq = uniq[np.linspace(0, uniq.shape[0] - 1, cap).astype(np.int64)]
+    return [int(k) for k in uniq]
+
+
+# ---------------------------------------------------------------------------
+# runners
+# ---------------------------------------------------------------------------
+
+
+def run_dspe_scenario(
+    scenario: Scenario,
+    scheme: str,
+    engine: str = "batched",
+    sample_remap: int = 512,
+) -> Dict:
+    """Route the scenario's stream through ``scheme`` in the DSPE simulator
+    and return the paper metrics plus per-event remap accounting."""
+    keys = build_keys(scenario.workload)
+    n = int(keys.shape[0])
+    events = compile_events(scenario, n)
+    caps0 = base_capacities(scenario)
+    g = make_grouper(scheme, scenario.workers)
+    acct = RemapAccountant(_sample_keys(keys, sample_remap))
+    sim = simulate_stream if engine == "batched" else simulate_stream_reference
+    m = sim(g, keys, capacities=caps0, arrival_rate=scenario.arrival_rate,
+            events=events, event_observer=acct)
+    fracs = [e["frac"] for e in acct.per_event if e["frac"] is not None]
+    out = {"scheme": scheme, "engine": engine, "n_tuples": n}
+    out.update(m.row())
+    out["remap_events"] = acct.per_event
+    out["remap_frac_mean"] = float(np.mean(fracs)) if fracs else None
+    return out
+
+
+def run_serving_scenario(
+    scenario: Scenario,
+    scheme: str,
+    num_requests: int = 160,
+    slots_per_replica: int = 4,
+    heartbeat_timeout: float = 3.0,
+    max_ticks: int = 50_000,
+    seed: int = 0,
+) -> Dict:
+    """Drive the ServingEngine through the scenario with the runtime control
+    plane in the loop.
+
+    Requests carry session keys drawn from the scenario workload (so session
+    popularity is time-evolving).  Churn ``remove`` ops silence a replica's
+    heartbeat: the HeartbeatMonitor declares it dead, the RestartPolicy
+    chooses elastic-continue, and ``ServingEngine.fail_replica`` requeues the
+    orphans; the ElasticPool accounts session remap cost.  ``add`` ops scale
+    the engine out.  A straggler episode changes the replica's true speed
+    mid-run; the StragglerMitigator must finger it from speed samples alone.
+    """
+    rng = np.random.default_rng(seed)
+    keys = build_keys(scenario.workload)
+    sessions = keys[np.linspace(0, keys.shape[0] - 1, num_requests)
+                    .astype(np.int64)]
+    rel = relative_speeds(scenario)
+
+    eng = ServingEngine(scenario.workers,
+                        slots_per_replica=slots_per_replica,
+                        tokens_per_tick=rel, grouping=scheme)
+    pool = ElasticPool(range(scenario.workers))
+    mon = HeartbeatMonitor(range(scenario.workers),
+                           timeout=heartbeat_timeout)
+    mit = StragglerMitigator(scenario.workers, interval=4.0)
+    for r in range(scenario.workers):
+        mit.record_step_time(r, 1.0 / rel[r])
+
+    stats = {"rerouted": 0, "remap_fracs": [], "policy_outcomes": [],
+             "straggler_detected": False}
+    sample_sessions = [int(k) for k in np.unique(sessions)]
+
+    def on_rescale(alive: List[int]) -> None:
+        for dead in [r for r in eng.alive if r not in alive]:
+            stats["rerouted"] += eng.fail_replica(dead)
+            if dead in pool.ring:
+                moved = pool.remove_host(dead, sample_sessions)
+                stats["remap_fracs"].append(moved / max(len(sample_sessions), 1))
+
+    policy = RestartPolicy(total_hosts=scenario.workers,
+                           max_lost_frac=0.49, on_rescale=on_rescale)
+
+    # request arrivals spread over ~60% of the nominal decode horizon
+    tokens = rng.integers(4, 12, num_requests)
+    horizon = max(int(1.7 * tokens.sum() / max(rel.sum(), 1e-9)), num_requests)
+    arrive_at = np.linspace(0, int(0.6 * horizon), num_requests).astype(int)
+    reqs = [Request(i, int(s), arrival=float(a), target_tokens=int(t))
+            for i, (s, a, t) in enumerate(zip(sessions, arrive_at, tokens))]
+
+    silenced: set = set()
+    prev_routed = eng.router.assigned_counts.copy()
+    pending_ops = sorted(
+        [(int(op.at * 0.6 * horizon), op) for op in scenario.churn],
+        key=lambda x: x[0])
+    st = scenario.capacity.straggler
+    straggle_at = int(st.onset * 0.6 * horizon) if st else None
+    recover_at = (int(st.recovery * 0.6 * horizon)
+                  if st and st.recovery < 1.0 else None)
+
+    next_req = 0
+    t = 0
+    while len(eng.done) < num_requests and t < max_ticks:
+        now = eng.now
+        while next_req < num_requests and arrive_at[next_req] <= t:
+            eng.submit(reqs[next_req])
+            next_req += 1
+        while pending_ops and pending_ops[0][0] <= t:
+            _, op = pending_ops.pop(0)
+            if op.op == "remove":
+                # crash: decodes nothing from now on and goes silent; the
+                # router keeps black-holing requests at it until the
+                # heartbeat monitor notices and fail_replica requeues them
+                silenced.add(op.worker)
+                eng.speeds[op.worker] = 0.0
+            elif op.op == "add":
+                r = eng.add_replica(speed=1.0, slots=slots_per_replica)
+                policy.total = eng.num_replicas
+                mon.heartbeat(r, now)
+                pool.add_host(r, sample_sessions)
+                mit.ensure_hosts(eng.num_replicas)
+                mit.record_step_time(r, 1.0)
+        if straggle_at is not None and t == straggle_at:
+            eng.set_replica_speed(st.worker, float(rel[st.worker]) / st.slowdown)
+        if recover_at is not None and t == recover_at:
+            eng.set_replica_speed(st.worker, float(rel[st.worker]))
+        # Eq. 1 bookkeeping: work *sent* per replica since the last tick is
+        # the router's assigned-count delta (arrays grow on scale-out)
+        routed = eng.router.assigned_counts
+        if routed.shape[0] > prev_routed.shape[0]:
+            prev_routed = np.concatenate(
+                [prev_routed,
+                 np.zeros(routed.shape[0] - prev_routed.shape[0],
+                          dtype=prev_routed.dtype)])
+        delta = routed - prev_routed
+        prev_routed = routed.copy()
+        for r in eng.alive:
+            if r not in silenced:  # a dead host emits no samples
+                mon.heartbeat(r, now)
+                mit.record_step_time(r, 1.0 / max(float(eng.speeds[r]), 1e-9))
+                mit.record_assigned(r, int(delta[r]))
+        mit.tick(now)
+        if mon.check(now):
+            stats["policy_outcomes"].append(policy.handle(mon, now))
+        if st and t > (straggle_at or 0) and mit.slowest() == st.worker:
+            stats["straggler_detected"] = True
+        eng.tick()
+        t += 1
+
+    m = eng.metrics()
+    return {
+        "scheme": scheme,
+        "completed": len(eng.done),
+        "submitted": num_requests,
+        "ticks": t,
+        "latency_avg": m.latency_avg,
+        "latency_p50": m.latency_p50,
+        "latency_p99": m.latency_p99,
+        "throughput_tokens": m.throughput_tokens,
+        "session_replicas": m.session_replicas,
+        "session_replicas_norm": m.session_replicas_norm,
+        "rerouted": stats["rerouted"],
+        "remap_fracs": stats["remap_fracs"],
+        "policy_outcomes": stats["policy_outcomes"],
+        "straggler_detected": stats["straggler_detected"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# default suite (the bench + CI smoke surface)
+# ---------------------------------------------------------------------------
+
+
+def default_scenarios(num_tuples: int = 24_000, num_keys: int = 2_400,
+                      workers: int = 8) -> List[Scenario]:
+    """The RQ4 scenario suite: hot-key flip, straggler onset/recovery on a
+    heterogeneous pool, scale-out, failure with elastic continue, and a
+    composite churn storm."""
+    return [
+        Scenario(
+            "hot_key_flip", workers=workers,
+            workload=WorkloadSpec("zf_flip", num_tuples, num_keys, z=1.4),
+        ),
+        Scenario(
+            "straggler_recovery", workers=workers,
+            workload=WorkloadSpec("piecewise", num_tuples, num_keys,
+                                  z=1.2, phases=6),
+            capacity=CapacitySpec(
+                hetero=(2.0, 1.0),  # Fig. 7 fast/slow mix
+                straggler=StragglerSpec(worker=1, onset=0.25, recovery=0.65,
+                                        slowdown=4.0),
+            ),
+        ),
+        Scenario(
+            "scale_out", workers=workers,
+            workload=WorkloadSpec("piecewise", num_tuples, num_keys,
+                                  z=1.2, phases=4),
+            churn=(ChurnOp(0.5, "add", workers),),
+        ),
+        Scenario(
+            "failure_elastic", workers=workers,
+            workload=WorkloadSpec("zf_flip", num_tuples, num_keys, z=1.2),
+            churn=(ChurnOp(0.4, "remove", workers - 1),),
+        ),
+        Scenario(
+            "churn_storm", workers=workers,
+            workload=WorkloadSpec("piecewise", num_tuples, num_keys,
+                                  z=1.3, phases=8),
+            capacity=CapacitySpec(
+                straggler=StragglerSpec(worker=0, onset=0.5, recovery=0.8,
+                                        slowdown=3.0),
+            ),
+            churn=(ChurnOp(0.3, "remove", workers - 1),
+                   ChurnOp(0.6, "add", workers)),
+        ),
+    ]

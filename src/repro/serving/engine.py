@@ -80,7 +80,12 @@ class ServingEngine:
         self.now = 0.0
         self._alive = set(range(num_replicas))
         self._token_budget = np.zeros(num_replicas)
+        self._next_slot = [0] * num_replicas  # round-robin decode cursor
         self.total_tokens = 0
+
+    @property
+    def alive(self) -> List[int]:
+        return sorted(self._alive)
 
     # -- ingress -------------------------------------------------------------
     def submit(self, req: Request) -> int:
@@ -99,19 +104,29 @@ class ServingEngine:
                 req = q.popleft()
                 slot = sm.allocate(req.request_id, req.session, self.now)
                 sm.active[slot]["req"] = req
-            # decode: each replica advances `speed` tokens spread over slots
+            # decode: each replica advances `speed` tokens per tick *total*,
+            # spread round-robin over its active slots; a cursor carries the
+            # rotation across passes and ticks so no slot is starved when
+            # speed < active slots (only the fractional part of the budget
+            # carries across ticks)
             self._token_budget[r] += self.speeds[r]
-            steps = int(self._token_budget[r])
-            self._token_budget[r] -= steps
-            for _ in range(steps):
-                if not sm.active:
-                    break
+            budget = int(self._token_budget[r])
+            self._token_budget[r] -= budget
+            while budget > 0 and sm.active:
                 if self.step_fn is not None:
                     self.step_fn(r, list(sm.active.values()))
-                for slot in list(sm.active):
+                ptr = self._next_slot[r]
+                order = sorted(sm.active)
+                order = [s for s in order if s >= ptr] \
+                    + [s for s in order if s < ptr]
+                for slot in order:
+                    if budget <= 0:
+                        break
                     meta = sm.active[slot]
                     meta["tokens"] += 1
                     self.total_tokens += 1
+                    budget -= 1
+                    self._next_slot[r] = slot + 1
                     req = meta["req"]
                     if meta["tokens"] >= req.target_tokens:
                         req.finished = self.now
@@ -134,6 +149,7 @@ class ServingEngine:
         orphans += list(self.queues[r])
         self.queues[r].clear()
         self.slots[r] = SlotManager(self.slots[r].num_slots)
+        self._next_slot[r] = 0
         self.router.on_membership_change(sorted(self._alive))
         for req in orphans:
             self.submit(req)
@@ -145,11 +161,25 @@ class ServingEngine:
         self.num_replicas += 1
         self.speeds = np.concatenate([self.speeds, [speed]])
         self._token_budget = np.concatenate([self._token_budget, [0.0]])
+        self._next_slot.append(0)
         self.slots.append(SlotManager(slots))
         self.queues.append(deque())
         self._alive.add(r)
         self.router.on_membership_change(sorted(self._alive))
+        # propagate the true capacity (P_w = 1/speed) so Alg. 3 routes to the
+        # new replica proportionally to its speed instead of the 1.0 pad;
+        # full-weight sample — there is no real prior to average against
+        self.router.record_capacity_sample(
+            r, 1.0 / max(speed, 1e-9), ema=1.0
+        )
         return r
+
+    def set_replica_speed(self, r: int, speed: float) -> None:
+        """Mid-run speed change (straggler onset / recovery).  The router
+        learns the new capacity through a sample, as it would from the
+        periodic Alg. 3 sampling loop."""
+        self.speeds[r] = speed
+        self.router.record_capacity_sample(r, 1.0 / max(speed, 1e-9))
 
     # -- metrics ------------------------------------------------------------------
     def metrics(self) -> EngineMetrics:

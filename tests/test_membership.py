@@ -1,0 +1,132 @@
+"""Churn behaviour for every grouping scheme (ISSUE 2).
+
+Contract (DESIGN.md §5): no scheme raises on membership change; after an
+event both engines route only to live workers (SG/FG/PKG stay *exact*
+batched-vs-reference across events); scale-out grows per-worker arrays in
+place and the new worker receives traffic; FG keeps consistent-hash key
+affinity on single-host removal; ``ServingEngine.fail_replica`` requeues
+every orphaned request for every routing scheme.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (MembershipEvent, make_grouper, simulate_stream,
+                        simulate_stream_reference)
+from repro.data.synthetic import zipf_time_evolving
+from repro.serving.engine import Request, ServingEngine
+
+SCHEMES = ("sg", "fg", "pkg", "dc", "wc", "fish")
+EXACT_SCHEMES = ("sg", "fg", "pkg")
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return zipf_time_evolving(8_000, num_keys=800, z=1.3, seed=1)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("batched", [True, False], ids=["batch", "scalar"])
+def test_routes_only_to_live_workers(scheme, batched, keys):
+    g = make_grouper(scheme, 8)
+    head, tail = keys[:2_000], keys[2_000:4_000]
+    if batched:
+        g.assign_batch(head, 0.0, 5e-5)
+    else:
+        for i, k in enumerate(head[:400]):
+            g.assign(k, i * 5e-5)
+    before_dead = int(g.assigned_counts[5])
+    g.on_membership_change([0, 1, 2, 3, 4, 6, 7])  # worker 5 leaves
+    if batched:
+        out = g.assign_batch(tail, 0.5, 5e-5)
+    else:
+        out = np.array([g.assign(k, 0.5 + i * 5e-5)
+                        for i, k in enumerate(tail[:400])])
+    assert 5 not in set(out.tolist())
+    assert int(g.assigned_counts[5]) == before_dead
+    assert set(out.tolist()) <= {0, 1, 2, 3, 4, 6, 7}
+
+
+@pytest.mark.parametrize("scheme", EXACT_SCHEMES)
+def test_exact_schemes_agree_across_membership_events(scheme, keys):
+    """Batched and reference engines stay bit-identical through churn."""
+    ev = [
+        MembershipEvent(at=2_500, workers=tuple(w for w in range(8) if w != 3)),
+        MembershipEvent(at=5_500, workers=tuple(range(9))),  # 3 back + 8 new
+    ]
+    m_ref = simulate_stream_reference(make_grouper(scheme, 8), keys,
+                                      arrival_rate=2e4, events=ev)
+    m_bat = simulate_stream(make_grouper(scheme, 8), keys,
+                            arrival_rate=2e4, events=ev)
+    for field, v_ref in m_ref.row().items():
+        assert m_bat.row()[field] == pytest.approx(v_ref, rel=1e-9), field
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_simulator_membership_event_no_scheme_raises(scheme, keys):
+    ev = [MembershipEvent(at=4_000, workers=tuple(w for w in range(8)
+                                                  if w != 3))]
+    for sim in (simulate_stream, simulate_stream_reference):
+        g = make_grouper(scheme, 8)
+        m = sim(g, keys, arrival_rate=2e4, events=ev)
+        assert m.execution_time > 0
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_scale_out_grows_arrays_and_uses_new_workers(scheme, keys):
+    g = make_grouper(scheme, 4)
+    g.assign_batch(keys[:2_000], 0.0, 5e-5)
+    g.on_membership_change(range(6))  # workers 4, 5 join
+    assert g.assigned_counts.shape[0] == 6
+    assert g.num_workers == 6
+    if scheme == "fish":
+        assert g.estimator.capacities.shape[0] == 6
+        assert g.estimator.backlog.shape[0] == 6
+    g.assign_batch(keys[2_000:], 0.5, 5e-5)
+    assert int(g.assigned_counts[4] + g.assigned_counts[5]) > 0
+
+
+@pytest.mark.parametrize("scheme", ["dc", "wc"])
+def test_dc_wc_theta_tracks_worker_growth(scheme):
+    g = make_grouper(scheme, 8)
+    assert g.theta == pytest.approx(0.25 / 8)
+    g.on_membership_change(range(16))
+    assert g.theta == pytest.approx(0.25 / 16)
+
+
+def test_fg_consistent_hash_affinity_on_removal():
+    w = 8
+    g = make_grouper("fg", w)
+    sample = [int(k) for k in range(2_000)]
+    before = {k: g.probe_route(k) for k in sample}
+    removed = 5
+    g.on_membership_change([x for x in range(w) if x != removed])
+    moved = 0
+    for k, b in before.items():
+        a = g.probe_route(k)
+        assert a != removed
+        if b == removed:
+            moved += 1
+        else:
+            # ring monotonicity: keys on surviving workers never move
+            assert a == b, k
+    # only the removed worker's arc moves: ~1/W of keys, bounded well below 2/W
+    assert moved / len(sample) < 2.0 / w
+    assert moved > 0
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_fail_replica_requeues_all_orphans(scheme):
+    rng = np.random.default_rng(4)
+    eng = ServingEngine(num_replicas=4, slots_per_replica=2, grouping=scheme)
+    n = 50
+    for i in range(n):
+        eng.submit(Request(i, int(rng.integers(0, 40)), arrival=float(i),
+                           target_tokens=int(rng.integers(3, 8))))
+    for _ in range(4):
+        eng.tick()
+    eng.fail_replica(2)
+    eng.run(until_done=n, max_ticks=20_000)
+    assert len(eng.done) == n
+    assert len({r.request_id for r in eng.done}) == n  # no dupes, no loss
+    assert len(eng.slots[2]) == 0 and not eng.queues[2]

@@ -1,0 +1,169 @@
+"""Scenario subsystem + CapacityEvent behaviour (ISSUE 2 tentpole)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CapacityEvent, MembershipEvent, make_grouper,
+                        simulate_stream, simulate_stream_reference)
+from repro.data.synthetic import zipf_time_evolving
+from repro.scenarios import (CapacitySpec, ChurnOp, Scenario, StragglerSpec,
+                             WorkloadSpec, base_capacities, build_keys,
+                             compile_events, default_scenarios,
+                             run_dspe_scenario, run_serving_scenario)
+
+SCHEMES = ("sg", "fg", "pkg", "dc", "wc", "fish")
+
+
+# ---------------------------------------------------------------------------
+# CapacityEvent plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_event_straggler_slows_then_recovery_bounds():
+    keys = zipf_time_evolving(10_000, num_keys=1_000, z=1.2, seed=2)
+    w = 4
+    caps = np.full(w, 0.9 * w / 2e4)
+    base = simulate_stream(make_grouper("sg", w), keys, capacities=caps,
+                          arrival_rate=2e4)
+    onset = [CapacityEvent(at=3_000, capacities={1: float(caps[1]) * 6})]
+    slow = simulate_stream(make_grouper("sg", w), keys, capacities=caps,
+                          arrival_rate=2e4, events=onset)
+    both = onset + [CapacityEvent(at=6_000, capacities={1: float(caps[1])})]
+    rec = simulate_stream(make_grouper("sg", w), keys, capacities=caps,
+                          arrival_rate=2e4, events=both)
+    assert slow.latency_p99 > base.latency_p99 * 2
+    assert rec.execution_time < slow.execution_time
+
+
+def test_capacity_event_exact_between_engines():
+    keys = zipf_time_evolving(8_000, num_keys=800, z=1.2, seed=3)
+    ev = [CapacityEvent(at=2_000, capacities={0: 9e-4, 2: 1e-4}),
+          MembershipEvent(at=5_000, workers=(0, 1, 2)),
+          CapacityEvent(at=6_000, capacities={0: 3e-4})]
+    m_ref = simulate_stream_reference(make_grouper("fg", 4), keys,
+                                      arrival_rate=2e4, events=ev)
+    m_bat = simulate_stream(make_grouper("fg", 4), keys,
+                            arrival_rate=2e4, events=ev)
+    for field, v_ref in m_ref.row().items():
+        assert m_bat.row()[field] == pytest.approx(v_ref, rel=1e-9), field
+
+
+# ---------------------------------------------------------------------------
+# scenario compilation
+# ---------------------------------------------------------------------------
+
+
+def test_compile_events_lowering():
+    sc = Scenario(
+        "t", workers=4,
+        workload=WorkloadSpec("piecewise", 1_000, 100),
+        capacity=CapacitySpec(hetero=(2.0, 1.0),
+                              straggler=StragglerSpec(worker=1, onset=0.5,
+                                                      recovery=0.8,
+                                                      slowdown=4.0)),
+        churn=(ChurnOp(0.25, "remove", 3), ChurnOp(0.75, "add", 4)),
+    )
+    events = compile_events(sc, 1_000)
+    mem = [e for e in events if isinstance(e, MembershipEvent)]
+    cap = [e for e in events if isinstance(e, CapacityEvent)]
+    assert [e.at for e in mem] == [250, 750]
+    assert list(mem[0].workers) == [0, 1, 2]
+    assert list(mem[1].workers) == [0, 1, 2, 4]
+    # straggler onset/recovery + newcomer capacity definition
+    assert {e.at for e in cap} == {500, 800, 750}
+    caps0 = base_capacities(sc)
+    onset = next(e for e in cap if e.at == 500)
+    assert onset.capacities[1] == pytest.approx(caps0[1] * 4.0)
+    # heterogeneous speeds: worker 0 twice as fast as worker 1
+    assert caps0[1] == pytest.approx(2.0 * caps0[0])
+
+
+def test_out_of_range_events_do_not_stall_cursor():
+    keys = zipf_time_evolving(2_000, num_keys=200, z=1.2, seed=5)
+    ev = [MembershipEvent(at=-1, workers=(0, 1, 2, 3)),   # before the stream
+          MembershipEvent(at=500, workers=(0, 1)),        # must still fire
+          MembershipEvent(at=5_000, workers=(0,))]        # past the end
+    for sim in (simulate_stream, simulate_stream_reference):
+        g = make_grouper("fg", 4)
+        sim(g, keys, arrival_rate=2e4, events=ev)
+        assert g.active_workers == [0, 1]
+
+
+def test_piecewise_zipf_remainder_stays_in_last_phase():
+    from repro.data.synthetic import piecewise_zipf
+    out = piecewise_zipf(5_000, 600, phases=6, seed=0)  # 6 ∤ 5000
+    assert out.shape == (5_000,) and out.dtype == np.int32
+    # the remainder extends the final phase instead of opening a 7th hot
+    # set: the last 2 tuples draw from the same hot set as the tuples
+    # right before them (same top key within the final 833+remainder span)
+    per = 5_000 // 6
+    last_phase = out[5 * per:]
+    assert last_phase.shape[0] == 5_000 - 5 * per
+
+
+def test_workload_kinds_and_validation():
+    assert build_keys(WorkloadSpec("zf_flip", 500, 50)).shape == (500,)
+    assert build_keys(WorkloadSpec("piecewise", 500, 50)).shape == (500,)
+    with pytest.raises(ValueError):
+        build_keys(WorkloadSpec("nope", 10, 5))
+    with pytest.raises(ValueError):
+        compile_events(Scenario("t", churn=(ChurnOp(0.1, "explode", 0),)), 100)
+
+
+# ---------------------------------------------------------------------------
+# DSPE scenario runs: every scheme through every default scenario
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_dspe_default_suite_all_schemes(scheme):
+    for sc in default_scenarios(num_tuples=3_000, num_keys=300, workers=6):
+        out = run_dspe_scenario(sc, scheme)
+        assert out["throughput"] > 0, sc.name
+        assert out["memory_overhead"] > 0, sc.name
+        has_membership = bool(sc.churn)
+        if has_membership:
+            assert out["remap_events"], sc.name
+            if scheme == "sg":
+                assert out["remap_frac_mean"] is None
+            else:
+                # consistent hashing: single-host churn remaps a ~1/W slice
+                assert out["remap_frac_mean"] < 0.5, (sc.name, out)
+
+
+def test_reference_engine_scenario_smoke():
+    sc = default_scenarios(num_tuples=1_500, num_keys=200, workers=4)[3]
+    out = run_dspe_scenario(sc, "pkg", engine="reference")
+    assert out["engine"] == "reference"
+    assert out["throughput"] > 0
+
+
+# ---------------------------------------------------------------------------
+# serving scenario runs: control plane in the loop
+# ---------------------------------------------------------------------------
+
+
+def test_serving_failure_scenario_elastic_continue():
+    sc = next(s for s in default_scenarios(3_000, 300, 6)
+              if s.name == "failure_elastic")
+    out = run_serving_scenario(sc, "fish", num_requests=60)
+    assert out["completed"] == out["submitted"] == 60
+    # heartbeat monitor detected the silent replica; policy chose rescale
+    assert "rescaled" in out["policy_outcomes"]
+    assert out["remap_fracs"] and max(out["remap_fracs"]) < 0.6
+
+
+def test_serving_straggler_scenario_detected():
+    sc = next(s for s in default_scenarios(3_000, 300, 6)
+              if s.name == "straggler_recovery")
+    out = run_serving_scenario(sc, "sg", num_requests=60)
+    assert out["completed"] == 60
+    assert out["straggler_detected"]
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_serving_churn_storm_all_schemes(scheme):
+    sc = next(s for s in default_scenarios(2_400, 240, 6)
+              if s.name == "churn_storm")
+    out = run_serving_scenario(sc, scheme, num_requests=48)
+    assert out["completed"] == 48, out

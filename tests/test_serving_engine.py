@@ -1,0 +1,77 @@
+"""ServingEngine accounting fixes (ISSUE 2 satellites).
+
+* a replica decodes at most ``speed`` tokens per tick *total* (spread over
+  its active slots), not ``speed × active_slots``;
+* ``add_replica`` propagates the new replica's true capacity (1/speed) to
+  the router so Alg. 3 routes proportionally after scale-out.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving.engine import Request, ServingEngine
+
+
+@pytest.mark.parametrize("speed", [1.0, 2.0, 3.0])
+def test_tokens_per_tick_bounded_by_speed(speed):
+    eng = ServingEngine(num_replicas=1, slots_per_replica=4,
+                        tokens_per_tick=np.array([speed]), grouping="fish")
+    for i in range(12):  # keep all 4 slots saturated
+        eng.submit(Request(i, f"s{i % 3}", arrival=0.0, target_tokens=25))
+    ticks = 40
+    prev = 0
+    for _ in range(ticks):
+        eng.tick()
+        delta = eng.total_tokens - prev
+        prev = eng.total_tokens
+        assert delta <= int(np.ceil(speed)), "decoded more than speed/tick"
+    assert eng.total_tokens <= speed * ticks + 1
+    # saturated replica should also achieve ~speed tokens/tick
+    assert eng.total_tokens >= 0.9 * speed * ticks
+
+
+def test_fractional_speed_accumulates():
+    eng = ServingEngine(num_replicas=1, slots_per_replica=2,
+                        tokens_per_tick=np.array([0.5]), grouping="fish")
+    eng.submit(Request(0, "s", arrival=0.0, target_tokens=5))
+    for _ in range(20):
+        eng.tick()
+    # 0.5 tokens/tick -> 5 target tokens need ~10 ticks, done well within 20
+    assert len(eng.done) == 1
+    assert eng.total_tokens == 5
+
+
+def test_throughput_bounded_by_aggregate_speed():
+    rng = np.random.default_rng(0)
+    speeds = np.array([1.0, 2.0])
+    eng = ServingEngine(num_replicas=2, slots_per_replica=4,
+                        tokens_per_tick=speeds, grouping="fish")
+    for i in range(40):
+        eng.submit(Request(i, f"hot{rng.integers(0, 3)}", arrival=0.0,
+                           target_tokens=int(rng.integers(4, 10))))
+    eng.run(until_done=40)
+    assert len(eng.done) == 40
+    m = eng.metrics()
+    assert m.throughput_tokens <= speeds.sum() + 1e-9
+
+
+def test_add_replica_capacity_reaches_router():
+    eng = ServingEngine(num_replicas=2, slots_per_replica=2, grouping="fish")
+    r = eng.add_replica(speed=4.0, slots=2)
+    caps = eng.router.estimator.capacities
+    assert caps.shape[0] == 3
+    # exact 1/speed, not the 1.0 scale-out pad
+    assert caps[r] == pytest.approx(0.25)
+
+    # the fast newcomer must actually attract routed work (Alg. 3 argmin)
+    for i in range(30):
+        eng.submit(Request(i, f"cold{i}", arrival=0.0, target_tokens=4))
+    assert int(eng.router.assigned_counts[r]) > 0
+
+
+def test_set_replica_speed_updates_router():
+    eng = ServingEngine(num_replicas=2, slots_per_replica=2, grouping="fish")
+    eng.set_replica_speed(1, 0.25)  # straggler onset: 4x slower
+    assert eng.speeds[1] == 0.25
+    # EMA sample moved the estimate toward 4.0 s/token
+    assert eng.router.estimator.capacities[1] > 2.0
