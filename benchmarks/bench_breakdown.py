@@ -7,16 +7,19 @@ import time
 
 import numpy as np
 
-from repro.core import FishGrouper, FishParams, simulate_stream
+from repro.core import simulate_edge
+from repro.topology import FishConfig
 
 from .common import Reporter, run_scheme, zf_keys
 
 
 def _fish(keys, w, caps=None, **pkw):
-    g = FishGrouper(w, params=FishParams(**pkw))
     if caps is None:
         caps = np.full(w, 0.9 * w / 20_000.0)
-    return g, simulate_stream(g, keys, capacities=caps, arrival_rate=20_000.0)
+    # grouper discovers capacities via sampling — no oracle seeding
+    g = FishConfig(**pkw).build(w)
+    return g, simulate_edge(g, keys, capacities=caps,
+                            arrival_rate=20_000.0).metrics
 
 
 def run(rep: Reporter) -> dict:
@@ -65,9 +68,9 @@ def run(rep: Reporter) -> dict:
         g_on, m_on = _fish(keys, w, caps=caps)
         # hwa off: estimator believes all workers are equal and gets no
         # capacity samples (previous studies' count-based assignment)
-        g_off = FishGrouper(w, params=FishParams())
-        m_off = simulate_stream(g_off, keys, capacities=caps,
-                                arrival_rate=20_000.0, sample_every=0)
+        g_off = FishConfig().build(w)
+        m_off = simulate_edge(g_off, keys, capacities=caps,
+                              arrival_rate=20_000.0, sample_every=0).metrics
         us = (time.time() - t0) * 1e6
         ratio = m_off.execution_time / m_on.execution_time
         out[("hwa", w)] = ratio

@@ -5,7 +5,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core import FishGrouper, MembershipEvent, simulate_stream
+from repro.core import MembershipEvent, simulate_edge
+from repro.topology import FishConfig
 
 from .common import N_TUPLES, Reporter, zf_keys
 
@@ -19,12 +20,12 @@ def run(rep: Reporter) -> dict:
                             ("remove", list(range(w - 1)))):
             ev = [MembershipEvent(at=N_TUPLES // 2, workers=new_set)]
             t0 = time.time()
-            g_ch = FishGrouper(w, use_consistent_hash=True)
-            m_ch = simulate_stream(g_ch, keys, arrival_rate=20_000.0,
-                                   events=ev)
-            g_no = FishGrouper(w, use_consistent_hash=False)
-            m_no = simulate_stream(g_no, keys, arrival_rate=20_000.0,
-                                   events=ev)
+            g_ch = FishConfig(use_consistent_hash=True).build(w)
+            m_ch = simulate_edge(g_ch, keys, arrival_rate=20_000.0,
+                                 events=ev).metrics
+            g_no = FishConfig(use_consistent_hash=False).build(w)
+            m_no = simulate_edge(g_no, keys, arrival_rate=20_000.0,
+                                 events=ev).metrics
             us = (time.time() - t0) * 1e6
             ratio = m_no.memory_overhead / max(m_ch.memory_overhead, 1)
             out[(z, op)] = ratio

@@ -1,12 +1,17 @@
 """Paper Figs. 9-10: execution time (normalised to SG) on the real-dataset
-proxies (AM, MT) and the synthetic ZF dataset across skews."""
+proxies (AM, MT) and the synthetic ZF dataset across skews.
+
+Runs through the unified topology engine protocol (ISSUE 3): every scheme
+is a single-edge :class:`~repro.topology.Topology` on
+:class:`~repro.topology.SimulatorEngine` via :func:`common.run_edge`.
+"""
 
 from __future__ import annotations
 
 import time
 
 from .common import Reporter, WORKERS, am_proxy_keys, mt_proxy_keys, \
-    run_scheme, zf_keys
+    run_edge, zf_keys
 
 _SCHEMES = ("pkg", "dc", "wc", "fish")
 
@@ -15,10 +20,10 @@ def run(rep: Reporter) -> dict:
     out = {}
     for ds_name, keys in (("am", am_proxy_keys()), ("mt", mt_proxy_keys())):
         for w in WORKERS:
-            _, m_sg = run_scheme("sg", keys, w)
+            m_sg = run_edge("sg", keys, w)
             for scheme in _SCHEMES:
                 t0 = time.time()
-                _, m = run_scheme(scheme, keys, w)
+                m = run_edge(scheme, keys, w)
                 us = (time.time() - t0) * 1e6
                 norm = m.execution_time / m_sg.execution_time
                 out[(ds_name, scheme, w)] = norm
@@ -27,10 +32,10 @@ def run(rep: Reporter) -> dict:
     for z in (1.0, 1.4, 1.8):
         keys = zf_keys(z)
         for w in (16, 128):
-            _, m_sg = run_scheme("sg", keys, w)
+            m_sg = run_edge("sg", keys, w)
             for scheme in _SCHEMES:
                 t0 = time.time()
-                _, m = run_scheme(scheme, keys, w)
+                m = run_edge(scheme, keys, w)
                 us = (time.time() - t0) * 1e6
                 norm = m.execution_time / m_sg.execution_time
                 out[("zf", z, scheme, w)] = norm

@@ -7,15 +7,17 @@ import time
 
 import numpy as np
 
-from repro.core import FishGrouper, FishParams, simulate_stream
+from repro.core import simulate_edge
+from repro.topology import FishConfig
 
 from .common import Reporter, zf_keys
 
 
 def _run_fish(keys, w, alpha=0.2, theta_frac=0.25):
-    g = FishGrouper(w, params=FishParams(alpha=alpha, theta_frac=theta_frac))
     caps = np.full(w, 0.9 * w / 20_000.0)
-    return g, simulate_stream(g, keys, capacities=caps, arrival_rate=20_000.0)
+    g = FishConfig(alpha=alpha, theta_frac=theta_frac).build(w)
+    return g, simulate_edge(g, keys, capacities=caps,
+                            arrival_rate=20_000.0).metrics
 
 
 def run(rep: Reporter) -> dict:

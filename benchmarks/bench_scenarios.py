@@ -5,8 +5,11 @@ The RQ4/Fig. 17 analogue: each scenario from
 onset/recovery on a heterogeneous pool, scale-out, failure with elastic
 continue, churn storm) is run for all six grouping schemes through
 
-* the batched DSPE simulator (latency / throughput / memory overhead /
-  imbalance + tuples remapped per membership event), and
+* the batched DSPE simulator — each scenario lowered onto a single-edge
+  :class:`~repro.topology.Topology` and executed by the unified
+  :class:`~repro.topology.SimulatorEngine` (ISSUE 3) — reporting latency /
+  throughput / memory overhead / imbalance + tuples remapped per
+  membership event, and
 * the continuous-batching ServingEngine with the runtime control plane
   (heartbeat failure detection, restart policy, elastic pool remap
   accounting, straggler mitigation) in the loop.

@@ -1,0 +1,130 @@
+"""Multi-stage dataflow topologies × all six schemes (ISSUE 3 tentpole).
+
+Two DAG shapes, both fed by a skewed time-evolving source so a hot source
+key fans into hot downstream partitions (the multi-hop skew scenario the
+topology API opens up):
+
+* ``word_count``     — the classic 2-stage split→count pipeline: shuffle to
+  the splitters, the scheme under test on the counting edge (each sentence
+  key deterministically fans into ``FANOUT`` word keys, so a hot sentence
+  makes hot words).
+* ``split_count_agg`` — 3 stages: split→count→aggregate, the scheme under
+  test on both keyed edges; the aggregate stage rekeys onto a small vocab
+  (many hot words collapse onto one aggregation partition).
+
+Every scheme runs through the batched :class:`SimulatorEngine`; the
+2-stage topology additionally runs through the
+:class:`ServingTopologyEngine` (continuous-batching replica pools) — the
+same ``Topology`` object through both engines.  Emits
+``artifacts/BENCH_topology.json`` with per-edge latency percentiles,
+imbalance and memory overhead.  Module-level constants are the CI-scale
+knobs (see .github/workflows/ci.yml).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.data.synthetic import zipf_time_evolving
+from repro.topology import (Edge, ServingTopologyEngine, ShuffleConfig,
+                            SimulatorEngine, Source, Stage, Topology,
+                            config_for, hashed_fanout, project_mod)
+
+from .common import ARTIFACT_DIR, Reporter, SCHEMES
+
+N_TUPLES = 20_000
+N_KEYS = 2_000
+Z = 1.5
+ARRIVAL_RATE = 20_000.0
+SPLIT_WORKERS = 8
+COUNT_WORKERS = 16
+AGG_WORKERS = 8
+FANOUT = 4
+WORD_VOCAB = 1_000
+AGG_VOCAB = 64
+SERVING_REQUESTS = 192
+
+
+def word_count_topology(spec) -> Topology:
+    """split→count with ``spec`` grouping the counting edge."""
+    return Topology(
+        name="word_count",
+        stages=(
+            Stage("split", parallelism=SPLIT_WORKERS,
+                  transform=hashed_fanout(FANOUT, WORD_VOCAB)),
+            Stage("count", parallelism=COUNT_WORKERS),
+        ),
+        edges=(
+            Edge("source", "split", ShuffleConfig()),
+            Edge("split", "count", spec),
+        ),
+    )
+
+
+def split_count_agg_topology(spec) -> Topology:
+    """split→count→aggregate with ``spec`` on both keyed edges."""
+    return Topology(
+        name="split_count_agg",
+        stages=(
+            Stage("split", parallelism=SPLIT_WORKERS,
+                  transform=hashed_fanout(FANOUT, WORD_VOCAB)),
+            Stage("count", parallelism=COUNT_WORKERS,
+                  transform=project_mod(AGG_VOCAB)),
+            Stage("agg", parallelism=AGG_WORKERS),
+        ),
+        edges=(
+            Edge("source", "split", ShuffleConfig()),
+            Edge("split", "count", spec),
+            Edge("count", "agg", spec),
+        ),
+    )
+
+
+def _brief(report) -> str:
+    er = report.edge("count")
+    return (f"count p99={er.latency_p99:.4g} mem={er.memory_overhead} "
+            f"imb={er.imbalance:.3f} e2e p99={report.e2e_latency_p99:.4g}")
+
+
+def run(rep: Reporter) -> dict:
+    keys = zipf_time_evolving(N_TUPLES, num_keys=N_KEYS, z=Z, seed=0)
+    src = Source(keys, arrival_rate=ARRIVAL_RATE)
+    sim = SimulatorEngine()
+    serving = ServingTopologyEngine(max_requests=SERVING_REQUESTS)
+    out = {
+        "n_tuples": N_TUPLES, "n_keys": N_KEYS, "z": Z, "fanout": FANOUT,
+        "word_vocab": WORD_VOCAB, "agg_vocab": AGG_VOCAB,
+        "serving_requests": SERVING_REQUESTS,
+        "two_stage": {}, "three_stage": {}, "two_stage_serving": {},
+    }
+    for scheme in SCHEMES:
+        spec = config_for(scheme)
+
+        t0 = time.time()
+        r2 = sim.run(word_count_topology(spec), src)
+        rep.add(f"topology/word_count/dspe/{scheme}",
+                (time.time() - t0) * 1e6, _brief(r2))
+        out["two_stage"][scheme] = r2.to_dict()
+
+        t0 = time.time()
+        r3 = sim.run(split_count_agg_topology(spec), src)
+        rep.add(f"topology/split_count_agg/dspe/{scheme}",
+                (time.time() - t0) * 1e6, _brief(r3))
+        out["three_stage"][scheme] = r3.to_dict()
+
+        t0 = time.time()
+        rs = serving.run(word_count_topology(spec), src)
+        dropped = sum(e.dropped for e in rs.edges)
+        rep.add(f"topology/word_count/serving/{scheme}",
+                (time.time() - t0) * 1e6,
+                _brief(rs) + f" dropped={dropped}")
+        out["two_stage_serving"][scheme] = rs.to_dict()
+
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, "BENCH_topology.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    rep.add("topology/artifact", 0.0, path)
+    return out

@@ -10,8 +10,10 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
-from repro.core import make_grouper, simulate_stream, simulate_stream_reference
+from repro.core import simulate_edge
 from repro.data.synthetic import piecewise_zipf, zipf_time_evolving
+from repro.topology import (Edge, SimulatorEngine, Source, Stage, Topology,
+                            build_grouper, config_for)
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 
@@ -24,19 +26,37 @@ WORKERS = (16, 32, 64, 128)
 SCHEMES = ("fg", "pkg", "sg", "dc", "wc", "fish")
 
 
-def run_scheme(scheme: str, keys, workers: int, capacities=None,
+def run_scheme(scheme, keys, workers: int, capacities=None,
                arrival_rate: float = 20_000.0, simulator: str = "batched",
                **kw):
-    """Route ``keys`` through ``scheme``; ``simulator`` picks the batched
-    engine (default — ISSUE 1) or the per-tuple ``"reference"`` oracle."""
+    """Route ``keys`` through one grouped edge of ``scheme`` (a scheme name
+    or a typed :class:`~repro.topology.SchemeConfig`); ``simulator`` picks
+    the batched engine (default — ISSUE 1) or the per-tuple ``"reference"``
+    oracle.  Returns ``(grouper, StreamMetrics)``."""
     if simulator not in ("batched", "reference"):
         raise ValueError(f"unknown simulator {simulator!r}")
-    g = make_grouper(scheme, workers)
     if capacities is None:
         capacities = np.full(workers, 0.9 * workers / arrival_rate)
-    sim = simulate_stream if simulator == "batched" else simulate_stream_reference
-    m = sim(g, keys, capacities=capacities, arrival_rate=arrival_rate, **kw)
-    return g, m
+    # no oracle capacities for the grouper: capacity-aware schemes discover
+    # P_w through the sampling hook (matches the legacy make_grouper path)
+    g = build_grouper(scheme, workers)
+    res = simulate_edge(g, keys, mode=simulator, capacities=capacities,
+                        arrival_rate=arrival_rate, **kw)
+    return g, res.metrics
+
+
+def run_edge(scheme, keys, workers: int,
+             arrival_rate: float = 20_000.0, simulator: str = "batched"):
+    """One grouped edge through the unified engine protocol (ISSUE 3):
+    builds a single-edge :class:`Topology` and runs it on
+    :class:`SimulatorEngine`.  Returns the :class:`EdgeReport`."""
+    spec = scheme if not isinstance(scheme, str) else config_for(scheme)
+    topo = Topology(name=f"edge-{spec.scheme}",
+                    stages=(Stage("worker", parallelism=workers),),
+                    edges=(Edge("source", "worker", spec),))
+    rep = SimulatorEngine(mode=simulator).run(
+        topo, Source(np.asarray(keys), arrival_rate=arrival_rate))
+    return rep.edge("worker")
 
 
 def am_proxy_keys(seed=0):
@@ -53,10 +73,18 @@ def zf_keys(z: float, seed=2):
 
 
 class Reporter:
-    """Collects ``name,us_per_call,derived`` rows (benchmarks/run.py CSV)."""
+    """Collects ``name,us_per_call,derived`` rows (benchmarks/run.py CSV).
+
+    Failures are recorded separately from measurements: an erroring module
+    must never contribute a zero-valued row to the CSV that downstream
+    artifact parsing would read as a measurement.  ``csv()`` emits
+    measurements only; ``failure_summary()`` renders the failures (run.py
+    prints it to stderr and sets the exit code).
+    """
 
     def __init__(self):
         self.rows: List[Dict] = []
+        self.failures: List[Dict] = []
 
     def timeit(self, name: str, fn: Callable, derived_fn=None):
         t0 = time.time()
@@ -71,6 +99,10 @@ class Reporter:
         self.rows.append({"name": name, "us_per_call": round(us, 1),
                           "derived": derived})
 
+    def add_failure(self, name: str, error: BaseException):
+        self.failures.append({"name": name,
+                              "error": f"{type(error).__name__}: {error}"})
+
     def csv(self) -> str:
         buf = io.StringIO()
         w = csv.DictWriter(buf, fieldnames=["name", "us_per_call", "derived"])
@@ -78,3 +110,7 @@ class Reporter:
         for r in self.rows:
             w.writerow(r)
         return buf.getvalue()
+
+    def failure_summary(self) -> str:
+        return "\n".join(f"FAILED {f['name']}: {f['error']}"
+                         for f in self.failures)

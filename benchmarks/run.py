@@ -22,7 +22,7 @@ def main() -> None:
 
     from . import (bench_breakdown, bench_chash, bench_deploy, bench_grouping,
                    bench_latency, bench_memory, bench_moe, bench_motivating,
-                   bench_params, bench_scenarios, roofline)
+                   bench_params, bench_scenarios, bench_topology, roofline)
 
     modules = [
         ("bench_motivating", bench_motivating),   # Figs. 2-3
@@ -33,24 +33,26 @@ def main() -> None:
         ("bench_breakdown", bench_breakdown),     # Figs. 14-16
         ("bench_chash", bench_chash),             # Fig. 17
         ("bench_scenarios", bench_scenarios),     # RQ4 scenario suite (ISSUE 2)
+        ("bench_topology", bench_topology),       # multi-stage DAGs (ISSUE 3)
         ("bench_deploy", bench_deploy),           # Figs. 18-20
         ("bench_moe", bench_moe),                 # beyond-paper MoE routing
         ("roofline", roofline),                   # §Roofline table
     ]
 
     rep = Reporter()
-    failures = 0
     for name, mod in modules:
         if args.only and args.only not in name:
             continue
         try:
             mod.run(rep)
         except Exception as e:
-            failures += 1
             traceback.print_exc()
-            rep.add(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")
+            # recorded apart from the measurements: the CSV must carry only
+            # real numbers, never a zero-valued ERROR row
+            rep.add_failure(name, e)
     print(rep.csv())
-    if failures:
+    if rep.failures:
+        print(rep.failure_summary(), file=sys.stderr)
         sys.exit(1)
 
 

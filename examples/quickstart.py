@@ -1,28 +1,35 @@
-"""Quickstart: FISH vs all baseline groupings on the paper's ZF dataset.
+"""Quickstart: FISH vs all baseline groupings through the topology API.
 
 Reproduces the paper's headline in one minute on CPU: FISH gets Shuffle-level
-load balance at Field-Grouping-level memory.
+load balance at Field-Grouping-level memory.  Each scheme is a typed config
+on the edge of a one-stage :class:`~repro.topology.Topology`, run by the
+DSPE :class:`~repro.topology.SimulatorEngine`; the same ``Topology`` object
+would run unchanged on the serving engine (``ServingTopologyEngine``).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
-from repro.core import make_grouper, simulate_stream
 from repro.data.synthetic import zipf_time_evolving
+from repro.topology import (Edge, SimulatorEngine, Source, Stage, Topology,
+                            config_for)
 
 
 def main() -> None:
     workers = 32
     keys = zipf_time_evolving(40_000, num_keys=4_000, z=1.4, seed=0)
-    caps = np.full(workers, 0.9 * workers / 20_000.0)
+    source = Source(keys, arrival_rate=20_000.0)
+    engine = SimulatorEngine()
 
     print(f"{'scheme':8s} {'exec(s)':>9s} {'p99 lat(ms)':>12s} "
           f"{'mem (vs FG)':>12s} {'imbalance':>10s}")
     base_exec = None
     for scheme in ("sg", "fg", "pkg", "dc", "wc", "fish"):
-        g = make_grouper(scheme, workers)
-        m = simulate_stream(g, keys, capacities=caps, arrival_rate=20_000.0)
+        topo = Topology(
+            name=f"quickstart-{scheme}",
+            stages=(Stage("worker", parallelism=workers),),
+            edges=(Edge("source", "worker", config_for(scheme)),),
+        )
+        m = engine.run(topo, source).edge("worker")
         if scheme == "sg":
             base_exec = m.execution_time
         print(f"{scheme:8s} {m.execution_time:9.3f} "

@@ -24,8 +24,10 @@ from .fish import (
 )
 from .stream import (
     CapacityEvent,
+    EdgeResult,
     MembershipEvent,
     StreamMetrics,
+    simulate_edge,
     simulate_stream,
     simulate_stream_reference,
 )
@@ -51,8 +53,10 @@ __all__ = [
     "epoch_update",
     "init_fish_state",
     "CapacityEvent",
+    "EdgeResult",
     "MembershipEvent",
     "StreamMetrics",
+    "simulate_edge",
     "simulate_stream",
     "simulate_stream_reference",
 ]

@@ -626,19 +626,22 @@ class FishGrouper(Grouper):
         self._mod_cands.clear()
 
 
-_GROUPERS = {
-    "sg": ShuffleGrouping,
-    "fg": FieldGrouping,
-    "pkg": PartialKeyGrouping,
-    "dc": DChoices,
-    "wc": WChoices,
-    "fish": FishGrouper,
-}
-
-
 def make_grouper(name: str, num_workers: int, **kwargs) -> Grouper:
-    try:
-        cls = _GROUPERS[name.lower()]
-    except KeyError:
-        raise ValueError(f"unknown grouping scheme {name!r}; one of {list(_GROUPERS)}")
-    return cls(num_workers, **kwargs)
+    """Deprecated stringly-typed factory — a thin shim over the typed-config
+    registry in :mod:`repro.topology.configs`.
+
+    New code uses one config per scheme (``FishConfig(...).build(w)``) or
+    :func:`repro.topology.configs.build_grouper`; this shim keeps legacy
+    ``make_grouper(name, **kwargs)`` call sites working unchanged.
+    """
+    import warnings
+
+    warnings.warn(
+        "make_grouper is deprecated; use the typed scheme configs in "
+        "repro.topology.configs (e.g. FishConfig().build(num_workers)) or "
+        "repro.topology.configs.build_grouper",
+        DeprecationWarning, stacklevel=2,
+    )
+    from ..topology.configs import legacy_build
+
+    return legacy_build(name, num_workers, **kwargs)

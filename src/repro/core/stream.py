@@ -14,17 +14,24 @@ processing capacity ``P_w`` (seconds per tuple — heterogeneous per paper
   FG-normalised form.
 * ``imbalance``       — (max_w load − mean_w load) / mean_w load.
 
-Two engines share the metric plumbing (ISSUE 1 tentpole):
+Two engines share the metric plumbing (ISSUE 1 tentpole), unified behind
+:func:`simulate_edge` (ISSUE 3): one grouped *edge* of a dataflow topology,
+taking an optional explicit per-tuple arrival-time array (so successive
+edges can feed the finish times of one stage into the FIFO queues of the
+next) and returning per-tuple finish times alongside the metrics.
 
-* :func:`simulate_stream` — the **batched** engine: the stream is cut into
-  event-free segments (membership/capacity events + capacity-sample points
-  are the only cut sites), each segment is routed with one ``grouper.assign_batch``
-  call, and the per-worker FIFO recurrence ``f_j = max(f_{j-1}, t_j) + P_w``
-  is solved in closed form with ``np.maximum.accumulate`` — zero Python work
-  per tuple.
-* :func:`simulate_stream_reference` — the original per-tuple loop, kept as
-  the oracle for the batched-vs-reference equivalence tests (exact for
-  SG/FG/PKG, bounded drift for DC/WC/FISH — see DESIGN.md §6).
+* ``mode="batched"`` — the stream is cut into event-free segments
+  (membership/capacity events + capacity-sample points are the only cut
+  sites), each segment is routed with one ``grouper.assign_batch`` call, and
+  the per-worker FIFO recurrence ``f_j = max(f_{j-1}, t_j) + P_w`` is solved
+  in closed form with ``np.maximum.accumulate`` — zero Python work per tuple.
+* ``mode="reference"`` — the original per-tuple loop, kept as the oracle for
+  the batched-vs-reference equivalence tests (exact for SG/FG/PKG, bounded
+  drift for DC/WC/FISH — see DESIGN.md §6).
+
+:func:`simulate_stream` / :func:`simulate_stream_reference` remain as
+deprecated single-hop shims over :func:`simulate_edge`; new code goes
+through :mod:`repro.topology` (ISSUE 3 — one engine protocol).
 
 Dynamic membership events (paper §5 / RQ4) are supported via
 :class:`MembershipEvent`; mid-stream capacity changes (straggler onset /
@@ -38,7 +45,8 @@ therefore *discovered* at the next sample point, not instantaneously.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Mapping, Optional, Sequence
+import warnings
+from typing import Callable, Dict, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -46,8 +54,10 @@ from .baselines import Grouper
 
 __all__ = [
     "CapacityEvent",
+    "EdgeResult",
     "MembershipEvent",
     "StreamMetrics",
+    "simulate_edge",
     "simulate_stream",
     "simulate_stream_reference",
 ]
@@ -87,6 +97,15 @@ class StreamMetrics:
         d = dataclasses.asdict(self)
         d.pop("per_worker_busy")
         return d
+
+
+@dataclasses.dataclass
+class EdgeResult:
+    """One grouped edge's outcome: paper metrics + per-tuple finish times
+    (the arrival times of the downstream stage's input stream)."""
+
+    metrics: StreamMetrics
+    finishes: np.ndarray
 
 
 def _split_events(events, n: int):
@@ -212,10 +231,12 @@ def _advance_fifo(busy_until: np.ndarray, workers: np.ndarray,
     latencies_out[order] = finishes - ts
 
 
-def simulate_stream(
+def simulate_edge(
     grouper: Grouper,
     keys: Sequence,
     *,
+    times: Optional[np.ndarray] = None,
+    mode: str = "batched",
     capacities: Optional[np.ndarray] = None,
     arrival_rate: float = 10_000.0,
     sample_every: int = 5_000,
@@ -223,31 +244,53 @@ def simulate_stream(
     events: Sequence[object] = (),
     seed: int = 0,
     event_observer: Optional[Callable[[str, Grouper, object], None]] = None,
-) -> StreamMetrics:
-    """Run ``keys`` through ``grouper`` with the batched engine.
+) -> EdgeResult:
+    """Run one grouped edge: route ``keys`` through ``grouper`` and advance
+    the destination stage's per-worker FIFO queues.
 
+    times:        optional per-tuple arrival times (nondecreasing).  ``None``
+                  means a uniform source at ``arrival_rate`` (tuple ``i``
+                  arrives at ``i / arrival_rate``).  A topology engine passes
+                  the *finish* times of the upstream stage here, which is how
+                  a stream propagates through successive grouped edges.
+    mode:         "batched" (segment-wise closed-form FIFO — ISSUE 1) or
+                  "reference" (the per-tuple oracle interpreter).
     capacities:   true seconds/tuple per worker (default: all 1/arrival_rate
                   scaled so ~W tuples are in flight — i.e. balanced feasible).
-    arrival_rate: tuples per second entering the source.
     sample_every: period (in tuples) of the Alg.-3 capacity sampling hook.
     events:       mixed :class:`MembershipEvent` / :class:`CapacityEvent`
-                  sequence; each event index is a segment cut site.
+                  sequence; ``at`` indexes this edge's input stream and is a
+                  segment cut site in the batched mode.
     event_observer: optional ``f(kind, grouper, event)`` callback fired with
                   kind "pre_membership"/"post_membership" around membership
                   changes and "capacity" after a capacity change — the
-                  scenario subsystem's remap-accounting hook.
+                  remap-accounting hook.
 
     ``keys`` must be a 1-D integer array of interned key ids for the batched
-    path (``repro.data.synthetic`` generators emit int32); anything else
-    falls back to :func:`simulate_stream_reference`.
+    mode (``repro.data.synthetic`` generators emit int32); anything else
+    silently takes the reference interpreter.
     """
-    keys_arr = np.asarray(keys)
-    if keys_arr.ndim != 1 or keys_arr.dtype.kind not in "iu":
-        return simulate_stream_reference(
-            grouper, keys, capacities=capacities, arrival_rate=arrival_rate,
-            sample_every=sample_every, sample_noise=sample_noise,
-            events=events, seed=seed, event_observer=event_observer,
-        )
+    if mode not in ("batched", "reference"):
+        raise ValueError(f"unknown mode {mode!r}; 'batched' or 'reference'")
+    if times is not None:
+        times = np.asarray(times, dtype=np.float64)
+        if times.shape[0] != len(keys):
+            raise ValueError(
+                f"times has {times.shape[0]} entries for {len(keys)} keys")
+    if mode == "batched":
+        keys_arr = np.asarray(keys)
+        if keys_arr.ndim == 1 and keys_arr.dtype.kind in "iu":
+            return _edge_batched(
+                grouper, keys_arr, times, capacities, arrival_rate,
+                sample_every, sample_noise, events, seed, event_observer)
+    return _edge_reference(
+        grouper, keys, times, capacities, arrival_rate,
+        sample_every, sample_noise, events, seed, event_observer)
+
+
+def _edge_batched(grouper, keys_arr, times, capacities, arrival_rate,
+                  sample_every, sample_noise, events, seed,
+                  event_observer) -> EdgeResult:
     rng = np.random.default_rng(seed)
     w = grouper.num_workers
     n = keys_arr.shape[0]
@@ -256,6 +299,9 @@ def simulate_stream(
                                     mem_ev, cap_ev)
 
     dt = 1.0 / arrival_rate
+    if times is not None and n > 1:
+        # mean spacing of the explicit stream — FISH's estimator-tick pacing
+        dt = float((times[-1] - times[0]) / (n - 1)) or dt
     latencies = np.empty(n, dtype=np.float64)
     active = set(range(w))
 
@@ -273,8 +319,13 @@ def simulate_stream(
         ev_idx, cap_idx, active = _apply_events(
             lo, mem_ev, ev_idx, cap_ev, cap_idx, grouper, capacities,
             active, event_observer)
-        seg_workers = grouper.assign_batch(keys_arr[lo:hi], lo * dt, dt)
-        seg_times = np.arange(lo, hi, dtype=np.float64) * dt
+        if times is None:
+            seg_times = np.arange(lo, hi, dtype=np.float64) * dt
+            now0 = lo * dt
+        else:
+            seg_times = times[lo:hi]
+            now0 = float(seg_times[0])
+        seg_workers = grouper.assign_batch(keys_arr[lo:hi], now0, dt)
         _advance_fifo(busy_until, seg_workers, seg_times, capacities,
                       latencies[lo:hi])
         if sample_every and hi % sample_every == 0:
@@ -282,35 +333,25 @@ def simulate_stream(
                 noisy = capacities[wk] * (1.0 + rng.normal(0.0, sample_noise))
                 grouper.record_capacity_sample(wk, float(max(noisy, 1e-12)))
 
-    return _metrics(grouper, busy_until, latencies, n)
+    all_times = (np.arange(n, dtype=np.float64) * dt if times is None
+                 else times)
+    return EdgeResult(_metrics(grouper, busy_until, latencies, n),
+                      all_times + latencies)
 
 
-def simulate_stream_reference(
-    grouper: Grouper,
-    keys: Sequence,
-    *,
-    capacities: Optional[np.ndarray] = None,
-    arrival_rate: float = 10_000.0,
-    sample_every: int = 5_000,
-    sample_noise: float = 0.02,
-    events: Sequence[object] = (),
-    seed: int = 0,
-    event_observer: Optional[Callable[[str, Grouper, object], None]] = None,
-) -> StreamMetrics:
-    """Per-tuple oracle engine (the original sequential simulator).
-
-    Semantically authoritative: the batched engine is tested against this
-    (exact for stateless-per-tuple schemes, bounded drift for the
-    frequency-tracking ones).
-    """
+def _edge_reference(grouper, keys, times, capacities, arrival_rate,
+                    sample_every, sample_noise, events, seed,
+                    event_observer) -> EdgeResult:
     rng = np.random.default_rng(seed)
     w = grouper.num_workers
-    mem_ev, cap_ev = _split_events(events, len(keys))
+    n = len(keys)
+    mem_ev, cap_ev = _split_events(events, n)
     capacities, busy_until = _setup(grouper, capacities, arrival_rate,
                                     mem_ev, cap_ev)
 
     dt = 1.0 / arrival_rate
-    latencies = np.empty(len(keys), dtype=np.float64)
+    latencies = np.empty(n, dtype=np.float64)
+    finishes = np.empty(n, dtype=np.float64)
     ev_idx = 0
     cap_idx = 0
     active = set(range(w))
@@ -319,15 +360,46 @@ def simulate_stream_reference(
         ev_idx, cap_idx, active = _apply_events(
             i, mem_ev, ev_idx, cap_ev, cap_idx, grouper, capacities,
             active, event_observer)
-        now = i * dt
+        now = i * dt if times is None else float(times[i])
         worker = grouper.assign(key, now)
         start = max(busy_until[worker], now)
         finish = start + capacities[worker]
         busy_until[worker] = finish
         latencies[i] = finish - now
+        finishes[i] = finish
         if sample_every and (i + 1) % sample_every == 0:
             for wk in sorted(active):
                 noisy = capacities[wk] * (1.0 + rng.normal(0.0, sample_noise))
                 grouper.record_capacity_sample(wk, float(max(noisy, 1e-12)))
 
-    return _metrics(grouper, busy_until, latencies, len(keys))
+    return EdgeResult(_metrics(grouper, busy_until, latencies, n), finishes)
+
+
+def _warn_legacy(name: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated; build a Topology and run it through "
+        "repro.topology (SimulatorEngine / ServingTopologyEngine), or call "
+        "repro.core.simulate_edge for a single grouped edge",
+        DeprecationWarning, stacklevel=3,
+    )
+
+
+def simulate_stream(grouper: Grouper, keys: Sequence, **kwargs
+                    ) -> StreamMetrics:
+    """Deprecated single-hop shim: the batched engine on a uniform source.
+
+    Kept so legacy call sites keep working; new code builds a
+    :class:`repro.topology.Topology` and runs it through an engine, or calls
+    :func:`simulate_edge` directly.  Accepts the same keyword arguments as
+    :func:`simulate_edge` (minus ``times``/``mode``).
+    """
+    _warn_legacy("simulate_stream")
+    return simulate_edge(grouper, keys, mode="batched", **kwargs).metrics
+
+
+def simulate_stream_reference(grouper: Grouper, keys: Sequence, **kwargs
+                              ) -> StreamMetrics:
+    """Deprecated single-hop shim: the per-tuple oracle on a uniform source
+    (see :func:`simulate_stream`)."""
+    _warn_legacy("simulate_stream_reference")
+    return simulate_edge(grouper, keys, mode="reference", **kwargs).metrics

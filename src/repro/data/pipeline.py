@@ -20,11 +20,11 @@ worker = a training host's input queue:
 from __future__ import annotations
 
 from collections import deque
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from ..core.baselines import FishGrouper, Grouper, make_grouper
+from ..core.baselines import Grouper
 from ..core.fish import FishParams
 
 __all__ = ["StreamingPipeline"]
@@ -38,21 +38,26 @@ class StreamingPipeline:
         num_hosts: int,
         seq_len: int,
         batch_per_host: int,
-        grouping: str = "fish",
+        grouping: Union[str, "SchemeConfig"] = "fish",
         fish_params: Optional[FishParams] = None,
         host_capacities: Optional[np.ndarray] = None,
         seed: int = 0,
     ):
+        from ..topology.configs import FishConfig, SchemeConfig, config_for
+
         self.num_hosts = num_hosts
         self.seq_len = seq_len
         self.batch_per_host = batch_per_host
-        if grouping == "fish":
-            self.grouper: Grouper = FishGrouper(
-                num_hosts, params=fish_params or FishParams(),
-                capacities=host_capacities,
-            )
-        else:
-            self.grouper = make_grouper(grouping, num_hosts)
+        # grouping: a typed SchemeConfig (ISSUE 3) or a scheme name
+        if not isinstance(grouping, SchemeConfig):
+            grouping = config_for(grouping)
+        if isinstance(grouping, FishConfig) and fish_params is not None:
+            grouping = FishConfig.from_params(
+                fish_params, interval=grouping.interval,
+                virtual_nodes=grouping.virtual_nodes,
+                use_consistent_hash=grouping.use_consistent_hash)
+        self.grouper: Grouper = grouping.build(num_hosts,
+                                               capacities=host_capacities)
         self._buffers: Dict[int, deque] = {h: deque() for h in range(num_hosts)}
         self._clock = 0.0
         self._docs_routed = np.zeros(num_hosts, dtype=np.int64)
@@ -133,7 +138,11 @@ class StreamingPipeline:
                           ) -> Optional[Dict[str, np.ndarray]]:
         """Assemble one global batch; with ``steal`` (default) starved hosts
         borrow tokens from the longest backlog (work stealing — the batch-
-        assembly form of straggler mitigation)."""
+        assembly form of straggler mitigation).  Stolen tokens are a
+        *contiguous run from the donor's head*, so both the donor's and the
+        recipient's token streams stay in ingestion order (``pop()`` from
+        the tail would hand the recipient a reversed slice of the donor's
+        newest tokens)."""
         hosts = self._active_hosts()
         if steal:
             need = self.seq_len * self.batch_per_host + self.batch_per_host
@@ -147,7 +156,8 @@ class StreamingPipeline:
                     take = min(deficit, len(dbuf) - need)
                     if take <= 0:
                         return None
-                    self._buffers[h].extend(dbuf.pop() for _ in range(take))
+                    self._buffers[h].extend(
+                        dbuf.popleft() for _ in range(take))
         parts = []
         for h in hosts:
             p = self.next_host_batch(h)
@@ -172,13 +182,30 @@ class StreamingPipeline:
         return self.grouper.memory_overhead()
 
     def rescale(self, hosts: Sequence[int]) -> None:
-        """Elastic membership change (consistent hashing remap, §5)."""
+        """Elastic membership change (consistent hashing remap, §5).
+
+        A removed host's backlog is *redistributed*, not stranded: its
+        buffered tokens move as one in-order run to a surviving host chosen
+        by the grouper (ring route for key-affine schemes; least-loaded for
+        SG), and the dead buffer is deleted — otherwise ``_active_hosts``
+        would keep the dead host and ``ready()``/``next_global_batch()``
+        would wait forever on a queue nothing drains.
+        """
+        hosts = sorted(int(h) for h in hosts)
+        live = set(hosts)
         self.grouper.on_membership_change(hosts)
         for h in hosts:
             self._buffers.setdefault(h, deque())
         for h in list(self._buffers):
-            if h not in hosts and not self._buffers[h]:
-                del self._buffers[h]
+            if h in live:
+                continue
+            buf = self._buffers.pop(h)
+            if buf:
+                target = self.grouper.probe_route(("rescale", h))
+                if target is None or target not in live:
+                    target = min(hosts,
+                                 key=lambda x: len(self._buffers[x]))
+                self._buffers[target].extend(buf)
         self.num_hosts = len(hosts)
         grow = max(hosts) + 1 - self._docs_routed.shape[0]
         if grow > 0:

@@ -12,12 +12,15 @@ axes declaratively:
 * **churn** — membership ops over the stream (:class:`ChurnOp`):
   scale-out/in and failures.
 
-A scenario compiles to ``(keys, events, capacities)`` for the DSPE
-simulator (:func:`run_dspe_scenario` — `MembershipEvent`/`CapacityEvent`
-cut sites in the batched engine), or drives the continuous-batching
+A scenario compiles to a single-edge :class:`~repro.topology.Topology`
+plus :class:`~repro.topology.ScopedEvent` records and runs through the
+unified engine protocol (ISSUE 3): :func:`run_dspe_scenario` drives
+:class:`~repro.topology.SimulatorEngine` (batched or per-tuple reference
+mode) and returns the flattened :class:`~repro.topology.EdgeReport` row;
+:func:`run_serving_scenario` drives the continuous-batching
 :class:`~repro.serving.engine.ServingEngine` with the full runtime control
-plane in the loop (:func:`run_serving_scenario`): failures are *detected*
-by :class:`~repro.runtime.fault.HeartbeatMonitor`, adjudicated by
+plane in the loop: failures are *detected* by
+:class:`~repro.runtime.fault.HeartbeatMonitor`, adjudicated by
 :class:`~repro.runtime.fault.RestartPolicy` (elastic-continue vs restart),
 remap cost is accounted by :class:`~repro.runtime.elastic.ElasticPool`,
 and stragglers are observed by
@@ -32,17 +35,19 @@ remapped per membership event).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .core import (CapacityEvent, MembershipEvent, make_grouper,
-                   simulate_stream, simulate_stream_reference)
+from .core import CapacityEvent, MembershipEvent
 from .data.synthetic import piecewise_zipf, zipf_time_evolving
 from .runtime.elastic import ElasticPool
 from .runtime.fault import HeartbeatMonitor, RestartPolicy
 from .runtime.stragglers import StragglerMitigator
 from .serving.engine import Request, ServingEngine
+from .topology import (Edge, EdgeReport, RemapAccountant, ScopedEvent,
+                       SimulatorEngine, Source, Stage, Topology, config_for)
+from .topology.engine import _imbalance, _percentiles
 
 __all__ = [
     "WorkloadSpec",
@@ -50,10 +55,11 @@ __all__ = [
     "CapacitySpec",
     "ChurnOp",
     "Scenario",
-    "RemapAccountant",
+    "RemapAccountant",  # re-exported from repro.topology.engine
     "build_keys",
     "compile_events",
     "base_capacities",
+    "scenario_topology",
     "run_dspe_scenario",
     "run_serving_scenario",
     "default_scenarios",
@@ -183,46 +189,21 @@ def compile_events(s: Scenario, n: int) -> List[object]:
 
 
 # ---------------------------------------------------------------------------
-# remap accounting (Fig. 17 "keys moved per membership event")
+# runners (through the unified topology engine protocol — ISSUE 3)
 # ---------------------------------------------------------------------------
 
-
-class RemapAccountant:
-    """simulate_stream ``event_observer`` that probes a fixed key sample
-    around each membership event and counts primary-route changes."""
-
-    def __init__(self, sample_keys: Sequence):
-        self.sample = list(sample_keys)
-        self.per_event: List[Dict] = []
-        self._before: Optional[List[Optional[int]]] = None
-
-    def __call__(self, kind: str, grouper, event) -> None:
-        if kind == "pre_membership":
-            self._before = [grouper.probe_route(k) for k in self.sample]
-        elif kind == "post_membership":
-            after = [grouper.probe_route(k) for k in self.sample]
-            row = {"at": int(event.at), "sampled": len(self.sample)}
-            if self.sample and after[0] is not None:
-                moved = sum(1 for a, b in zip(self._before, after) if a != b)
-                row["moved"] = moved
-                row["frac"] = moved / len(self.sample)
-            else:  # scheme with no key affinity (SG)
-                row["moved"] = None
-                row["frac"] = None
-            self.per_event.append(row)
-            self._before = None
+_STAGE = "worker"  # the single-hop scenario stage name
 
 
-def _sample_keys(keys: np.ndarray, cap: int) -> List[int]:
-    uniq = np.unique(keys)
-    if uniq.shape[0] > cap:
-        uniq = uniq[np.linspace(0, uniq.shape[0] - 1, cap).astype(np.int64)]
-    return [int(k) for k in uniq]
-
-
-# ---------------------------------------------------------------------------
-# runners
-# ---------------------------------------------------------------------------
+def scenario_topology(scenario: Scenario, scheme: str) -> Topology:
+    """The scenario as a one-edge topology: source → grouped worker pool
+    with the scenario's heterogeneous base capacities."""
+    return Topology(
+        name=scenario.name,
+        stages=(Stage(_STAGE, parallelism=scenario.workers,
+                      capacities=tuple(base_capacities(scenario))),),
+        edges=(Edge("source", _STAGE, config_for(scheme)),),
+    )
 
 
 def run_dspe_scenario(
@@ -235,18 +216,15 @@ def run_dspe_scenario(
     and return the paper metrics plus per-event remap accounting."""
     keys = build_keys(scenario.workload)
     n = int(keys.shape[0])
-    events = compile_events(scenario, n)
-    caps0 = base_capacities(scenario)
-    g = make_grouper(scheme, scenario.workers)
-    acct = RemapAccountant(_sample_keys(keys, sample_remap))
-    sim = simulate_stream if engine == "batched" else simulate_stream_reference
-    m = sim(g, keys, capacities=caps0, arrival_rate=scenario.arrival_rate,
-            events=events, event_observer=acct)
-    fracs = [e["frac"] for e in acct.per_event if e["frac"] is not None]
+    events = [ScopedEvent(_STAGE, e) for e in compile_events(scenario, n)]
+    sim = SimulatorEngine(mode=engine, remap_sample=sample_remap)
+    rep = sim.run(scenario_topology(scenario, scheme),
+                  Source(keys, arrival_rate=scenario.arrival_rate), events)
+    er = rep.edge(_STAGE)
     out = {"scheme": scheme, "engine": engine, "n_tuples": n}
-    out.update(m.row())
-    out["remap_events"] = acct.per_event
-    out["remap_frac_mean"] = float(np.mean(fracs)) if fracs else None
+    out.update(er.row())
+    out["remap_events"] = er.remap_events
+    out["remap_frac_mean"] = er.remap_frac_mean
     return out
 
 
@@ -276,6 +254,8 @@ def run_serving_scenario(
                     .astype(np.int64)]
     rel = relative_speeds(scenario)
 
+    # the scheme name (not config_for(scheme)) keeps the engine's serving
+    # default of a 4-tick FISH estimator interval
     eng = ServingEngine(scenario.workers,
                         slots_per_replica=slots_per_replica,
                         tokens_per_tick=rel, grouping=scheme)
@@ -367,6 +347,22 @@ def run_serving_scenario(
         t += 1
 
     m = eng.metrics()
+    lats = np.array([r.finished - r.arrival for r in eng.done
+                     if r.finished >= 0])
+    avg, p50, p95, p99 = _percentiles(lats)
+    report = EdgeReport(  # the unified per-edge schema (TopologyReport rows)
+        edge=f"source->{_STAGE}", src="source", dst=_STAGE, scheme=scheme,
+        workers=eng.num_replicas, n_tuples=num_requests,
+        execution_time=float(eng.now), latency_avg=avg, latency_p50=p50,
+        latency_p95=p95, latency_p99=p99,
+        throughput=m.throughput_tokens,
+        memory_overhead=eng.router.memory_overhead(),
+        memory_overhead_norm=m.session_replicas_norm,
+        imbalance=_imbalance(eng.router.assigned_counts),
+        remap_frac_mean=(float(np.mean(stats["remap_fracs"]))
+                         if stats["remap_fracs"] else None),
+        dropped=num_requests - len(eng.done),
+    )
     return {
         "scheme": scheme,
         "completed": len(eng.done),
@@ -382,6 +378,7 @@ def run_serving_scenario(
         "remap_fracs": stats["remap_fracs"],
         "policy_outcomes": stats["policy_outcomes"],
         "straggler_detected": stats["straggler_detected"],
+        "report": report.to_dict(),
     }
 
 

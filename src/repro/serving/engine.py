@@ -20,11 +20,10 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, List, Optional, Union
 
 import numpy as np
 
-from ..core.baselines import FishGrouper, make_grouper
 from ..core.fish import FishParams
 from .kvcache import SlotManager
 
@@ -58,21 +57,29 @@ class ServingEngine:
         num_replicas: int,
         slots_per_replica: int = 8,
         tokens_per_tick: Optional[np.ndarray] = None,  # replica speed (hetero)
-        grouping: str = "fish",
+        grouping: Union[str, "SchemeConfig"] = "fish",
         fish_params: Optional[FishParams] = None,
         step_fn: Optional[Callable[[int, List[dict]], None]] = None,
     ):
+        from ..topology.configs import FishConfig, SchemeConfig, config_for
+
         self.num_replicas = num_replicas
         speeds = (np.ones(num_replicas) if tokens_per_tick is None
                   else np.asarray(tokens_per_tick, dtype=np.float64))
         self.speeds = speeds
         caps = 1.0 / np.maximum(speeds, 1e-9)  # seconds(ticks)/token = P_w
-        if grouping == "fish":
-            self.router = FishGrouper(num_replicas,
-                                      params=fish_params or FishParams(),
-                                      capacities=caps, interval=4.0)
-        else:
-            self.router = make_grouper(grouping, num_replicas)
+        # grouping: a typed SchemeConfig (ISSUE 3) or a scheme name.  The
+        # name "fish" defaults to a 4-tick estimator interval (the engine's
+        # historical pacing); an explicit FishConfig keeps its own interval.
+        if not isinstance(grouping, SchemeConfig):
+            grouping = (FishConfig(interval=4.0) if grouping == "fish"
+                        else config_for(grouping))
+        if isinstance(grouping, FishConfig) and fish_params is not None:
+            grouping = FishConfig.from_params(
+                fish_params, interval=grouping.interval,
+                virtual_nodes=grouping.virtual_nodes,
+                use_consistent_hash=grouping.use_consistent_hash)
+        self.router = grouping.build(num_replicas, capacities=caps)
         self.slots = [SlotManager(slots_per_replica) for _ in range(num_replicas)]
         self.queues: List[deque] = [deque() for _ in range(num_replicas)]
         self.step_fn = step_fn

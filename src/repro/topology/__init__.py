@@ -1,0 +1,57 @@
+"""Unified dataflow topology API (ISSUE 3) — the front door to the system.
+
+Typed per-scheme configs (:mod:`.configs`), declarative multi-stage
+topologies (:mod:`.graph`), and one engine protocol with a DSPE simulator
+and a serving-engine adapter behind it (:mod:`.engine`)::
+
+    from repro.topology import (Edge, FishConfig, ShuffleConfig,
+                                SimulatorEngine, Source, Stage, Topology,
+                                hashed_fanout)
+
+    topo = Topology(
+        name="word_count",
+        stages=(Stage("split", parallelism=4,
+                      transform=hashed_fanout(4, vocab=1_000)),
+                Stage("count", parallelism=8)),
+        edges=(Edge("source", "split", ShuffleConfig()),
+               Edge("split", "count", FishConfig())),
+    )
+    report = SimulatorEngine().run(topo, Source(keys, arrival_rate=2e4))
+    print(report.edge("count").latency_p99)
+"""
+
+from .configs import (SCHEME_CONFIGS, DChoicesConfig, FieldConfig,
+                      FishConfig, PKGConfig, SchemeConfig, ShuffleConfig,
+                      WChoicesConfig, build_grouper, config_for)
+from .engine import (EdgeReport, Engine, RemapAccountant, ServingTopologyEngine,
+                     SimulatorEngine, TopologyReport)
+from .graph import (SOURCE, Edge, KeyTransform, ScopedEvent, Source, Stage,
+                    Topology, hashed_fanout, project_mod)
+
+__all__ = [
+    "SCHEME_CONFIGS",
+    "SchemeConfig",
+    "ShuffleConfig",
+    "FieldConfig",
+    "PKGConfig",
+    "DChoicesConfig",
+    "WChoicesConfig",
+    "FishConfig",
+    "config_for",
+    "build_grouper",
+    "SOURCE",
+    "KeyTransform",
+    "hashed_fanout",
+    "project_mod",
+    "Stage",
+    "Edge",
+    "Topology",
+    "Source",
+    "ScopedEvent",
+    "Engine",
+    "EdgeReport",
+    "TopologyReport",
+    "RemapAccountant",
+    "SimulatorEngine",
+    "ServingTopologyEngine",
+]

@@ -1,0 +1,440 @@
+"""Topology engines — one protocol, two implementations (ISSUE 3 tentpole).
+
+:class:`Engine` is the protocol: ``run(topology, source, events) ->
+TopologyReport``.  Implementations:
+
+* :class:`SimulatorEngine` — the DSPE discrete-event simulator.  Each
+  grouped edge runs through :func:`repro.core.stream.simulate_edge`
+  (``mode="batched"``: segment-wise closed-form FIFO; ``mode="reference"``:
+  the per-tuple oracle interpreter), and the *finish* times of one stage
+  become the arrival times of the next — per-stage FIFO queues chained
+  through the DAG.  Time is in seconds.
+* :class:`ServingTopologyEngine` — the continuous-batching
+  :class:`~repro.serving.engine.ServingEngine` adapter: every edge is a
+  replica pool with slot-limited decode, each tuple a 1-token request keyed
+  by its (session) key.  Time is in scheduler ticks.  The source stream is
+  subsampled to ``max_requests`` (per-tick scheduling is Python-loop work).
+
+Both return the same :class:`TopologyReport`: per-edge latency percentiles,
+imbalance, memory overhead and remap accounting (one :class:`EdgeReport`
+per edge) plus end-to-end source→sink latencies — replacing the three
+ad-hoc metric shapes (``StreamMetrics`` rows, serving dicts, scenario
+dicts) that predated the topology API.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from ..core.stream import (CapacityEvent, MembershipEvent, StreamMetrics,
+                           simulate_edge)
+from .configs import build_grouper
+from .graph import SOURCE, Edge, ScopedEvent, Source, Stage, Topology, scoped
+
+__all__ = [
+    "EdgeReport",
+    "TopologyReport",
+    "Engine",
+    "RemapAccountant",
+    "SimulatorEngine",
+    "ServingTopologyEngine",
+]
+
+
+# ---------------------------------------------------------------------------
+# unified reports
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EdgeReport:
+    """One grouped edge's metrics — the same schema from either engine.
+
+    Latency/throughput units are the engine's clock (seconds for the DSPE
+    simulator, scheduler ticks for the serving engine); the normalised
+    metrics (imbalance, memory_overhead_norm, remap_frac_mean) are unitless
+    and comparable across engines.
+    """
+
+    edge: str
+    src: str
+    dst: str
+    scheme: str
+    workers: int
+    n_tuples: int
+    execution_time: float
+    latency_avg: float
+    latency_p50: float
+    latency_p95: float
+    latency_p99: float
+    throughput: float
+    memory_overhead: int
+    memory_overhead_norm: float
+    imbalance: float
+    remap_events: List[Dict] = dataclasses.field(default_factory=list)
+    remap_frac_mean: Optional[float] = None
+    dropped: int = 0
+
+    def row(self) -> Dict[str, float]:
+        """The paper-metric columns (same keys as ``StreamMetrics.row``)."""
+        return {
+            "execution_time": self.execution_time,
+            "latency_avg": self.latency_avg,
+            "latency_p50": self.latency_p50,
+            "latency_p95": self.latency_p95,
+            "latency_p99": self.latency_p99,
+            "throughput": self.throughput,
+            "memory_overhead": self.memory_overhead,
+            "memory_overhead_norm": self.memory_overhead_norm,
+            "imbalance": self.imbalance,
+        }
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class TopologyReport:
+    """Whole-topology outcome: per-edge reports + end-to-end latency of each
+    sink tuple measured from its *root* source tuple's arrival."""
+
+    engine: str
+    topology: str
+    n_source_tuples: int
+    total_time: float
+    e2e_latency_avg: float
+    e2e_latency_p50: float
+    e2e_latency_p95: float
+    e2e_latency_p99: float
+    edges: List[EdgeReport] = dataclasses.field(default_factory=list)
+
+    def edge(self, name: str) -> EdgeReport:
+        """Lookup by full edge name (``"src->dst"``) or by dst stage."""
+        for er in self.edges:
+            if er.edge == name or er.dst == name:
+                return er
+        raise KeyError(f"no edge {name!r} in topology {self.topology!r}")
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """One engine protocol: execute a topology against a source stream."""
+
+    name: str
+
+    def run(self, topology: Topology, source: Source,
+            events: Sequence[ScopedEvent] = ()) -> TopologyReport:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# remap accounting (Fig. 17 "keys moved per membership event")
+# ---------------------------------------------------------------------------
+
+
+class RemapAccountant:
+    """Event observer that probes a fixed key sample around each membership
+    event and counts primary-route changes (works against any grouper via
+    ``probe_route``; schemes with no key affinity report ``None``)."""
+
+    def __init__(self, sample_keys: Sequence):
+        self.sample = list(sample_keys)
+        self.per_event: List[Dict] = []
+        self._before: Optional[List[Optional[int]]] = None
+
+    def __call__(self, kind: str, grouper, event) -> None:
+        if kind == "pre_membership":
+            self._before = [grouper.probe_route(k) for k in self.sample]
+        elif kind == "post_membership":
+            after = [grouper.probe_route(k) for k in self.sample]
+            row = {"at": int(event.at), "sampled": len(self.sample)}
+            if self.sample and after[0] is not None:
+                moved = sum(1 for a, b in zip(self._before, after) if a != b)
+                row["moved"] = moved
+                row["frac"] = moved / len(self.sample)
+            else:  # scheme with no key affinity (SG)
+                row["moved"] = None
+                row["frac"] = None
+            self.per_event.append(row)
+            self._before = None
+
+    def frac_mean(self) -> Optional[float]:
+        fracs = [e["frac"] for e in self.per_event if e["frac"] is not None]
+        return float(np.mean(fracs)) if fracs else None
+
+
+def _sample_keys(keys: np.ndarray, cap: int) -> List[int]:
+    uniq = np.unique(np.asarray(keys))
+    if uniq.shape[0] > cap:
+        uniq = uniq[np.linspace(0, uniq.shape[0] - 1, cap).astype(np.int64)]
+    return [int(k) for k in uniq]
+
+
+def _percentiles(lats: np.ndarray):
+    if lats.size == 0:
+        return 0.0, 0.0, 0.0, 0.0
+    return (float(lats.mean()), float(np.percentile(lats, 50)),
+            float(np.percentile(lats, 95)), float(np.percentile(lats, 99)))
+
+
+def _imbalance(counts: np.ndarray) -> float:
+    counts = counts.astype(np.float64)
+    return float((counts.max() - counts.mean())
+                 / max(counts.mean(), 1e-12)) if counts.size else 0.0
+
+
+# ---------------------------------------------------------------------------
+# DSPE simulator engine
+# ---------------------------------------------------------------------------
+
+
+class SimulatorEngine:
+    """Discrete-event DSPE engine over a topology (paper §6.1 at every hop).
+
+    mode="batched" is the production path (ISSUE 1 closed-form FIFO);
+    mode="reference" is the per-tuple interpreter kept as the equivalence
+    oracle — identical event/sampling discipline, so SG/FG/PKG topologies
+    match it exactly and DC/WC/FISH stay within the DESIGN.md §6 bands.
+    """
+
+    def __init__(self, mode: str = "batched", utilization: float = 0.9,
+                 sample_every: int = 5_000, sample_noise: float = 0.02,
+                 seed: int = 0, remap_sample: int = 512):
+        if mode not in ("batched", "reference"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.mode = mode
+        self.utilization = utilization
+        self.sample_every = sample_every
+        self.sample_noise = sample_noise
+        self.seed = seed
+        self.remap_sample = remap_sample
+        self.name = f"dspe-{mode}"
+
+    def run(self, topology: Topology, source: Source,
+            events: Sequence[ScopedEvent] = ()) -> TopologyReport:
+        keys = np.asarray(source.keys)
+        n = int(keys.shape[0])
+        dt = 1.0 / source.arrival_rate
+        # per-stage streams: (keys, arrival times, root source index)
+        streams = {SOURCE: (keys, np.arange(n, dtype=np.float64) * dt,
+                            np.arange(n, dtype=np.int64))}
+        sinks = set(topology.sinks())
+        reports: List[EdgeReport] = []
+        e2e: List[np.ndarray] = []
+        total_time = 0.0
+
+        for idx, edge in enumerate(topology.ordered_edges()):
+            in_keys, in_times, in_roots = streams[edge.src]
+            stage = topology.stage(edge.dst)
+            m = int(in_keys.shape[0])
+            span = float(in_times[-1] - in_times[0]) if m > 1 else 0.0
+            rate = (m - 1) / span if span > 0 else source.arrival_rate
+            caps = stage.worker_capacities(rate, self.utilization)
+            # the grouper gets no oracle capacities: capacity-aware schemes
+            # must *discover* the true P_w through the periodic (noisy)
+            # sampling hook, exactly like the legacy single-hop engine
+            grouper = build_grouper(edge.grouping, stage.parallelism)
+            sub_events = scoped(events, edge.dst)
+            # probe sample only when a membership event can actually fire —
+            # _sample_keys is an O(m log m) unique over the edge stream
+            acct = RemapAccountant(
+                _sample_keys(in_keys, self.remap_sample) if sub_events
+                else [])
+            res = simulate_edge(
+                grouper, in_keys,
+                # the source stream is uniform by construction: taking the
+                # times=None fast path keeps this bit-identical to the
+                # legacy single-hop engine
+                times=None if edge.src == SOURCE else in_times,
+                arrival_rate=source.arrival_rate,
+                mode=self.mode, capacities=caps,
+                sample_every=self.sample_every,
+                sample_noise=self.sample_noise,
+                events=sub_events,
+                seed=self.seed + 17 * idx, event_observer=acct,
+            )
+            reports.append(self._edge_report(edge, stage, res.metrics, m,
+                                             acct))
+            if m:
+                total_time = max(total_time, float(res.finishes.max()))
+            if stage.name in sinks:
+                e2e.append(res.finishes - in_roots * dt)
+            else:  # sinks emit nothing anyone consumes
+                streams[edge.dst] = _emit(stage, in_keys, res.finishes,
+                                          in_roots)
+
+        lats = np.concatenate(e2e) if e2e else np.empty(0)
+        avg, p50, p95, p99 = _percentiles(lats)
+        return TopologyReport(
+            engine=self.name, topology=topology.name, n_source_tuples=n,
+            total_time=total_time, e2e_latency_avg=avg, e2e_latency_p50=p50,
+            e2e_latency_p95=p95, e2e_latency_p99=p99, edges=reports,
+        )
+
+    @staticmethod
+    def _edge_report(edge: Edge, stage: Stage, metrics: StreamMetrics,
+                     n_tuples: int, acct: RemapAccountant) -> EdgeReport:
+        return EdgeReport(
+            edge=edge.name, src=edge.src, dst=edge.dst,
+            scheme=edge.grouping.scheme, workers=stage.parallelism,
+            n_tuples=n_tuples, remap_events=acct.per_event,
+            remap_frac_mean=acct.frac_mean(), **metrics.row(),
+        )
+
+
+def _emit(stage: Stage, in_keys: np.ndarray, finishes: np.ndarray,
+          in_roots: np.ndarray):
+    """The stream a stage emits: transformed keys released at each tuple's
+    finish time, sorted into arrival order (stable — ties keep emission
+    order, mirroring a FIFO merge of the per-worker output streams)."""
+    t = stage.transform
+    if t is not None:
+        out_keys = t(in_keys)
+        out_times = np.repeat(finishes, t.fanout)
+        out_roots = np.repeat(in_roots, t.fanout)
+    else:
+        out_keys, out_times, out_roots = in_keys, finishes, in_roots
+    order = np.argsort(out_times, kind="stable")
+    return out_keys[order], out_times[order], out_roots[order]
+
+
+# ---------------------------------------------------------------------------
+# serving engine adapter
+# ---------------------------------------------------------------------------
+
+
+class ServingTopologyEngine:
+    """Run a topology on the continuous-batching serving engine.
+
+    Each edge is a :class:`~repro.serving.engine.ServingEngine` replica
+    pool (slot-limited decode, inferred-backlog routing); each tuple is a
+    1-token request whose session is the tuple key.  Membership events map
+    to ``fail_replica``/``add_replica`` (new workers must extend the id
+    range contiguously — replica ids are never reused); capacity events set
+    replica speeds to ``1/seconds_per_tuple``.
+    """
+
+    name = "serving"
+
+    def __init__(self, slots_per_replica: int = 4, max_requests: int = 256,
+                 utilization: float = 0.8, max_ticks: int = 200_000,
+                 remap_sample: int = 512):
+        self.slots_per_replica = slots_per_replica
+        self.max_requests = max_requests
+        self.utilization = utilization
+        self.max_ticks = max_ticks
+        self.remap_sample = remap_sample
+
+    def run(self, topology: Topology, source: Source,
+            events: Sequence[ScopedEvent] = ()) -> TopologyReport:
+        from ..serving.engine import Request, ServingEngine
+
+        keys = np.asarray(source.keys)
+        if keys.shape[0] > self.max_requests:
+            pick = np.linspace(0, keys.shape[0] - 1,
+                               self.max_requests).astype(np.int64)
+            keys = keys[pick]
+        n = int(keys.shape[0])
+        # bottleneck-feasible pacing: source tuples per tick such that every
+        # stage sees at most `utilization` of its token capacity
+        per_tick = self.utilization * min(
+            topology.stage(e.dst).parallelism / topology.fanout_to(e.dst)
+            for e in topology.edges
+        )
+        dt = 1.0 / max(per_tick, 1e-9)
+        src_times = np.arange(n, dtype=np.float64) * dt
+        streams = {SOURCE: (keys, src_times,
+                            np.arange(n, dtype=np.int64))}
+        sinks = set(topology.sinks())
+        reports: List[EdgeReport] = []
+        e2e: List[np.ndarray] = []
+        total_time = 0.0
+
+        for edge in topology.ordered_edges():
+            in_keys, in_times, in_roots = streams[edge.src]
+            stage = topology.stage(edge.dst)
+            m = int(in_keys.shape[0])
+            caps = stage.worker_capacities(1.0)  # relative speeds only
+            speeds = (1.0 / caps) / (1.0 / caps).mean()
+            eng = ServingEngine(stage.parallelism,
+                                slots_per_replica=self.slots_per_replica,
+                                tokens_per_tick=speeds,
+                                grouping=edge.grouping)
+            pending = sorted(scoped(events, edge.dst), key=lambda e: e.at)
+            acct = RemapAccountant(
+                _sample_keys(in_keys, self.remap_sample) if pending else [])
+            reqs = [Request(i, int(k), arrival=float(t), target_tokens=1)
+                    for i, (k, t) in enumerate(zip(in_keys.tolist(),
+                                                   in_times.tolist()))]
+            tick = 0
+            nxt = 0
+            while len(eng.done) < m and tick < self.max_ticks:
+                while pending and pending[0].at <= nxt:
+                    self._apply_event(eng, pending.pop(0), acct)
+                while nxt < m and in_times[nxt] <= tick:
+                    eng.submit(reqs[nxt])
+                    nxt += 1
+                eng.tick()
+                tick += 1
+
+            finishes = np.array([r.finished for r in reqs])
+            done = finishes >= 0
+            lats = (finishes - in_times)[done]
+            avg, p50, p95, p99 = _percentiles(lats)
+            router = eng.router
+            reports.append(EdgeReport(
+                edge=edge.name, src=edge.src, dst=edge.dst,
+                scheme=edge.grouping.scheme, workers=stage.parallelism,
+                n_tuples=m, execution_time=float(eng.now),
+                latency_avg=avg, latency_p50=p50, latency_p95=p95,
+                latency_p99=p99,
+                throughput=eng.total_tokens / max(eng.now, 1.0),
+                memory_overhead=router.memory_overhead(),
+                memory_overhead_norm=router.memory_overhead_normalized(),
+                imbalance=_imbalance(router.assigned_counts),
+                remap_events=acct.per_event,
+                remap_frac_mean=acct.frac_mean(),
+                dropped=int(m - done.sum()),
+            ))
+            if done.any():
+                total_time = max(total_time, float(finishes[done].max()))
+            if stage.name in sinks:
+                e2e.append((finishes - in_roots * dt)[done])
+            else:  # sinks emit nothing anyone consumes
+                streams[edge.dst] = _emit(stage, in_keys[done],
+                                          finishes[done], in_roots[done])
+
+        lats = np.concatenate(e2e) if e2e else np.empty(0)
+        avg, p50, p95, p99 = _percentiles(lats)
+        return TopologyReport(
+            engine=self.name, topology=topology.name, n_source_tuples=n,
+            total_time=total_time, e2e_latency_avg=avg, e2e_latency_p50=p50,
+            e2e_latency_p95=p95, e2e_latency_p99=p99, edges=reports,
+        )
+
+    def _apply_event(self, eng, event, acct: RemapAccountant) -> None:
+        if isinstance(event, MembershipEvent):
+            acct("pre_membership", eng.router, event)
+            target = {int(w) for w in event.workers}
+            for dead in [r for r in eng.alive if r not in target]:
+                eng.fail_replica(dead)
+            for new in sorted(target - set(eng.alive)):
+                if new != eng.num_replicas:
+                    raise ValueError(
+                        f"serving engine cannot add replica {new}: replica "
+                        f"ids are never reused and must extend the range "
+                        f"contiguously (next id is {eng.num_replicas})")
+                eng.add_replica(speed=1.0, slots=self.slots_per_replica)
+            acct("post_membership", eng.router, event)
+        elif isinstance(event, CapacityEvent):
+            for wk, cap in event.capacities.items():
+                eng.set_replica_speed(int(wk), 1.0 / max(float(cap), 1e-9))
+            acct("capacity", eng.router, event)
+        else:  # pragma: no cover - ScopedEvent validates on construction
+            raise TypeError(f"unknown event type {type(event).__name__}")

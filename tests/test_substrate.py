@@ -111,6 +111,52 @@ def test_pipeline_elastic_rescale():
     assert routed_after.sum() == 300
 
 
+def test_rescale_redistributes_stranded_backlog():
+    """A removed host's non-empty buffer must move to a survivor: leaving
+    it in ``_buffers`` kept the dead host in ``_active_hosts`` and made
+    ``ready()``/``next_global_batch()`` wait on a queue nothing drains."""
+    pipe = StreamingPipeline(num_hosts=4, seq_len=4, batch_per_host=1,
+                             grouping="fg")
+    stream = list(token_stream(200, num_keys=40, doc_len=6, vocab_size=100,
+                               seed=3))
+    pipe.ingest_stream(iter(stream))
+    total_before = sum(len(b) for b in pipe._buffers.values())
+    backlog3 = len(pipe._buffers[3])
+    assert backlog3 > 0  # the bug needs a non-empty dead buffer
+
+    pipe.rescale([0, 1, 2])
+    assert 3 not in pipe._buffers
+    assert pipe._active_hosts() == [0, 1, 2]
+    # tokens conserved — the dead host's run landed on a survivor
+    assert sum(len(b) for b in pipe._buffers.values()) == total_before
+    # batch assembly no longer waits on the dead host
+    batch = pipe.next_global_batch()
+    assert batch is not None and batch["tokens"].shape == (3, 4)
+
+
+def test_work_stealing_preserves_token_order():
+    """Stolen tokens must be a contiguous run from the donor's *head*;
+    ``pop()`` from the tail handed the recipient a reversed slice of the
+    donor's newest tokens."""
+    from collections import deque
+
+    pipe = StreamingPipeline(num_hosts=2, seq_len=4, batch_per_host=1,
+                             grouping="sg")
+    # donor host 0 holds 0..59 in ingestion order; host 1 is starved
+    pipe._buffers[0] = deque(range(60))
+    pipe._buffers[1] = deque()
+    need = pipe.seq_len * pipe.batch_per_host + pipe.batch_per_host  # = 5
+    batch = pipe.next_global_batch(steal=True)
+    assert batch is not None
+    # host 0 kept its head run, host 1 received the contiguous stolen run
+    np.testing.assert_array_equal(batch["tokens"][0], [5, 6, 7, 8])
+    np.testing.assert_array_equal(batch["labels"][0], [6, 7, 8, 9])
+    np.testing.assert_array_equal(batch["tokens"][1], [0, 1, 2, 3])
+    np.testing.assert_array_equal(batch["labels"][1], [1, 2, 3, 4])
+    # donor's remaining buffer is still in order
+    assert list(pipe._buffers[0]) == list(range(10, 60))
+
+
 # ---------------------------------------------------------------------------
 # runtime: fault tolerance
 # ---------------------------------------------------------------------------
