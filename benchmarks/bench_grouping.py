@@ -11,7 +11,7 @@ import json
 import os
 import time
 
-from repro.core import make_grouper
+from repro.topology import SCHEME_CONFIGS
 
 from .common import ARTIFACT_DIR, Reporter, SCHEMES, am_proxy_keys, run_scheme
 
@@ -21,8 +21,8 @@ _WORKERS = 32
 def run(rep: Reporter) -> dict:
     keys = am_proxy_keys()
     out = {"n_tuples": int(len(keys)), "workers": _WORKERS, "schemes": {}}
-    make_grouper("fish", _WORKERS)  # warm the consistent-hash ring cache so
-    # neither timed window pays one-off SHA-1 ring construction
+    SCHEME_CONFIGS["fish"]().build(_WORKERS)  # warm the consistent-hash ring
+    # cache so neither timed window pays one-off SHA-1 ring construction
     for scheme in SCHEMES:
         t0 = time.time()
         _, m_b = run_scheme(scheme, keys, _WORKERS, simulator="batched")

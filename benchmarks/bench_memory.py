@@ -1,12 +1,20 @@
-"""Paper Fig. 11: memory overhead (normalised to FG) on ZF across skews."""
+"""Paper Fig. 11: memory overhead (normalised to FG) on ZF across skews.
+
+Runs through the unified engine protocol (``run_edge`` → single-edge
+Topology on :class:`SimulatorEngine` — ISSUE 3/4) and reports the FG
+baseline row explicitly: FG keeps exactly one replica per key, so its
+normalised overhead must be 1.0 — the sanity anchor the five compared
+schemes are read against.
+"""
 
 from __future__ import annotations
 
 import time
 
-from .common import Reporter, run_scheme, zf_keys
+from .common import Reporter, run_edge, zf_keys
 
-_SCHEMES = ("pkg", "sg", "dc", "wc", "fish")
+_BASELINE = "fg"  # norm == 1.0 anchor: one replica per key by construction
+_SCHEMES = (_BASELINE, "pkg", "sg", "dc", "wc", "fish")
 
 
 def run(rep: Reporter) -> dict:
@@ -16,13 +24,18 @@ def run(rep: Reporter) -> dict:
         for w in (16, 64, 128):
             for scheme in _SCHEMES:
                 t0 = time.time()
-                g, m = run_scheme(scheme, keys, w)
+                er = run_edge(scheme, keys, w)
                 us = (time.time() - t0) * 1e6
-                out[(z, scheme, w)] = m.memory_overhead_norm
+                out[(z, scheme, w)] = er.memory_overhead_norm
                 rep.add(f"fig11_mem_vs_fg/zf{z}/{scheme}/w{w}", us,
-                        round(m.memory_overhead_norm, 3))
+                        round(er.memory_overhead_norm, 3))
+    fg_worst = max(v for (z, s, w), v in out.items() if s == _BASELINE)
+    assert abs(fg_worst - 1.0) < 1e-9, \
+        f"FG must hold exactly one replica per key, got norm {fg_worst}"
     fish128 = max(v for (z, s, w), v in out.items()
                   if s == "fish" and w == 128)
     sg128 = min(v for (z, s, w), v in out.items() if s == "sg" and w == 128)
+    rep.add("fig11/fg_norm_anchor", 0.0, round(fg_worst, 6))
     rep.add("fig11/fish_worst_mem_at_128", 0.0, round(fish128, 3))
-    return {"fish_worst_mem_128": fish128, "sg_best_mem_128": sg128}
+    return {"fg_norm_anchor": fg_worst, "fish_worst_mem_128": fish128,
+            "sg_best_mem_128": sg128}

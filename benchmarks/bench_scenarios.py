@@ -26,6 +26,7 @@ import time
 
 from repro.scenarios import (default_scenarios, run_dspe_scenario,
                              run_serving_scenario)
+from repro.state import WindowOp
 
 from .common import ARTIFACT_DIR, Reporter, SCHEMES
 
@@ -44,17 +45,29 @@ def run(rep: Reporter) -> dict:
         suite = [sc for sc in suite if sc.name in ONLY]
     for sc in suite:
         row = {"dspe": {}, "serving": {}}
+        # churn scenarios carry a windowed keyed aggregation (ISSUE 4):
+        # their rows gain state-migration cost + post-merge exactness.
+        # One stream-spanning window keeps every churn point mid-window
+        # (a boundary-aligned event rightly migrates nothing)
+        dspe_window = (WindowOp(agg="count", size=N_TUPLES)
+                       if sc.churn else None)
+        srv_window = (WindowOp(agg="count", size=N_REQUESTS)
+                      if sc.churn else None)
         for scheme in SCHEMES:
             t0 = time.time()
-            r = run_dspe_scenario(sc, scheme)
+            r = run_dspe_scenario(sc, scheme, window=dspe_window)
             us = (time.time() - t0) * 1e6
             row["dspe"][scheme] = r
+            st = r.get("state")
             rep.add(f"scenario/{sc.name}/dspe/{scheme}", us,
                     f"p99={r['latency_p99']:.4f} "
-                    f"remap={r['remap_frac_mean']}")
+                    f"remap={r['remap_frac_mean']}"
+                    + (f" mig={st['migration_bytes']}B "
+                       f"exact={st['exact']}" if st else ""))
         for scheme in SCHEMES:
             t0 = time.time()
-            r = run_serving_scenario(sc, scheme, num_requests=N_REQUESTS)
+            r = run_serving_scenario(sc, scheme, num_requests=N_REQUESTS,
+                                     window=srv_window)
             us = (time.time() - t0) * 1e6
             row["serving"][scheme] = r
             rep.add(f"scenario/{sc.name}/serving/{scheme}", us,

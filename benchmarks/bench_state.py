@@ -1,0 +1,150 @@
+"""Measured operator state, merge cost and migration cost (ISSUE 4).
+
+Reproduces the paper's Fig. 11 memory result from *real* keyed state
+instead of the distinct-key counter proxy: every scheme runs a one-window
+count aggregation (window = the whole stream, so the stores hold the full
+key→count state) through the topology engine with an explicit downstream
+merge stage, and the artifact records
+
+* per-worker / total state bytes (open-addressing array stores, logical
+  ``ENTRY_BYTES`` per entry) and the FG-normalised total — the Fig. 11
+  ordering must emerge from the stores themselves: SG ≫ FG, FISH within
+  2× FG even at 128 workers;
+* merge cost: partial-aggregate tuples into the merge stage (= state
+  entries) and the merge edge's latency;
+* post-merge exactness against the routing-free oracle;
+* a churn pass (failure + scale-out mid-stream) per scheme: migration
+  bytes / tuples replayed under both policies, results still exact.
+
+Emits ``artifacts/BENCH_state.json``.  Module-level constants are the
+CI-scale knobs (see .github/workflows/ci.yml).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import MembershipEvent
+from repro.data.synthetic import zipf_time_evolving
+from repro.state import WindowOp, direct_aggregate
+from repro.topology import (Edge, FieldConfig, ScopedEvent, SimulatorEngine,
+                            Source, Stage, Topology, config_for)
+
+from .common import ARTIFACT_DIR, Reporter, SCHEMES
+
+N_TUPLES = 30_000
+N_KEYS = 3_000
+Z = 1.4
+ARRIVAL_RATE = 20_000.0
+WORKERS = (16, 64, 128)
+CHURN_WORKERS = 16
+MERGE_WORKERS = 8
+BACKEND = "array"
+
+
+def state_topology(scheme, workers: int, window: WindowOp,
+                   merge_workers: int = MERGE_WORKERS) -> Topology:
+    """source → windowed count stage (scheme under test) → FG merge."""
+    return Topology(
+        name=f"state-{scheme}-w{workers}",
+        stages=(Stage("count", parallelism=workers, operator=window),
+                Stage("merge", parallelism=merge_workers)),
+        edges=(Edge("source", "count", config_for(scheme)),
+               Edge("count", "merge", FieldConfig())),
+    )
+
+
+def run(rep: Reporter) -> dict:
+    keys = zipf_time_evolving(N_TUPLES, num_keys=N_KEYS, z=Z, seed=0)
+    n = int(keys.shape[0])
+    window = WindowOp(agg="count", size=n, backend=BACKEND)
+    oracle = direct_aggregate(keys, window)
+    src = Source(keys, arrival_rate=ARRIVAL_RATE)
+    sim = SimulatorEngine()
+    out = {"n_tuples": n, "n_keys": N_KEYS, "z": Z, "backend": BACKEND,
+           "state": {}, "churn": {}}
+
+    # -- Fig. 11 from real state: per-worker stores across worker counts -----
+    fg_bytes = {}
+    for w in WORKERS:
+        for scheme in SCHEMES:
+            t0 = time.time()
+            r = sim.run(state_topology(scheme, w, window), src)
+            us = (time.time() - t0) * 1e6
+            st = r.state["count"]
+            er = r.edge("count")
+            mrg = r.edge("merge")
+            exact = st["merged"] == oracle
+            row = {
+                "workers": w,
+                "state_bytes": st["state_bytes_final"],
+                "state_bytes_peak": st["state_bytes_peak"],
+                "per_worker_max": max(st["per_worker_bytes"]),
+                "merge_tuples": mrg.n_tuples,
+                "merge_latency_p99": mrg.latency_p99,
+                "exact": exact,
+            }
+            if scheme == "fg":
+                fg_bytes[w] = st["state_bytes_final"]
+            row["norm_vs_fg"] = (st["state_bytes_final"]
+                                 / max(fg_bytes.get(w, 0), 1))
+            out["state"][f"{scheme}/w{w}"] = row
+            rep.add(f"state_bytes/{scheme}/w{w}", us,
+                    f"bytes={row['state_bytes']} norm={row['norm_vs_fg']:.2f} "
+                    f"merge={row['merge_tuples']} exact={exact}")
+            assert exact, (scheme, w)
+
+    # Fig. 11 ordering acceptance: SG ≫ FG; FISH within 2× FG at 128
+    w_hi = WORKERS[-1]
+    sg_norm = out["state"][f"sg/w{w_hi}"]["norm_vs_fg"]
+    fish_norm = out["state"][f"fish/w{w_hi}"]["norm_vs_fg"]
+    assert out["state"][f"fg/w{w_hi}"]["norm_vs_fg"] == 1.0
+    assert sg_norm > 3.0, f"SG must replicate state heavily, got {sg_norm}"
+    assert fish_norm < 2.0, f"FISH must stay near FG state, got {fish_norm}"
+    rep.add(f"state_bytes/ordering_at_w{w_hi}", 0.0,
+            f"sg={sg_norm:.2f} fish={fish_norm:.2f} fg=1.0")
+
+    # -- churn: failure + scale-out mid-stream, both migration policies ------
+    events = [
+        ScopedEvent("count", MembershipEvent(
+            at=n // 3, workers=tuple(x for x in range(CHURN_WORKERS)
+                                     if x != CHURN_WORKERS - 1))),
+        ScopedEvent("count", MembershipEvent(
+            at=2 * n // 3, workers=tuple(x for x in range(CHURN_WORKERS + 1)
+                                         if x != CHURN_WORKERS - 1))),
+    ]
+    for policy in ("migrate", "rebuild"):
+        wop = WindowOp(agg="count", size=n, backend=BACKEND,
+                       migration=policy)
+        for scheme in SCHEMES:
+            t0 = time.time()
+            r = sim.run(state_topology(scheme, CHURN_WORKERS, wop), src,
+                        events)
+            us = (time.time() - t0) * 1e6
+            st = r.state["count"]
+            exact = st["merged"] == oracle
+            row = {
+                "policy": policy,
+                "migration_bytes": st["migration_bytes"],
+                "migration_events": st["migration_events"],
+                "tuples_replayed": st["tuples_replayed"],
+                "exact": exact,
+            }
+            out["churn"][f"{scheme}/{policy}"] = row
+            rep.add(f"state_churn/{scheme}/{policy}", us,
+                    f"mig={row['migration_bytes']}B "
+                    f"replay={row['tuples_replayed']} exact={exact}")
+            assert exact, (scheme, policy)
+            if policy == "migrate":
+                assert row["migration_bytes"] > 0, scheme
+            else:
+                assert row["tuples_replayed"] > 0, scheme
+
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, "BENCH_state.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    rep.add("state/artifact", 0.0, path)
+    return out

@@ -244,6 +244,7 @@ def simulate_edge(
     events: Sequence[object] = (),
     seed: int = 0,
     event_observer: Optional[Callable[[str, Grouper, object], None]] = None,
+    tuple_observer: Optional[Callable[[np.ndarray, np.ndarray], None]] = None,
 ) -> EdgeResult:
     """Run one grouped edge: route ``keys`` through ``grouper`` and advance
     the destination stage's per-worker FIFO queues.
@@ -265,6 +266,13 @@ def simulate_edge(
                   kind "pre_membership"/"post_membership" around membership
                   changes and "capacity" after a capacity change — the
                   remap-accounting hook.
+    tuple_observer: optional ``f(keys, workers)`` callback fed the routed
+                  chunks of the stream in order (each tuple exactly once,
+                  interleaved correctly with the event hooks) — the keyed
+                  operator-state hook (:mod:`repro.state`).  In batched
+                  mode it fires once per segment; in reference mode the
+                  per-tuple assignments are buffered and flushed before
+                  each event and at stream end.
 
     ``keys`` must be a 1-D integer array of interned key ids for the batched
     mode (``repro.data.synthetic`` generators emit int32); anything else
@@ -282,15 +290,17 @@ def simulate_edge(
         if keys_arr.ndim == 1 and keys_arr.dtype.kind in "iu":
             return _edge_batched(
                 grouper, keys_arr, times, capacities, arrival_rate,
-                sample_every, sample_noise, events, seed, event_observer)
+                sample_every, sample_noise, events, seed, event_observer,
+                tuple_observer)
     return _edge_reference(
         grouper, keys, times, capacities, arrival_rate,
-        sample_every, sample_noise, events, seed, event_observer)
+        sample_every, sample_noise, events, seed, event_observer,
+        tuple_observer)
 
 
 def _edge_batched(grouper, keys_arr, times, capacities, arrival_rate,
                   sample_every, sample_noise, events, seed,
-                  event_observer) -> EdgeResult:
+                  event_observer, tuple_observer=None) -> EdgeResult:
     rng = np.random.default_rng(seed)
     w = grouper.num_workers
     n = keys_arr.shape[0]
@@ -326,6 +336,8 @@ def _edge_batched(grouper, keys_arr, times, capacities, arrival_rate,
             seg_times = times[lo:hi]
             now0 = float(seg_times[0])
         seg_workers = grouper.assign_batch(keys_arr[lo:hi], now0, dt)
+        if tuple_observer is not None:
+            tuple_observer(keys_arr[lo:hi], seg_workers)
         _advance_fifo(busy_until, seg_workers, seg_times, capacities,
                       latencies[lo:hi])
         if sample_every and hi % sample_every == 0:
@@ -341,7 +353,7 @@ def _edge_batched(grouper, keys_arr, times, capacities, arrival_rate,
 
 def _edge_reference(grouper, keys, times, capacities, arrival_rate,
                     sample_every, sample_noise, events, seed,
-                    event_observer) -> EdgeResult:
+                    event_observer, tuple_observer=None) -> EdgeResult:
     rng = np.random.default_rng(seed)
     w = grouper.num_workers
     n = len(keys)
@@ -356,12 +368,31 @@ def _edge_reference(grouper, keys, times, capacities, arrival_rate,
     cap_idx = 0
     active = set(range(w))
 
+    # per-tuple assignments are buffered and flushed to the tuple observer
+    # before any event fires, preserving the batched mode's interleaving
+    buf_k: list = []
+    buf_w: list = []
+
+    def _flush_tuples() -> None:
+        if buf_k and tuple_observer is not None:
+            tuple_observer(np.asarray(buf_k),
+                           np.asarray(buf_w, dtype=np.int64))
+            buf_k.clear()
+            buf_w.clear()
+
     for i, key in enumerate(keys):
+        if tuple_observer is not None and (
+                (ev_idx < len(mem_ev) and mem_ev[ev_idx].at == i)
+                or (cap_idx < len(cap_ev) and cap_ev[cap_idx].at == i)):
+            _flush_tuples()
         ev_idx, cap_idx, active = _apply_events(
             i, mem_ev, ev_idx, cap_ev, cap_idx, grouper, capacities,
             active, event_observer)
         now = i * dt if times is None else float(times[i])
         worker = grouper.assign(key, now)
+        if tuple_observer is not None:
+            buf_k.append(key)
+            buf_w.append(worker)
         start = max(busy_until[worker], now)
         finish = start + capacities[worker]
         busy_until[worker] = finish
@@ -372,6 +403,7 @@ def _edge_reference(grouper, keys, times, capacities, arrival_rate,
                 noisy = capacities[wk] * (1.0 + rng.normal(0.0, sample_noise))
                 grouper.record_capacity_sample(wk, float(max(noisy, 1e-12)))
 
+    _flush_tuples()
     return EdgeResult(_metrics(grouper, busy_until, latencies, n), finishes)
 
 

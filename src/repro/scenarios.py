@@ -45,6 +45,7 @@ from .runtime.elastic import ElasticPool
 from .runtime.fault import HeartbeatMonitor, RestartPolicy
 from .runtime.stragglers import StragglerMitigator
 from .serving.engine import Request, ServingEngine
+from .state import KeyedStateManager, WindowOp, direct_aggregate
 from .topology import (Edge, EdgeReport, RemapAccountant, ScopedEvent,
                        SimulatorEngine, Source, Stage, Topology, config_for)
 from .topology.engine import _imbalance, _percentiles
@@ -195,15 +196,34 @@ def compile_events(s: Scenario, n: int) -> List[object]:
 _STAGE = "worker"  # the single-hop scenario stage name
 
 
-def scenario_topology(scenario: Scenario, scheme: str) -> Topology:
+def scenario_topology(scenario: Scenario, scheme: str,
+                      window: Optional[WindowOp] = None) -> Topology:
     """The scenario as a one-edge topology: source → grouped worker pool
-    with the scenario's heterogeneous base capacities."""
+    with the scenario's heterogeneous base capacities.  ``window`` attaches
+    a keyed windowed aggregation to the worker stage (ISSUE 4): churn then
+    exercises the state-migration protocol and the runner reports its cost
+    and post-merge exactness."""
     return Topology(
         name=scenario.name,
         stages=(Stage(_STAGE, parallelism=scenario.workers,
-                      capacities=tuple(base_capacities(scenario))),),
+                      capacities=tuple(base_capacities(scenario)),
+                      operator=window),),
         edges=(Edge("source", _STAGE, config_for(scheme)),),
     )
+
+
+def _state_row(summary: Dict, oracle: Dict) -> Dict:
+    """Flatten a per-stage state summary + exactness vs the routing-free
+    oracle into the scenario-report shape."""
+    return {
+        "migration_bytes": summary["migration_bytes"],
+        "migration_events": summary["migration_events"],
+        "tuples_replayed": summary["tuples_replayed"],
+        "state_bytes_peak": summary["state_bytes_peak"],
+        "partial_entries": summary["partial_entries"],
+        "windows": summary["windows"],
+        "exact": summary["merged"] == oracle,
+    }
 
 
 def run_dspe_scenario(
@@ -211,20 +231,27 @@ def run_dspe_scenario(
     scheme: str,
     engine: str = "batched",
     sample_remap: int = 512,
+    window: Optional[WindowOp] = None,
 ) -> Dict:
     """Route the scenario's stream through ``scheme`` in the DSPE simulator
-    and return the paper metrics plus per-event remap accounting."""
+    and return the paper metrics plus per-event remap accounting.  With a
+    ``window``, the worker stage runs the keyed aggregation and the report
+    gains a ``state`` row: migration cost + post-merge exactness against
+    the no-churn oracle (:func:`repro.state.direct_aggregate`)."""
     keys = build_keys(scenario.workload)
     n = int(keys.shape[0])
     events = [ScopedEvent(_STAGE, e) for e in compile_events(scenario, n)]
     sim = SimulatorEngine(mode=engine, remap_sample=sample_remap)
-    rep = sim.run(scenario_topology(scenario, scheme),
+    rep = sim.run(scenario_topology(scenario, scheme, window),
                   Source(keys, arrival_rate=scenario.arrival_rate), events)
     er = rep.edge(_STAGE)
     out = {"scheme": scheme, "engine": engine, "n_tuples": n}
     out.update(er.row())
     out["remap_events"] = er.remap_events
     out["remap_frac_mean"] = er.remap_frac_mean
+    if window is not None:
+        out["state"] = _state_row(rep.state[_STAGE],
+                                  direct_aggregate(keys, window))
     return out
 
 
@@ -236,6 +263,7 @@ def run_serving_scenario(
     heartbeat_timeout: float = 3.0,
     max_ticks: int = 50_000,
     seed: int = 0,
+    window: Optional[WindowOp] = None,
 ) -> Dict:
     """Drive the ServingEngine through the scenario with the runtime control
     plane in the loop.
@@ -247,6 +275,12 @@ def run_serving_scenario(
     orphans; the ElasticPool accounts session remap cost.  ``add`` ops scale
     the engine out.  A straggler episode changes the replica's true speed
     mid-run; the StragglerMitigator must finger it from speed samples alone.
+
+    With a ``window`` (ISSUE 4), per-replica keyed session state is
+    maintained alongside the engine: each request folds into its session's
+    window entry on the replica it was routed to, replica failure/scale-out
+    runs the state-migration protocol, and the report gains a ``state`` row
+    (migration cost + post-merge exactness vs the routing-free oracle).
     """
     rng = np.random.default_rng(seed)
     keys = build_keys(scenario.workload)
@@ -269,10 +303,16 @@ def run_serving_scenario(
     stats = {"rerouted": 0, "remap_fracs": [], "policy_outcomes": [],
              "straggler_detected": False}
     sample_sessions = [int(k) for k in np.unique(sessions)]
+    mgr = KeyedStateManager(window) if window is not None else None
+    fed_keys: List[int] = []  # oracle input: sessions actually submitted
 
     def on_rescale(alive: List[int]) -> None:
         for dead in [r for r in eng.alive if r not in alive]:
+            if mgr is not None:
+                mgr.on_event("pre_membership", eng.router, None)
             stats["rerouted"] += eng.fail_replica(dead)
+            if mgr is not None:
+                mgr.on_event("post_membership", eng.router, None)
             if dead in pool.ring:
                 moved = pool.remove_host(dead, sample_sessions)
                 stats["remap_fracs"].append(moved / max(len(sample_sessions), 1))
@@ -303,6 +343,10 @@ def run_serving_scenario(
         now = eng.now
         while next_req < num_requests and arrive_at[next_req] <= t:
             eng.submit(reqs[next_req])
+            if mgr is not None:  # fold into keyed state exactly once
+                mgr.feed(sessions[next_req:next_req + 1],
+                         np.array([reqs[next_req].replica]))
+                fed_keys.append(int(sessions[next_req]))
             next_req += 1
         while pending_ops and pending_ops[0][0] <= t:
             _, op = pending_ops.pop(0)
@@ -313,7 +357,11 @@ def run_serving_scenario(
                 silenced.add(op.worker)
                 eng.speeds[op.worker] = 0.0
             elif op.op == "add":
+                if mgr is not None:
+                    mgr.on_event("pre_membership", eng.router, None)
                 r = eng.add_replica(speed=1.0, slots=slots_per_replica)
+                if mgr is not None:
+                    mgr.on_event("post_membership", eng.router, None)
                 policy.total = eng.num_replicas
                 mon.heartbeat(r, now)
                 pool.add_host(r, sample_sessions)
@@ -363,10 +411,17 @@ def run_serving_scenario(
                          if stats["remap_fracs"] else None),
         dropped=num_requests - len(eng.done),
     )
+    state_row = None
+    if mgr is not None:
+        mgr.finalize()
+        state_row = _state_row(
+            mgr.report(_STAGE).summary(),
+            direct_aggregate(np.asarray(fed_keys, dtype=np.int64), window))
     return {
         "scheme": scheme,
         "completed": len(eng.done),
         "submitted": num_requests,
+        "state": state_row,
         "ticks": t,
         "latency_avg": m.latency_avg,
         "latency_p50": m.latency_p50,

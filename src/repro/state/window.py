@@ -1,0 +1,344 @@
+"""Windowed keyed operators over per-worker state stores (ISSUE 4).
+
+:class:`WindowOp` declares a stateful operator on a topology stage:
+tumbling or sliding count-based windows (window boundaries indexed by the
+stage's *input tuple index*, so results are identical across engines and
+routing schemes), one of three aggregations (``count`` / ``sum`` /
+``topk``), a store backend, and a migration policy for churn.
+
+:class:`KeyedStateManager` is the runtime: engines feed it the routed
+``(keys, workers)`` chunks of one grouped edge (in stream order) and fire
+its membership hooks around churn events.  It maintains one state store per
+(open window, worker), flushes closed windows into :class:`WindowPartial`
+records (the partial aggregates a downstream merge stage combines), and
+runs the state-migration protocol (:mod:`repro.state.migration`) on every
+membership change.
+
+Because every tuple folds into exactly one worker's store with an
+order-independent int64 aggregate, the *merged* per-key results are a pure
+function of the input stream — independent of scheme, engine, churn and
+migration policy.  That is the exactness contract ``tests/test_state.py``
+enforces against the :func:`repro.state.merge.direct_aggregate` oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .migration import MigrationStats, apply_membership_change
+from .store import ENTRY_BYTES, STORE_BACKENDS, make_store
+
+__all__ = [
+    "WindowOp",
+    "WindowPartial",
+    "StateReport",
+    "KeyedStateManager",
+    "tuple_values",
+]
+
+_MIX = np.int64(2654435761)  # Knuth multiplicative-hash constant
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowOp:
+    """A windowed keyed aggregation on a stage (count-based windows).
+
+    agg:       "count" (tuples per key), "sum" (deterministic per-tuple
+               payload summed per key) or "topk" (k heaviest keys per
+               window by tuple count).
+    size:      window length in tuples of the stage's input stream.
+    slide:     sliding step; ``None`` means tumbling (slide == size).
+               ``size`` must be a multiple of ``slide`` so window
+               boundaries align with the slide grid.
+    k:         top-k cut (``topk`` only).
+    backend:   state-store backend ("array" | "dict").
+    migration: churn policy — "migrate" ships state entries to the key's
+               new owner (bytes-moved accounted); "rebuild" discards and
+               replays the entry's tuples at the new owner
+               (tuples-replayed accounted).  Results are exact either way.
+    value:     payload for "sum" — "hashed" (deterministic pseudo-payload
+               per key) or "key" (the key id itself).
+    """
+
+    agg: str = "count"
+    size: int = 1_000
+    slide: Optional[int] = None
+    k: int = 8
+    backend: str = "array"
+    migration: str = "migrate"
+    value: str = "hashed"
+
+    def __post_init__(self) -> None:
+        if self.agg not in ("count", "sum", "topk"):
+            raise ValueError(f"unknown agg {self.agg!r}; "
+                             f"one of ('count', 'sum', 'topk')")
+        if self.size < 1:
+            raise ValueError(f"window size must be >= 1, got {self.size}")
+        if self.slide is not None:
+            if not 1 <= self.slide <= self.size:
+                raise ValueError(f"slide must be in [1, size], got "
+                                 f"{self.slide}")
+            if self.size % self.slide != 0:
+                raise ValueError(f"size ({self.size}) must be a multiple of "
+                                 f"slide ({self.slide})")
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.backend not in STORE_BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; one of "
+                             f"{sorted(STORE_BACKENDS)}")
+        if self.migration not in ("migrate", "rebuild"):
+            raise ValueError(f"unknown migration policy {self.migration!r}; "
+                             f"'migrate' or 'rebuild'")
+        if self.value not in ("hashed", "key"):
+            raise ValueError(f"unknown value kind {self.value!r}; "
+                             f"'hashed' or 'key'")
+
+    @property
+    def stride(self) -> int:
+        return self.slide if self.slide is not None else self.size
+
+
+def tuple_values(op: WindowOp, keys: np.ndarray) -> np.ndarray:
+    """The deterministic per-tuple int64 contribution folded into the key's
+    state entry.  A pure function of the key, so aggregates are independent
+    of routing/engine/churn."""
+    keys = np.asarray(keys).astype(np.int64)
+    if op.agg in ("count", "topk"):
+        return np.ones(keys.shape[0], dtype=np.int64)
+    if op.value == "key":
+        return keys
+    return ((keys * _MIX) & np.int64(0x7FFFFFFF)) % 97 + 1
+
+
+@dataclasses.dataclass
+class WindowPartial:
+    """One worker's partial aggregate for one closed window: the unit the
+    downstream merge stage consumes (one merge tuple per entry)."""
+
+    window: int          # window start (input tuple index)
+    worker: int
+    keys: np.ndarray     # int64, sorted
+    values: np.ndarray   # int64 aggregates
+    counts: np.ndarray   # tuples folded per entry (replay cost)
+    last_index: int      # input index of the worker's last tuple in window
+
+
+@dataclasses.dataclass
+class StateReport:
+    """Per-operator-stage state outcome (JSON-able via :meth:`summary`)."""
+
+    stage: str
+    agg: str
+    backend: str
+    migration_policy: str
+    windows: int
+    partials: int            # flushed (window, worker) partials
+    partial_entries: int     # merge-stage input tuples (Σ entries)
+    state_keys: int          # distinct keys aggregated over the stream
+    state_bytes_peak: int    # max Σ_w store bytes over time
+    state_bytes_final: int   # Σ_w store bytes at stream end (pre-flush)
+    per_worker_bytes: List[int]  # per-worker peak store bytes
+    migration_bytes: int
+    migration_events: int
+    tuples_replayed: int
+    merged: Dict             # window -> {key: value} | topk [[key, count]..]
+
+    def summary(self, include_merged: bool = True) -> Dict:
+        d = dataclasses.asdict(self)
+        if not include_merged:
+            d.pop("merged")
+        return d
+
+
+class _OpenWindow:
+    __slots__ = ("start", "end", "stores", "last_idx")
+
+    def __init__(self, start: int, end: int):
+        self.start = start
+        self.end = end
+        self.stores: Dict[int, object] = {}
+        self.last_idx: Dict[int, int] = {}
+
+
+class KeyedStateManager:
+    """Keyed operator state for one grouped edge.
+
+    Engines drive three entry points, all in stream order:
+
+    * :meth:`feed` — the routed (keys, workers) of the next chunk;
+    * :meth:`on_event` — the membership observer hook (same signature as
+      the engines' ``event_observer``), which runs the migration protocol;
+    * :meth:`finalize` — stream end: close the remaining open windows.
+    """
+
+    def __init__(self, op: WindowOp):
+        self.op = op
+        self.idx = 0  # next input tuple index
+        self.partials: List[WindowPartial] = []
+        self.migration = MigrationStats()
+        self.state_bytes_peak = 0
+        self.state_bytes_final = 0
+        self._per_worker_peak: Dict[int, int] = {}
+        self._open: Dict[int, _OpenWindow] = {}
+        self._pre_routes: Optional[Dict[int, Optional[int]]] = None
+        self._finalized = False
+        self._seen_keys: set = set()
+
+    # -- bookkeeping --------------------------------------------------------------
+    def _note_bytes(self) -> int:
+        total = 0
+        per_worker: Dict[int, int] = {}
+        for win in self._open.values():
+            for w, st in win.stores.items():
+                b = st.size_bytes()
+                total += b
+                per_worker[w] = per_worker.get(w, 0) + b
+        for w, b in per_worker.items():
+            if b > self._per_worker_peak.get(w, 0):
+                self._per_worker_peak[w] = b
+        if total > self.state_bytes_peak:
+            self.state_bytes_peak = total
+        return total
+
+    def _close(self, win: _OpenWindow) -> None:
+        for w in sorted(win.stores):
+            st = win.stores[w]
+            if st.num_entries == 0:
+                continue
+            ks, vs, cs = st.items()
+            self.partials.append(WindowPartial(
+                window=win.start, worker=w, keys=ks, values=vs, counts=cs,
+                last_index=win.last_idx.get(w, win.start)))
+        del self._open[win.start]
+
+    def _close_expired(self) -> None:
+        expired = [s for s in self._open if self._open[s].end <= self.idx]
+        if expired:
+            self._note_bytes()
+            for s in sorted(expired):
+                self._close(self._open[s])
+
+    def _roll(self) -> None:
+        """Open the window starting at the current slide block; close every
+        window whose end has passed (flushing its partials)."""
+        self._close_expired()
+        stride = self.op.stride
+        block = (self.idx // stride) * stride
+        if block not in self._open:
+            self._open[block] = _OpenWindow(block, block + self.op.size)
+
+    # -- stream input -------------------------------------------------------------
+    def feed(self, keys, workers) -> None:
+        """Fold the next routed chunk into the open windows' stores.
+        ``keys[i]`` was routed to ``workers[i]``; tuple ``i`` has global
+        input index ``self.idx + i``."""
+        if self._finalized:
+            raise RuntimeError("KeyedStateManager already finalized")
+        keys = np.asarray(keys).astype(np.int64, copy=False)
+        workers = np.asarray(workers).astype(np.int64, copy=False)
+        n = keys.shape[0]
+        if n == 0:
+            return
+        self._seen_keys.update(np.unique(keys).tolist())
+        values = tuple_values(self.op, keys)
+        stride = self.op.stride
+        backend = self.op.backend
+        pos = 0
+        while pos < n:
+            self._roll()
+            block_end = (self.idx // stride + 1) * stride
+            take = min(n - pos, block_end - self.idx)
+            kc = keys[pos:pos + take]
+            wc = workers[pos:pos + take]
+            vc = values[pos:pos + take]
+            order = np.argsort(wc, kind="stable")
+            ws = wc[order]
+            seg = np.concatenate([[0], np.flatnonzero(ws[1:] != ws[:-1]) + 1,
+                                  [take]])
+            for s, e in zip(seg[:-1].tolist(), seg[1:].tolist()):
+                w = int(ws[s])
+                sl = order[s:e]
+                last = self.idx + int(sl.max())
+                for win in self._open.values():
+                    st = win.stores.get(w)
+                    if st is None:
+                        st = win.stores[w] = make_store(backend)
+                    st.update_batch(kc[sl], vc[sl])
+                    if last > win.last_idx.get(w, -1):
+                        win.last_idx[w] = last
+            self.idx += take
+            pos += take
+
+    # -- membership hook (engines' event_observer signature) -----------------------
+    def on_event(self, kind: str, grouper, event=None) -> None:
+        if kind == "pre_membership":
+            # engines fire events before feeding the post-event chunk, so a
+            # window that completed exactly at the event index may still be
+            # lazily open — flush it first: completed state never migrates
+            self._close_expired()
+            self._pre_routes = self._snapshot_routes(grouper)
+        elif kind == "post_membership":
+            apply_membership_change(
+                list(self._open.values()), self._pre_routes or {}, grouper,
+                self.op, self.migration)
+            self._pre_routes = None
+            self._note_bytes()
+        # "capacity" events don't touch keyed state
+
+    def _snapshot_routes(self, grouper) -> Dict[int, Optional[int]]:
+        routes: Dict[int, Optional[int]] = {}
+        for win in self._open.values():
+            for st in win.stores.values():
+                ks, _, _ = st.items()
+                for k in ks.tolist():
+                    if k not in routes:
+                        routes[k] = grouper.probe_route(k)
+        return routes
+
+    # -- stream end -----------------------------------------------------------------
+    def finalize(self) -> None:
+        if self._finalized:
+            return
+        self.state_bytes_final = self._note_bytes()
+        for s in sorted(self._open):
+            self._close(self._open[s])
+        self._finalized = True
+
+    # -- outputs ---------------------------------------------------------------------
+    def partial_entries(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The merge-stage input stream: (entry keys, entry last-index) —
+        one tuple per state entry, released when its worker flushed."""
+        if not self.partials:
+            return (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64))
+        ks = np.concatenate([p.keys for p in self.partials])
+        last = np.concatenate([
+            np.full(p.keys.shape[0], p.last_index, dtype=np.int64)
+            for p in self.partials])
+        return ks, last
+
+    def report(self, stage: str) -> StateReport:
+        from .merge import merge_partials
+
+        if not self._finalized:
+            self.finalize()
+        n_workers = max(self._per_worker_peak, default=-1) + 1
+        per_worker = [self._per_worker_peak.get(w, 0)
+                      for w in range(n_workers)]
+        return StateReport(
+            stage=stage, agg=self.op.agg, backend=self.op.backend,
+            migration_policy=self.op.migration,
+            windows=len({p.window for p in self.partials}),
+            partials=len(self.partials),
+            partial_entries=int(sum(p.keys.shape[0] for p in self.partials)),
+            state_keys=len(self._seen_keys),
+            state_bytes_peak=int(self.state_bytes_peak),
+            state_bytes_final=int(self.state_bytes_final),
+            per_worker_bytes=per_worker,
+            migration_bytes=int(self.migration.bytes_moved),
+            migration_events=int(self.migration.events),
+            tuples_replayed=int(self.migration.tuples_replayed),
+            merged=merge_partials(self.partials, self.op),
+        )

@@ -20,6 +20,7 @@ and a serving-engine adapter behind it (:mod:`.engine`)::
     print(report.edge("count").latency_p99)
 """
 
+from ..state.window import WindowOp  # keyed operator state on a Stage
 from .configs import (SCHEME_CONFIGS, DChoicesConfig, FieldConfig,
                       FishConfig, PKGConfig, SchemeConfig, ShuffleConfig,
                       WChoicesConfig, build_grouper, config_for)
@@ -48,6 +49,7 @@ __all__ = [
     "Topology",
     "Source",
     "ScopedEvent",
+    "WindowOp",
     "Engine",
     "EdgeReport",
     "TopologyReport",

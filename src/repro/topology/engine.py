@@ -31,6 +31,7 @@ import numpy as np
 
 from ..core.stream import (CapacityEvent, MembershipEvent, StreamMetrics,
                            simulate_edge)
+from ..state.window import KeyedStateManager, StateReport
 from .configs import build_grouper
 from .graph import SOURCE, Edge, ScopedEvent, Source, Stage, Topology, scoped
 
@@ -77,6 +78,14 @@ class EdgeReport:
     remap_events: List[Dict] = dataclasses.field(default_factory=list)
     remap_frac_mean: Optional[float] = None
     dropped: int = 0
+    # keyed operator state (ISSUE 4) — populated when the destination stage
+    # carries a WindowOp; state_bytes is the peak Σ_w store bytes (the
+    # *measured* counterpart of the memory_overhead key-replica proxy)
+    state_bytes: Optional[int] = None
+    state_entries: Optional[int] = None
+    partial_entries: Optional[int] = None
+    migration_bytes: int = 0
+    tuples_replayed: int = 0
 
     def row(self) -> Dict[str, float]:
         """The paper-metric columns (same keys as ``StreamMetrics.row``)."""
@@ -110,6 +119,11 @@ class TopologyReport:
     e2e_latency_p95: float
     e2e_latency_p99: float
     edges: List[EdgeReport] = dataclasses.field(default_factory=list)
+    # keyed operator state (ISSUE 4): per-operator-stage summaries (incl.
+    # the merged per-window results) + topology-wide migration cost
+    state: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    migration_bytes: int = 0
+    tuples_replayed: int = 0
 
     def edge(self, name: str) -> EdgeReport:
         """Lookup by full edge name (``"src->dst"``) or by dst stage."""
@@ -189,6 +203,51 @@ def _imbalance(counts: np.ndarray) -> float:
                  / max(counts.mean(), 1e-12)) if counts.size else 0.0
 
 
+def _chain_observers(*observers):
+    """Fan one event-observer callback out to several consumers (remap
+    accountant + keyed-state manager)."""
+
+    def call(kind, grouper, event):
+        for o in observers:
+            o(kind, grouper, event)
+
+    return call
+
+
+def _stage_manager(stage: Stage) -> Optional[KeyedStateManager]:
+    return (KeyedStateManager(stage.operator)
+            if stage.operator is not None else None)
+
+
+def _state_extra(srep: Optional[StateReport]) -> Dict:
+    """The EdgeReport state columns for an operator stage (ISSUE 4) —
+    shared by both engines so the schema cannot drift."""
+    if srep is None:
+        return {}
+    from ..state.store import ENTRY_BYTES
+
+    return dict(state_bytes=srep.state_bytes_peak,
+                state_entries=srep.state_bytes_peak // ENTRY_BYTES,
+                partial_entries=srep.partial_entries,
+                migration_bytes=srep.migration_bytes,
+                tuples_replayed=srep.tuples_replayed)
+
+
+def _emit_state(mgr: KeyedStateManager, finishes: np.ndarray,
+                in_roots: np.ndarray, fallback_time: float):
+    """The stream an operator stage emits: one partial-aggregate tuple per
+    state entry, keyed by the aggregation key and released when its worker
+    flushed the window (the finish time of that worker's last tuple in the
+    window; ``fallback_time`` covers entries whose anchor tuple never
+    finished — the serving engine's dropped requests)."""
+    ks, last = mgr.partial_entries()
+    t = finishes[last]
+    t = np.where(t >= 0.0, t, fallback_time)
+    roots = in_roots[last]
+    order = np.argsort(t, kind="stable")
+    return ks[order], t[order], roots[order]
+
+
 # ---------------------------------------------------------------------------
 # DSPE simulator engine
 # ---------------------------------------------------------------------------
@@ -227,6 +286,7 @@ class SimulatorEngine:
         sinks = set(topology.sinks())
         reports: List[EdgeReport] = []
         e2e: List[np.ndarray] = []
+        state: Dict[str, Dict] = {}
         total_time = 0.0
 
         for idx, edge in enumerate(topology.ordered_edges()):
@@ -246,6 +306,7 @@ class SimulatorEngine:
             acct = RemapAccountant(
                 _sample_keys(in_keys, self.remap_sample) if sub_events
                 else [])
+            mgr = _stage_manager(stage)
             res = simulate_edge(
                 grouper, in_keys,
                 # the source stream is uniform by construction: taking the
@@ -257,15 +318,27 @@ class SimulatorEngine:
                 sample_every=self.sample_every,
                 sample_noise=self.sample_noise,
                 events=sub_events,
-                seed=self.seed + 17 * idx, event_observer=acct,
+                seed=self.seed + 17 * idx,
+                event_observer=(acct if mgr is None
+                                else _chain_observers(acct, mgr.on_event)),
+                tuple_observer=mgr.feed if mgr is not None else None,
             )
+            srep = None
+            if mgr is not None:
+                mgr.finalize()
+                srep = mgr.report(stage.name)
+                state[stage.name] = srep.summary()
             reports.append(self._edge_report(edge, stage, res.metrics, m,
-                                             acct))
+                                             acct, srep))
             if m:
                 total_time = max(total_time, float(res.finishes.max()))
             if stage.name in sinks:
                 e2e.append(res.finishes - in_roots * dt)
-            else:  # sinks emit nothing anyone consumes
+            elif mgr is not None:  # operator stages emit their partials
+                streams[edge.dst] = _emit_state(
+                    mgr, res.finishes, in_roots,
+                    float(res.finishes.max()) if m else 0.0)
+            else:  # intermediate stage: release transformed tuples
                 streams[edge.dst] = _emit(stage, in_keys, res.finishes,
                                           in_roots)
 
@@ -275,16 +348,21 @@ class SimulatorEngine:
             engine=self.name, topology=topology.name, n_source_tuples=n,
             total_time=total_time, e2e_latency_avg=avg, e2e_latency_p50=p50,
             e2e_latency_p95=p95, e2e_latency_p99=p99, edges=reports,
+            state=state,
+            migration_bytes=sum(r.migration_bytes for r in reports),
+            tuples_replayed=sum(r.tuples_replayed for r in reports),
         )
 
     @staticmethod
     def _edge_report(edge: Edge, stage: Stage, metrics: StreamMetrics,
-                     n_tuples: int, acct: RemapAccountant) -> EdgeReport:
+                     n_tuples: int, acct: RemapAccountant,
+                     srep: Optional[StateReport] = None) -> EdgeReport:
+        extra = _state_extra(srep)
         return EdgeReport(
             edge=edge.name, src=edge.src, dst=edge.dst,
             scheme=edge.grouping.scheme, workers=stage.parallelism,
             n_tuples=n_tuples, remap_events=acct.per_event,
-            remap_frac_mean=acct.frac_mean(), **metrics.row(),
+            remap_frac_mean=acct.frac_mean(), **metrics.row(), **extra,
         )
 
 
@@ -354,6 +432,7 @@ class ServingTopologyEngine:
         sinks = set(topology.sinks())
         reports: List[EdgeReport] = []
         e2e: List[np.ndarray] = []
+        state: Dict[str, Dict] = {}
         total_time = 0.0
 
         for edge in topology.ordered_edges():
@@ -369,6 +448,9 @@ class ServingTopologyEngine:
             pending = sorted(scoped(events, edge.dst), key=lambda e: e.at)
             acct = RemapAccountant(
                 _sample_keys(in_keys, self.remap_sample) if pending else [])
+            mgr = _stage_manager(stage)
+            observer = (acct if mgr is None
+                        else _chain_observers(acct, mgr.on_event))
             reqs = [Request(i, int(k), arrival=float(t), target_tokens=1)
                     for i, (k, t) in enumerate(zip(in_keys.tolist(),
                                                    in_times.tolist()))]
@@ -376,13 +458,21 @@ class ServingTopologyEngine:
             nxt = 0
             while len(eng.done) < m and tick < self.max_ticks:
                 while pending and pending[0].at <= nxt:
-                    self._apply_event(eng, pending.pop(0), acct)
+                    self._apply_event(eng, pending.pop(0), observer)
                 while nxt < m and in_times[nxt] <= tick:
                     eng.submit(reqs[nxt])
+                    if mgr is not None:  # routed exactly once, at ingress
+                        mgr.feed(in_keys[nxt:nxt + 1],
+                                 np.array([reqs[nxt].replica]))
                     nxt += 1
                 eng.tick()
                 tick += 1
 
+            srep = None
+            if mgr is not None:
+                mgr.finalize()
+                srep = mgr.report(stage.name)
+                state[stage.name] = srep.summary()
             finishes = np.array([r.finished for r in reqs])
             done = finishes >= 0
             lats = (finishes - in_times)[done]
@@ -401,12 +491,16 @@ class ServingTopologyEngine:
                 remap_events=acct.per_event,
                 remap_frac_mean=acct.frac_mean(),
                 dropped=int(m - done.sum()),
+                **_state_extra(srep),
             ))
             if done.any():
                 total_time = max(total_time, float(finishes[done].max()))
             if stage.name in sinks:
                 e2e.append((finishes - in_roots * dt)[done])
-            else:  # sinks emit nothing anyone consumes
+            elif mgr is not None:  # operator stages emit their partials
+                streams[edge.dst] = _emit_state(mgr, finishes, in_roots,
+                                                float(eng.now))
+            else:  # intermediate stage: release transformed tuples
                 streams[edge.dst] = _emit(stage, in_keys[done],
                                           finishes[done], in_roots[done])
 
@@ -416,11 +510,14 @@ class ServingTopologyEngine:
             engine=self.name, topology=topology.name, n_source_tuples=n,
             total_time=total_time, e2e_latency_avg=avg, e2e_latency_p50=p50,
             e2e_latency_p95=p95, e2e_latency_p99=p99, edges=reports,
+            state=state,
+            migration_bytes=sum(r.migration_bytes for r in reports),
+            tuples_replayed=sum(r.tuples_replayed for r in reports),
         )
 
-    def _apply_event(self, eng, event, acct: RemapAccountant) -> None:
+    def _apply_event(self, eng, event, observer) -> None:
         if isinstance(event, MembershipEvent):
-            acct("pre_membership", eng.router, event)
+            observer("pre_membership", eng.router, event)
             target = {int(w) for w in event.workers}
             for dead in [r for r in eng.alive if r not in target]:
                 eng.fail_replica(dead)
@@ -431,10 +528,10 @@ class ServingTopologyEngine:
                         f"ids are never reused and must extend the range "
                         f"contiguously (next id is {eng.num_replicas})")
                 eng.add_replica(speed=1.0, slots=self.slots_per_replica)
-            acct("post_membership", eng.router, event)
+            observer("post_membership", eng.router, event)
         elif isinstance(event, CapacityEvent):
             for wk, cap in event.capacities.items():
                 eng.set_replica_speed(int(wk), 1.0 / max(float(cap), 1e-9))
-            acct("capacity", eng.router, event)
+            observer("capacity", eng.router, event)
         else:  # pragma: no cover - ScopedEvent validates on construction
             raise TypeError(f"unknown event type {type(event).__name__}")

@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.stream import CapacityEvent, MembershipEvent
+from ..state.window import WindowOp
 from .configs import SchemeConfig
 
 __all__ = [
@@ -124,13 +125,23 @@ class Stage:
     """A named operator: ``parallelism`` FIFO workers processing one tuple in
     ``cost`` seconds each (or per-worker ``capacities``, cycled over the
     pool — the Fig. 7 fast/slow mix), optionally emitting downstream tuples
-    via ``transform``."""
+    via ``transform`` *or* running a windowed keyed aggregation via
+    ``operator`` (ISSUE 4).
+
+    An ``operator`` stage holds per-worker keyed state (DESIGN.md §9): the
+    engines maintain its window stores, account migration cost on churn,
+    and — if the stage has a downstream edge — emit one partial-aggregate
+    tuple per state entry at window close, keyed by the aggregation key
+    (the merge stage's input).  ``transform`` and ``operator`` are mutually
+    exclusive: an operator's emission *is* its partial stream.
+    """
 
     name: str
     parallelism: int
     cost: Optional[float] = None          # uniform seconds/tuple
     capacities: Tuple[float, ...] = ()    # per-worker override (cycled)
     transform: Optional[KeyTransform] = None
+    operator: Optional[WindowOp] = None
 
     def __post_init__(self) -> None:
         if not self.name or self.name == SOURCE:
@@ -147,6 +158,15 @@ class Stage:
         if any(c <= 0.0 for c in self.capacities):
             raise ValueError(f"stage {self.name!r}: capacities must be "
                              f"positive")
+        if self.operator is not None:
+            if not isinstance(self.operator, WindowOp):
+                raise TypeError(f"stage {self.name!r}: operator must be a "
+                                f"repro.state.WindowOp, got "
+                                f"{type(self.operator).__name__}")
+            if self.transform is not None:
+                raise ValueError(f"stage {self.name!r}: transform and "
+                                 f"operator are mutually exclusive (an "
+                                 f"operator emits its partial aggregates)")
 
     @property
     def fanout(self) -> int:

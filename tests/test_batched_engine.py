@@ -18,11 +18,20 @@ import pytest
 
 from hypothesis_compat import given, settings, st
 
-from repro.core import make_grouper, simulate_stream, simulate_stream_reference
+from repro.core import simulate_edge
+from repro.topology import build_grouper
 from repro.data.synthetic import intern_keys, zipf_time_evolving
 
 EXACT_SCHEMES = ("sg", "fg", "pkg")
 DRIFT_SCHEMES = ("dc", "wc", "fish")
+
+
+def _sim_batched(g, keys, **kw):
+    return simulate_edge(g, keys, mode="batched", **kw).metrics
+
+
+def _sim_reference(g, keys, **kw):
+    return simulate_edge(g, keys, mode="reference", **kw).metrics
 
 
 @pytest.fixture(scope="module")
@@ -31,11 +40,11 @@ def keys():
 
 
 def _pair(scheme, keys, workers=16, **kw):
-    m_ref = simulate_stream_reference(
-        make_grouper(scheme, workers), keys, arrival_rate=2e4, **kw
+    m_ref = _sim_reference(
+        build_grouper(scheme, workers), keys, arrival_rate=2e4, **kw
     )
-    m_bat = simulate_stream(
-        make_grouper(scheme, workers), keys, arrival_rate=2e4, **kw
+    m_bat = _sim_batched(
+        build_grouper(scheme, workers), keys, arrival_rate=2e4, **kw
     )
     return m_ref, m_bat
 
@@ -47,9 +56,9 @@ def _pair(scheme, keys, workers=16, **kw):
 
 @pytest.mark.parametrize("scheme", EXACT_SCHEMES)
 def test_assign_batch_exact(scheme, keys):
-    g_ref = make_grouper(scheme, 16)
+    g_ref = build_grouper(scheme, 16)
     seq = np.array([g_ref.assign(k, i * 5e-5) for i, k in enumerate(keys)])
-    g_bat = make_grouper(scheme, 16)
+    g_bat = build_grouper(scheme, 16)
     bat = g_bat.assign_batch(keys, 0.0, 5e-5)
     np.testing.assert_array_equal(seq, bat)
     np.testing.assert_array_equal(g_ref.assigned_counts, g_bat.assigned_counts)
@@ -58,10 +67,10 @@ def test_assign_batch_exact(scheme, keys):
 
 @pytest.mark.parametrize("scheme", DRIFT_SCHEMES)
 def test_assign_batch_bounded_drift(scheme, keys):
-    g_ref = make_grouper(scheme, 16)
+    g_ref = build_grouper(scheme, 16)
     for i, k in enumerate(keys):
         g_ref.assign(k, i * 5e-5)
-    g_bat = make_grouper(scheme, 16)
+    g_bat = build_grouper(scheme, 16)
     g_bat.assign_batch(keys, 0.0, 5e-5)
     c_ref = g_ref.assigned_counts.astype(float)
     c_bat = g_bat.assigned_counts.astype(float)
@@ -103,14 +112,14 @@ def test_simulator_metrics_bounded(scheme, keys):
 def test_simulator_object_keys_fall_back():
     """Non-integer keys take the reference path transparently."""
     str_keys = np.array([f"k{i % 7}" for i in range(300)], dtype=object)
-    m = simulate_stream(make_grouper("pkg", 4), str_keys, arrival_rate=1e3)
+    m = _sim_batched(build_grouper("pkg", 4), str_keys, arrival_rate=1e3)
     assert m.execution_time > 0
 
     # interned ids take the batched path and stay exact vs their own oracle
     ids, vocab = intern_keys(str_keys)
     assert ids.dtype == np.int32 and vocab.shape[0] == 7
-    m_bat = simulate_stream(make_grouper("pkg", 4), ids, arrival_rate=1e3)
-    m_ref = simulate_stream_reference(make_grouper("pkg", 4), ids,
+    m_bat = _sim_batched(build_grouper("pkg", 4), ids, arrival_rate=1e3)
+    m_ref = _sim_reference(build_grouper("pkg", 4), ids,
                                       arrival_rate=1e3)
     assert m_bat.execution_time == pytest.approx(m_ref.execution_time)
 
@@ -122,7 +131,7 @@ def test_assign_batch_and_pipeline_accept_object_keys():
 
     str_keys = np.array(["a", "b", "a", "c", "b", "a"] * 40, dtype=object)
     for scheme in EXACT_SCHEMES + DRIFT_SCHEMES:
-        g = make_grouper(scheme, 4)
+        g = build_grouper(scheme, 4)
         workers = g.assign_batch(str_keys, 0.0, 1e-4)
         assert workers.shape == str_keys.shape
         assert set(g.replicas) == {"a", "b", "c"}

@@ -11,13 +11,21 @@ every orphaned request for every routing scheme.
 import numpy as np
 import pytest
 
-from repro.core import (MembershipEvent, make_grouper, simulate_stream,
-                        simulate_stream_reference)
+from repro.core import MembershipEvent, simulate_edge
 from repro.data.synthetic import zipf_time_evolving
 from repro.serving.engine import Request, ServingEngine
+from repro.topology import build_grouper
 
 SCHEMES = ("sg", "fg", "pkg", "dc", "wc", "fish")
 EXACT_SCHEMES = ("sg", "fg", "pkg")
+
+
+def _sim_batched(g, keys, **kw):
+    return simulate_edge(g, keys, mode="batched", **kw).metrics
+
+
+def _sim_reference(g, keys, **kw):
+    return simulate_edge(g, keys, mode="reference", **kw).metrics
 
 
 @pytest.fixture(scope="module")
@@ -28,7 +36,7 @@ def keys():
 @pytest.mark.parametrize("scheme", SCHEMES)
 @pytest.mark.parametrize("batched", [True, False], ids=["batch", "scalar"])
 def test_routes_only_to_live_workers(scheme, batched, keys):
-    g = make_grouper(scheme, 8)
+    g = build_grouper(scheme, 8)
     head, tail = keys[:2_000], keys[2_000:4_000]
     if batched:
         g.assign_batch(head, 0.0, 5e-5)
@@ -54,9 +62,9 @@ def test_exact_schemes_agree_across_membership_events(scheme, keys):
         MembershipEvent(at=2_500, workers=tuple(w for w in range(8) if w != 3)),
         MembershipEvent(at=5_500, workers=tuple(range(9))),  # 3 back + 8 new
     ]
-    m_ref = simulate_stream_reference(make_grouper(scheme, 8), keys,
+    m_ref = _sim_reference(build_grouper(scheme, 8), keys,
                                       arrival_rate=2e4, events=ev)
-    m_bat = simulate_stream(make_grouper(scheme, 8), keys,
+    m_bat = _sim_batched(build_grouper(scheme, 8), keys,
                             arrival_rate=2e4, events=ev)
     for field, v_ref in m_ref.row().items():
         assert m_bat.row()[field] == pytest.approx(v_ref, rel=1e-9), field
@@ -66,15 +74,15 @@ def test_exact_schemes_agree_across_membership_events(scheme, keys):
 def test_simulator_membership_event_no_scheme_raises(scheme, keys):
     ev = [MembershipEvent(at=4_000, workers=tuple(w for w in range(8)
                                                   if w != 3))]
-    for sim in (simulate_stream, simulate_stream_reference):
-        g = make_grouper(scheme, 8)
+    for sim in (_sim_batched, _sim_reference):
+        g = build_grouper(scheme, 8)
         m = sim(g, keys, arrival_rate=2e4, events=ev)
         assert m.execution_time > 0
 
 
 @pytest.mark.parametrize("scheme", SCHEMES)
 def test_scale_out_grows_arrays_and_uses_new_workers(scheme, keys):
-    g = make_grouper(scheme, 4)
+    g = build_grouper(scheme, 4)
     g.assign_batch(keys[:2_000], 0.0, 5e-5)
     g.on_membership_change(range(6))  # workers 4, 5 join
     assert g.assigned_counts.shape[0] == 6
@@ -88,7 +96,7 @@ def test_scale_out_grows_arrays_and_uses_new_workers(scheme, keys):
 
 @pytest.mark.parametrize("scheme", ["dc", "wc"])
 def test_dc_wc_theta_tracks_worker_growth(scheme):
-    g = make_grouper(scheme, 8)
+    g = build_grouper(scheme, 8)
     assert g.theta == pytest.approx(0.25 / 8)
     g.on_membership_change(range(16))
     assert g.theta == pytest.approx(0.25 / 16)
@@ -96,7 +104,7 @@ def test_dc_wc_theta_tracks_worker_growth(scheme):
 
 def test_fg_consistent_hash_affinity_on_removal():
     w = 8
-    g = make_grouper("fg", w)
+    g = build_grouper("fg", w)
     sample = [int(k) for k in range(2_000)]
     before = {k: g.probe_route(k) for k in sample}
     removed = 5

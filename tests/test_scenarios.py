@@ -3,8 +3,8 @@
 import numpy as np
 import pytest
 
-from repro.core import (CapacityEvent, MembershipEvent, make_grouper,
-                        simulate_stream, simulate_stream_reference)
+from repro.core import CapacityEvent, MembershipEvent, simulate_edge
+from repro.topology import build_grouper
 from repro.data.synthetic import zipf_time_evolving
 from repro.scenarios import (CapacitySpec, ChurnOp, Scenario, StragglerSpec,
                              WorkloadSpec, base_capacities, build_keys,
@@ -12,6 +12,14 @@ from repro.scenarios import (CapacitySpec, ChurnOp, Scenario, StragglerSpec,
                              run_dspe_scenario, run_serving_scenario)
 
 SCHEMES = ("sg", "fg", "pkg", "dc", "wc", "fish")
+
+
+def _sim_batched(g, keys, **kw):
+    return simulate_edge(g, keys, mode="batched", **kw).metrics
+
+
+def _sim_reference(g, keys, **kw):
+    return simulate_edge(g, keys, mode="reference", **kw).metrics
 
 
 # ---------------------------------------------------------------------------
@@ -23,13 +31,13 @@ def test_capacity_event_straggler_slows_then_recovery_bounds():
     keys = zipf_time_evolving(10_000, num_keys=1_000, z=1.2, seed=2)
     w = 4
     caps = np.full(w, 0.9 * w / 2e4)
-    base = simulate_stream(make_grouper("sg", w), keys, capacities=caps,
+    base = _sim_batched(build_grouper("sg", w), keys, capacities=caps,
                           arrival_rate=2e4)
     onset = [CapacityEvent(at=3_000, capacities={1: float(caps[1]) * 6})]
-    slow = simulate_stream(make_grouper("sg", w), keys, capacities=caps,
+    slow = _sim_batched(build_grouper("sg", w), keys, capacities=caps,
                           arrival_rate=2e4, events=onset)
     both = onset + [CapacityEvent(at=6_000, capacities={1: float(caps[1])})]
-    rec = simulate_stream(make_grouper("sg", w), keys, capacities=caps,
+    rec = _sim_batched(build_grouper("sg", w), keys, capacities=caps,
                           arrival_rate=2e4, events=both)
     assert slow.latency_p99 > base.latency_p99 * 2
     assert rec.execution_time < slow.execution_time
@@ -40,9 +48,9 @@ def test_capacity_event_exact_between_engines():
     ev = [CapacityEvent(at=2_000, capacities={0: 9e-4, 2: 1e-4}),
           MembershipEvent(at=5_000, workers=(0, 1, 2)),
           CapacityEvent(at=6_000, capacities={0: 3e-4})]
-    m_ref = simulate_stream_reference(make_grouper("fg", 4), keys,
+    m_ref = _sim_reference(build_grouper("fg", 4), keys,
                                       arrival_rate=2e4, events=ev)
-    m_bat = simulate_stream(make_grouper("fg", 4), keys,
+    m_bat = _sim_batched(build_grouper("fg", 4), keys,
                             arrival_rate=2e4, events=ev)
     for field, v_ref in m_ref.row().items():
         assert m_bat.row()[field] == pytest.approx(v_ref, rel=1e-9), field
@@ -83,8 +91,8 @@ def test_out_of_range_events_do_not_stall_cursor():
     ev = [MembershipEvent(at=-1, workers=(0, 1, 2, 3)),   # before the stream
           MembershipEvent(at=500, workers=(0, 1)),        # must still fire
           MembershipEvent(at=5_000, workers=(0,))]        # past the end
-    for sim in (simulate_stream, simulate_stream_reference):
-        g = make_grouper("fg", 4)
+    for sim in (_sim_batched, _sim_reference):
+        g = build_grouper("fg", 4)
         sim(g, keys, arrival_rate=2e4, events=ev)
         assert g.active_workers == [0, 1]
 

@@ -1,0 +1,343 @@
+"""Keyed operator-state subsystem (ISSUE 4): store backends, window
+semantics, split-key merge, and migration exactness under churn.
+
+The load-bearing contract: merged per-window results are a pure function
+of the input key stream — identical across store backends, grouping
+schemes, engines, churn patterns and migration policies, and equal to the
+routing-free :func:`repro.state.direct_aggregate` oracle.  Migration is a
+*cost* (bytes moved / tuples replayed), never a correctness event.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import MembershipEvent
+from repro.data.synthetic import zipf_time_evolving
+from repro.scenarios import (Scenario, WorkloadSpec, ChurnOp,
+                             default_scenarios, run_dspe_scenario,
+                             run_serving_scenario)
+from repro.state import (ENTRY_BYTES, ArrayStateStore, DictStateStore,
+                         KeyedStateManager, WindowOp, direct_aggregate,
+                         merge_partials, topk_cut, tuple_values)
+from repro.topology import (Edge, FieldConfig, ScopedEvent,
+                            ServingTopologyEngine, SimulatorEngine, Source,
+                            Stage, Topology, config_for)
+
+SCHEMES = ("sg", "fg", "pkg", "dc", "wc", "fish")
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return zipf_time_evolving(6_000, num_keys=600, z=1.4, seed=0)
+
+
+def _topo(scheme, op, workers=8, merge_workers=4):
+    return Topology(
+        name="state",
+        stages=(Stage("count", parallelism=workers, operator=op),
+                Stage("merge", parallelism=merge_workers)),
+        edges=(Edge("source", "count", config_for(scheme)),
+               Edge("count", "merge", FieldConfig())),
+    )
+
+
+_CHURN = [
+    # worker 3 fails, then returns alongside a brand-new worker 8
+    ScopedEvent("count", MembershipEvent(
+        at=2_500, workers=tuple(w for w in range(8) if w != 3))),
+    ScopedEvent("count", MembershipEvent(at=4_500, workers=tuple(range(9)))),
+]
+
+
+# ---------------------------------------------------------------------------
+# store backends
+# ---------------------------------------------------------------------------
+
+
+def test_store_backends_equivalent_under_update_take_merge():
+    rng = np.random.default_rng(0)
+    a, d = ArrayStateStore(4), DictStateStore()
+    for _ in range(40):
+        ks = rng.integers(0, 400, rng.integers(1, 150))
+        vs = rng.integers(1, 9, ks.shape[0])
+        a.update_batch(ks, vs)
+        d.update_batch(ks, vs)
+        if rng.random() < 0.5 and a.num_entries > 4:
+            all_k, _, _ = a.items()
+            pick = all_k[rng.choice(all_k.shape[0],
+                                    min(7, all_k.shape[0]), replace=False)]
+            va, ca = a.take(pick)
+            vd, cd = d.take(pick)
+            np.testing.assert_array_equal(va, vd)
+            np.testing.assert_array_equal(ca, cd)
+            # round-trip: merging the extracted entries back is lossless
+            a.merge_entries(pick, va, ca)
+            d.merge_entries(pick, vd, cd)
+    for xa, xd in zip(a.items(), d.items()):
+        np.testing.assert_array_equal(xa, xd)
+    assert a.num_entries == d.num_entries
+    assert a.size_bytes() == d.size_bytes() == a.num_entries * ENTRY_BYTES
+
+
+def test_array_store_grows_and_reuses_tombstones():
+    st = ArrayStateStore(4)
+    ks = np.arange(500, dtype=np.int64)
+    st.update_batch(ks, np.ones(500, dtype=np.int64))
+    assert st.num_entries == 500  # forced several resizes from cap 4
+    vals, cnts = st.take(ks[:250])
+    assert st.num_entries == 250
+    np.testing.assert_array_equal(vals, np.ones(250, dtype=np.int64))
+    st.update_batch(ks[:250], np.full(250, 5, dtype=np.int64))  # reinsert
+    out_k, out_v, _ = st.items()
+    np.testing.assert_array_equal(out_k, ks)
+    assert out_v[:250].tolist() == [5] * 250
+    with pytest.raises(KeyError):
+        st.take(np.array([10_000]))
+
+
+def test_window_op_validation():
+    with pytest.raises(ValueError):
+        WindowOp(agg="median")
+    with pytest.raises(ValueError):
+        WindowOp(size=0)
+    with pytest.raises(ValueError):
+        WindowOp(size=10, slide=3)  # size must be a multiple of slide
+    with pytest.raises(ValueError):
+        WindowOp(backend="redis")
+    with pytest.raises(ValueError):
+        WindowOp(migration="teleport")
+    with pytest.raises(ValueError):
+        WindowOp(agg="topk", k=0)
+    assert WindowOp(size=10, slide=5).stride == 5
+    assert WindowOp(size=10).stride == 10
+
+
+# ---------------------------------------------------------------------------
+# window semantics + merge
+# ---------------------------------------------------------------------------
+
+
+def test_tumbling_and_sliding_oracle_shapes():
+    keys = np.array([1, 1, 2, 1, 3, 3, 2, 1], dtype=np.int64)
+    tumb = direct_aggregate(keys, WindowOp(agg="count", size=4))
+    assert tumb == {0: {1: 3, 2: 1}, 4: {1: 1, 2: 1, 3: 2}}
+    slide = direct_aggregate(keys, WindowOp(agg="count", size=4, slide=2))
+    assert slide[2] == {1: 1, 2: 1, 3: 2}  # tuples 2..5 = [2, 1, 3, 3]
+    assert set(slide) == {0, 2, 4, 6}
+    top = direct_aggregate(keys, WindowOp(agg="topk", size=8, k=2))
+    assert top == {0: [[1, 4], [2, 2]]}  # count ties break to smaller key
+
+
+def test_topk_tie_break_deterministic():
+    ks = np.array([5, 2, 9], dtype=np.int64)
+    cs = np.array([3, 3, 7], dtype=np.int64)
+    assert topk_cut(ks, cs, 2) == [[9, 7], [2, 3]]
+
+
+def test_sum_values_deterministic_per_key():
+    op = WindowOp(agg="sum", size=8)
+    k = np.array([7, 7, 11], dtype=np.int64)
+    v1, v2 = tuple_values(op, k), tuple_values(op, k)
+    np.testing.assert_array_equal(v1, v2)
+    assert v1[0] == v1[1] and (v1 >= 1).all()
+
+
+@pytest.mark.parametrize("backend", ["dict", "array"])
+@pytest.mark.parametrize("agg", ["count", "sum", "topk"])
+def test_backends_and_aggs_match_oracle_through_engine(keys, backend, agg):
+    op = WindowOp(agg=agg, size=1_500, backend=backend, k=5)
+    rep = SimulatorEngine().run(_topo("pkg", op),
+                                Source(keys, arrival_rate=2e4))
+    assert rep.state["count"]["merged"] == direct_aggregate(keys, op)
+
+
+def test_merge_stage_consumes_one_tuple_per_state_entry(keys):
+    op = WindowOp(agg="count", size=2_000)
+    rep = SimulatorEngine().run(_topo("pkg", op),
+                                Source(keys, arrival_rate=2e4))
+    er = rep.edge("count")
+    assert er.partial_entries == rep.edge("merge").n_tuples > 0
+    assert er.state_bytes > 0
+    assert er.state_bytes == er.state_entries * ENTRY_BYTES
+    # split keys: PKG may hold a hot key on 2 workers, so the merge input
+    # exceeds the per-window distinct-key count
+    st = rep.state["count"]
+    distinct = sum(len(w) for w in st["merged"].values())
+    assert er.partial_entries >= distinct
+    # merge stage sees partials after the window closes: e2e covers them
+    assert rep.e2e_latency_p99 > 0
+
+
+# ---------------------------------------------------------------------------
+# migration exactness: churn never changes merged results (tentpole gate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_dspe_churn_exactness_all_schemes(keys, scheme):
+    op = WindowOp(agg="count", size=2_000)
+    oracle = direct_aggregate(keys, op)
+    src = Source(keys, arrival_rate=2e4)
+    base = SimulatorEngine().run(_topo(scheme, op), src)
+    churn = SimulatorEngine().run(_topo(scheme, op), src, _CHURN)
+    assert base.state["count"]["merged"] == oracle
+    assert churn.state["count"]["merged"] == oracle
+    assert churn.migration_bytes > 0  # failure moved real state
+    assert base.migration_bytes == 0
+
+
+@pytest.mark.parametrize("scheme", ("sg", "fg", "fish"))
+def test_reference_engine_churn_exactness(keys, scheme):
+    op = WindowOp(agg="sum", size=2_000)
+    oracle = direct_aggregate(keys, op)
+    rep = SimulatorEngine(mode="reference").run(
+        _topo(scheme, op), Source(keys, arrival_rate=2e4), _CHURN)
+    assert rep.state["count"]["merged"] == oracle
+    assert rep.migration_bytes > 0
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_serving_engine_churn_exactness_all_schemes(keys, scheme):
+    op = WindowOp(agg="count", size=48)
+    eng = ServingTopologyEngine(max_requests=96)
+    src = Source(keys, arrival_rate=2e4)
+    sub = keys[np.linspace(0, keys.shape[0] - 1, 96).astype(np.int64)]
+    oracle = direct_aggregate(sub, op)
+    events = [ScopedEvent("count", MembershipEvent(
+        at=40, workers=(0, 1, 2, 3, 4))),
+        ScopedEvent("count", MembershipEvent(
+            at=70, workers=(0, 1, 2, 3, 4, 6)))]
+    base = eng.run(_topo(scheme, op, workers=6), src)
+    churn = eng.run(_topo(scheme, op, workers=6), src, events)
+    assert base.state["count"]["merged"] == oracle
+    assert churn.state["count"]["merged"] == oracle
+    assert churn.state["count"]["migration_events"] == 2
+
+
+def test_boundary_aligned_event_migrates_nothing():
+    """A window that completed exactly at the event index is lazily open
+    but *done* — its state must flush, never migrate (cost would be
+    overcounted otherwise)."""
+    from repro.state import KeyedStateManager
+
+    class _G:
+        active_workers = [0, 1]
+
+        def probe_route(self, k):
+            return int(k) % 2
+
+    class _G2(_G):
+        active_workers = [0]
+
+        def probe_route(self, k):
+            return 0
+
+    mgr = KeyedStateManager(WindowOp(agg="count", size=100))
+    ks = np.arange(100, dtype=np.int64)
+    mgr.feed(ks, ks % 2)
+    mgr.on_event("pre_membership", _G())   # event lands at idx == 100
+    mgr.on_event("post_membership", _G2())
+    mgr.finalize()
+    rep = mgr.report("s")
+    assert rep.migration_bytes == 0 and rep.tuples_replayed == 0
+    assert rep.merged == direct_aggregate(ks, WindowOp(agg="count", size=100))
+
+
+def test_rebuild_policy_replays_instead_of_moving_bytes(keys):
+    op = WindowOp(agg="count", size=2_000, migration="rebuild")
+    rep = SimulatorEngine().run(_topo("fg", op),
+                                Source(keys, arrival_rate=2e4), _CHURN)
+    st = rep.state["count"]
+    assert st["merged"] == direct_aggregate(keys, op)
+    assert st["tuples_replayed"] > 0
+    assert st["migration_bytes"] == 0
+
+
+def test_sliding_windows_exact_under_churn(keys):
+    op = WindowOp(agg="count", size=2_000, slide=500)
+    rep = SimulatorEngine().run(_topo("fish", op),
+                                Source(keys, arrival_rate=2e4), _CHURN)
+    assert rep.state["count"]["merged"] == direct_aggregate(keys, op)
+    assert rep.state["count"]["windows"] == len(range(0, 6_000, 500))
+
+
+def test_operator_stage_rejects_transform():
+    from repro.topology import hashed_fanout
+
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        Stage("s", 2, transform=hashed_fanout(2, 10),
+              operator=WindowOp(size=10))
+    with pytest.raises(TypeError, match="WindowOp"):
+        Stage("s", 2, operator="count")
+
+
+# ---------------------------------------------------------------------------
+# scenario runners report state-migration cost + exactness
+# ---------------------------------------------------------------------------
+
+
+def test_dspe_scenario_reports_state_migration():
+    suite = default_scenarios(num_tuples=3_000, num_keys=300, workers=6)
+    # window straddles every suite churn point (at 900/1200/1500/1800):
+    # a boundary-aligned event would rightly migrate nothing
+    op = WindowOp(agg="count", size=1_000)
+    for sc in suite:
+        for scheme in ("fg", "fish"):
+            out = run_dspe_scenario(sc, scheme, window=op)
+            st = out["state"]
+            assert st["exact"], (sc.name, scheme)
+            if sc.churn:
+                assert st["migration_bytes"] > 0, (sc.name, scheme)
+            else:
+                assert st["migration_bytes"] == 0, (sc.name, scheme)
+
+
+def test_dspe_scenario_without_window_has_no_state_row():
+    sc = default_scenarios(num_tuples=1_500, num_keys=200, workers=4)[0]
+    out = run_dspe_scenario(sc, "pkg")
+    assert "state" not in out
+
+
+def test_serving_scenario_reports_state_migration():
+    sc = next(s for s in default_scenarios(3_000, 300, 6)
+              if s.name == "failure_elastic")
+    out = run_serving_scenario(sc, "sg", num_requests=60,
+                               window=WindowOp(agg="count", size=60))
+    st = out["state"]
+    assert out["completed"] == 60
+    assert st["exact"]
+    # SG replicates sessions on every live replica, so the failed replica
+    # is guaranteed to hold state when the heartbeat monitor fires
+    assert st["migration_bytes"] > 0
+    assert st["migration_events"] >= 1
+
+
+def test_serving_scenario_scale_out_state_exact():
+    sc = Scenario(
+        "scale_out_state", workers=4,
+        workload=WorkloadSpec("piecewise", 2_000, 200, z=1.2, phases=4),
+        churn=(ChurnOp(0.5, "add", 4),),
+    )
+    out = run_serving_scenario(sc, "fish", num_requests=48,
+                               window=WindowOp(agg="sum", size=48))
+    assert out["state"]["exact"]
+    assert out["state"]["migration_events"] == 1
+
+
+# ---------------------------------------------------------------------------
+# report plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_reports_roundtrip_json(keys):
+    import json
+
+    op = WindowOp(agg="topk", size=3_000, k=4)
+    rep = SimulatorEngine().run(_topo("wc", op),
+                                Source(keys, arrival_rate=2e4), _CHURN)
+    blob = json.dumps(rep.to_dict())
+    assert "state_bytes" in blob and "migration_bytes" in blob
+    er = rep.edge("count")
+    assert er.migration_bytes == rep.migration_bytes > 0
+    assert rep.state["count"]["per_worker_bytes"]
+    assert rep.state["count"]["state_keys"] == len(np.unique(keys))

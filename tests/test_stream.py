@@ -4,8 +4,17 @@ import numpy as np
 import pytest
 
 from repro.core import (FishGrouper, FishParams, MembershipEvent,
-                        make_grouper, simulate_stream)
+                        simulate_edge)
+from repro.topology import build_grouper
 from repro.data.synthetic import zipf_time_evolving
+
+
+def _sim_batched(g, keys, **kw):
+    return simulate_edge(g, keys, mode="batched", **kw).metrics
+
+
+def _sim_reference(g, keys, **kw):
+    return simulate_edge(g, keys, mode="reference", **kw).metrics
 
 
 @pytest.fixture(scope="module")
@@ -14,9 +23,9 @@ def skewed_keys():
 
 
 def _run(name, keys, workers=16, **kw):
-    g = make_grouper(name, workers)
+    g = build_grouper(name, workers)
     caps = np.full(workers, 0.9 * workers / 20_000.0)
-    return g, simulate_stream(g, keys, capacities=caps, arrival_rate=20_000.0,
+    return g, _sim_batched(g, keys, capacities=caps, arrival_rate=20_000.0,
                               **kw)
 
 
@@ -59,11 +68,11 @@ def test_fish_handles_heterogeneous_workers():
     keys = zipf_time_evolving(20_000, num_keys=2_000, z=1.2, seed=3)
     w = 8
     caps = np.concatenate([np.full(4, 2.0), np.full(4, 1.0)]) * 0.9 * w / 2e4
-    g_fish = make_grouper("fish", w)
-    m_fish = simulate_stream(g_fish, keys, capacities=caps,
+    g_fish = build_grouper("fish", w)
+    m_fish = _sim_batched(g_fish, keys, capacities=caps,
                              arrival_rate=2e4)
-    g_sg = make_grouper("sg", w)
-    m_sg = simulate_stream(g_sg, keys, capacities=caps, arrival_rate=2e4)
+    g_sg = build_grouper("sg", w)
+    m_sg = _sim_batched(g_sg, keys, capacities=caps, arrival_rate=2e4)
     # SG ignores capacity; FISH's Eq. 2 should not be slower (hwa, Fig. 16)
     assert m_fish.execution_time <= m_sg.execution_time * 1.10
 
@@ -71,7 +80,7 @@ def test_fish_handles_heterogeneous_workers():
 def test_membership_event_rescale():
     keys = zipf_time_evolving(12_000, num_keys=1_000, z=1.2, seed=5)
     g = FishGrouper(8)
-    m = simulate_stream(
+    m = _sim_batched(
         g, keys, arrival_rate=2e4,
         events=[MembershipEvent(at=6_000, workers=list(range(7)))],
     )
@@ -86,7 +95,7 @@ def test_fish_without_ch_remaps_more():
     ev = [MembershipEvent(at=8_000, workers=list(range(9)))]
 
     g_ch = FishGrouper(8, use_consistent_hash=True)
-    m_ch = simulate_stream(g_ch, keys, arrival_rate=2e4, events=ev)
+    m_ch = _sim_batched(g_ch, keys, arrival_rate=2e4, events=ev)
     g_no = FishGrouper(8, use_consistent_hash=False)
-    m_no = simulate_stream(g_no, keys, arrival_rate=2e4, events=ev)
+    m_no = _sim_batched(g_no, keys, arrival_rate=2e4, events=ev)
     assert m_ch.memory_overhead <= m_no.memory_overhead * 1.05
