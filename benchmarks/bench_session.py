@@ -1,0 +1,116 @@
+"""Streaming session API: steady-state per-feed latency (ISSUE 5).
+
+Measures what the session redesign is for — incremental record-batch
+execution — against the one-shot baseline:
+
+* ``one_shot``: wall-clock of ``Engine.run`` over the whole stream (the
+  pre-session execution mode, and the throughput ceiling: one giant batch
+  amortises every per-call overhead);
+* ``feeds``: the same stream cut into record batches of 256 → 16k tuples
+  and pushed through ``open → feed* → close``.  Per batch size the
+  artifact records the steady-state per-feed wall-clock (median over the
+  feeds after the first — the first feed pays grouper/caps/state setup),
+  the implied tuples/s, and the relative throughput vs one-shot — i.e.
+  the amortisation curve a caller picks a batch size on.
+
+Equivalence is asserted, not assumed: the session run must route every
+tuple (same n, same memory_overhead as ``run``) for the exact schemes.
+
+Emits ``artifacts/BENCH_session.json``.  Module-level constants are the
+CI-scale knobs (see .github/workflows/ci.yml).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.data.synthetic import zipf_time_evolving
+from repro.topology import (Edge, SimulatorEngine, Source, Stage, Topology,
+                            config_for)
+
+from .common import ARTIFACT_DIR, Reporter
+
+N_TUPLES = 48_000
+N_KEYS = 4_000
+Z = 1.4
+ARRIVAL_RATE = 20_000.0
+WORKERS = 32
+BATCH_SIZES = (256, 1_024, 4_096, 16_384)
+SCHEMES = ("sg", "pkg", "fish")
+
+
+def _topology(scheme) -> Topology:
+    return Topology(
+        name=f"session-{scheme}",
+        stages=(Stage("worker", parallelism=WORKERS),),
+        edges=(Edge("source", "worker", config_for(scheme)),),
+    )
+
+
+def run(rep: Reporter) -> dict:
+    keys = zipf_time_evolving(N_TUPLES, num_keys=N_KEYS, z=Z, seed=0)
+    n = int(keys.shape[0])
+    src = Source(keys, arrival_rate=ARRIVAL_RATE)
+    out = {"n_tuples": n, "n_keys": N_KEYS, "workers": WORKERS,
+           "one_shot": {}, "feeds": {}}
+
+    for scheme in SCHEMES:
+        eng = SimulatorEngine()
+        topo = _topology(scheme)
+        t0 = time.time()
+        base = eng.run(topo, src)
+        one_shot_s = time.time() - t0
+        out["one_shot"][scheme] = {
+            "seconds": one_shot_s,
+            "tuples_per_s": n / max(one_shot_s, 1e-12),
+        }
+        rep.add(f"session/one_shot/{scheme}", one_shot_s * 1e6,
+                f"{n / max(one_shot_s, 1e-12):.0f} tup/s")
+
+        out["feeds"][scheme] = {}
+        for bs in BATCH_SIZES:
+            session = eng.open(topo, arrival_rate=ARRIVAL_RATE)
+            per_feed = []
+            for batch in src.iter_batches(batch_size=bs):
+                t0 = time.time()
+                session.feed(batch)
+                per_feed.append(time.time() - t0)
+            t0 = time.time()
+            report = session.close()
+            close_s = time.time() - t0
+            # steady state: the first feed pays edge setup (grouper build,
+            # capacity planning, ring warm-up) — exclude it
+            steady = np.asarray(per_feed[1:] or per_feed)
+            p50 = float(np.median(steady))
+            row = {
+                "batch_size": bs,
+                "n_feeds": len(per_feed),
+                "per_feed_ms_p50": p50 * 1e3,
+                "per_feed_ms_p95": float(np.percentile(steady, 95)) * 1e3,
+                "first_feed_ms": per_feed[0] * 1e3,
+                "close_ms": close_s * 1e3,
+                "tuples_per_s": bs / max(p50, 1e-12),
+                "rel_throughput_vs_one_shot": (
+                    (bs / max(p50, 1e-12))
+                    / (n / max(one_shot_s, 1e-12))),
+            }
+            out["feeds"][scheme][str(bs)] = row
+            rep.add(f"session/feed/{scheme}/b{bs}", p50 * 1e6,
+                    f"{row['tuples_per_s']:.0f} tup/s "
+                    f"({row['rel_throughput_vs_one_shot']:.2f}x one-shot)")
+            # the session routed the whole stream through the same edge
+            assert report.edge("worker").n_tuples == n, (scheme, bs)
+            if scheme in ("sg", "pkg"):  # sequentially exact schemes
+                assert (report.edge("worker").memory_overhead
+                        == base.edge("worker").memory_overhead), (scheme, bs)
+
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, "BENCH_session.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    rep.add("session/artifact", 0.0, path)
+    return out

@@ -22,8 +22,8 @@ def main() -> None:
 
     from . import (bench_breakdown, bench_chash, bench_deploy, bench_grouping,
                    bench_latency, bench_memory, bench_moe, bench_motivating,
-                   bench_params, bench_scenarios, bench_state, bench_topology,
-                   roofline)
+                   bench_params, bench_scenarios, bench_session, bench_state,
+                   bench_topology, roofline)
 
     modules = [
         ("bench_motivating", bench_motivating),   # Figs. 2-3
@@ -36,6 +36,7 @@ def main() -> None:
         ("bench_scenarios", bench_scenarios),     # RQ4 scenario suite (ISSUE 2)
         ("bench_topology", bench_topology),       # multi-stage DAGs (ISSUE 3)
         ("bench_state", bench_state),             # keyed operator state (ISSUE 4)
+        ("bench_session", bench_session),         # streaming sessions (ISSUE 5)
         ("bench_deploy", bench_deploy),           # Figs. 18-20
         ("bench_moe", bench_moe),                 # beyond-paper MoE routing
         ("roofline", roofline),                   # §Roofline table

@@ -6,6 +6,12 @@ on the edge of a one-stage :class:`~repro.topology.Topology`, run by the
 DSPE :class:`~repro.topology.SimulatorEngine`; the same ``Topology`` object
 would run unchanged on the serving engine (``ServingTopologyEngine``).
 
+The second section is the streaming session API (ISSUE 5): the same stream
+fed incrementally as record batches — ``engine.open`` → ``session.feed`` →
+``session.close`` — with the ZF hot-key flip split across the feed
+boundary, exactly the long-running-DSPE situation FISH's epoch machinery
+exists for.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -14,15 +20,10 @@ from repro.topology import (Edge, SimulatorEngine, Source, Stage, Topology,
                             config_for)
 
 
-def main() -> None:
-    workers = 32
-    keys = zipf_time_evolving(40_000, num_keys=4_000, z=1.4, seed=0)
-    source = Source(keys, arrival_rate=20_000.0)
+def one_shot(workers: int, source: Source) -> None:
     engine = SimulatorEngine()
-
     print(f"{'scheme':8s} {'exec(s)':>9s} {'p99 lat(ms)':>12s} "
           f"{'mem (vs FG)':>12s} {'imbalance':>10s}")
-    base_exec = None
     for scheme in ("sg", "fg", "pkg", "dc", "wc", "fish"):
         topo = Topology(
             name=f"quickstart-{scheme}",
@@ -30,13 +31,46 @@ def main() -> None:
             edges=(Edge("source", "worker", config_for(scheme)),),
         )
         m = engine.run(topo, source).edge("worker")
-        if scheme == "sg":
-            base_exec = m.execution_time
         print(f"{scheme:8s} {m.execution_time:9.3f} "
               f"{m.latency_p99 * 1e3:12.2f} {m.memory_overhead_norm:12.2f} "
               f"{m.imbalance:10.3f}")
     print("\nFISH should sit within ~1.3x of SG's execution time while "
           "holding memory within a few x of FG (paper Figs. 9-11).")
+
+
+def session_api(workers: int, source: Source) -> None:
+    """Feed the ZF stream as two record batches split at the 0.8*N hot-key
+    flip: FISH's epoch state carries across the feed boundary, so the
+    post-flip batch is routed by a grouper that already learned the
+    pre-flip hot set — and must now unlearn it online."""
+    engine = SimulatorEngine()
+    topo = Topology(
+        name="quickstart-session",
+        stages=(Stage("worker", parallelism=workers),),
+        edges=(Edge("source", "worker", config_for("fish")),),
+    )
+    session = engine.open(topo, arrival_rate=source.arrival_rate)
+    n = int(source.keys.shape[0])
+    flip = int(0.8 * n)  # the ZF generator flips the hot head here
+    batches = list(source.iter_batches(batch_size=flip))
+    for i, batch in enumerate(batches):
+        session.feed(batch)
+        print(f"feed {i}: {len(batch):6d} tuples "
+              f"({'pre' if i == 0 else 'post'}-flip)")
+    m = session.close().edge("worker")
+    print(f"fish via 2-batch session: exec {m.execution_time:.3f}s, "
+          f"p99 {m.latency_p99 * 1e3:.2f}ms, imbalance {m.imbalance:.3f}")
+    print("(feeding everything as one batch is bit-identical to "
+          "engine.run)")
+
+
+def main() -> None:
+    workers = 32
+    keys = zipf_time_evolving(40_000, num_keys=4_000, z=1.4, seed=0)
+    source = Source(keys, arrival_rate=20_000.0)
+    one_shot(workers, source)
+    print()
+    session_api(workers, source)
 
 
 if __name__ == "__main__":

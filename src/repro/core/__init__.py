@@ -25,8 +25,11 @@ from .fish import (
 from .stream import (
     CapacityEvent,
     EdgeResult,
+    EdgeState,
     MembershipEvent,
     StreamMetrics,
+    at_time,
+    edge_metrics,
     simulate_edge,
     simulate_stream,
     simulate_stream_reference,
@@ -54,8 +57,11 @@ __all__ = [
     "init_fish_state",
     "CapacityEvent",
     "EdgeResult",
+    "EdgeState",
     "MembershipEvent",
     "StreamMetrics",
+    "at_time",
+    "edge_metrics",
     "simulate_edge",
     "simulate_stream",
     "simulate_stream_reference",

@@ -33,6 +33,17 @@ next) and returning per-tuple finish times alongside the metrics.
 deprecated single-hop shims over :func:`simulate_edge`; new code goes
 through :mod:`repro.topology` (ISSUE 3 — one engine protocol).
 
+Incremental (sessioned) execution — ISSUE 5: :func:`simulate_edge` accepts a
+carried :class:`EdgeState` (per-worker ``busy_until``, mutated capacities,
+active set, sampling rng, global tuple offset) so a topology session can cut
+one logical stream into successive record-batch feeds without losing FIFO
+backlog, capacity-sample pacing or straggler state between them.  Feeding
+the whole stream as one call is bit-identical to the legacy one-shot path.
+Events may be addressed by stream timestamp instead of tuple index via
+:func:`at_time` (resolved to the first tuple whose arrival time is >= the
+requested timestamp — the same segment cut the equivalent index event
+produces).
+
 Dynamic membership events (paper §5 / RQ4) are supported via
 :class:`MembershipEvent`; mid-stream capacity changes (straggler onset /
 recovery, heterogeneity shifts — Fig. 7) via :class:`CapacityEvent`.  Both
@@ -55,8 +66,11 @@ from .baselines import Grouper
 __all__ = [
     "CapacityEvent",
     "EdgeResult",
+    "EdgeState",
     "MembershipEvent",
     "StreamMetrics",
+    "at_time",
+    "edge_metrics",
     "simulate_edge",
     "simulate_stream",
     "simulate_stream_reference",
@@ -65,19 +79,66 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class MembershipEvent:
-    """At tuple index ``at``, switch the active worker set to ``workers``."""
+    """At tuple index ``at`` (or stream timestamp ``at_time`` — ISSUE 5),
+    switch the active worker set to ``workers``."""
 
-    at: int
-    workers: Sequence[int]
+    at: int = -1
+    workers: Sequence[int] = ()
+    at_time: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class CapacityEvent:
-    """At tuple index ``at``, set the *true* seconds-per-tuple of the listed
-    workers (straggler onset when slower, recovery when restored)."""
+    """At tuple index ``at`` (or stream timestamp ``at_time``), set the
+    *true* seconds-per-tuple of the listed workers (straggler onset when
+    slower, recovery when restored)."""
 
-    at: int
-    capacities: Mapping[int, float]
+    at: int = -1
+    capacities: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    at_time: Optional[float] = None
+
+
+def at_time(event, t: float):
+    """Re-address a membership/capacity event by stream timestamp: the event
+    fires at the first tuple whose arrival time is >= ``t`` — the same
+    segment cut as the equivalent index-addressed event.  Timestamps that
+    precede the (remaining) stream fire at its first tuple; timestamps past
+    the end never fire (mirroring out-of-range indices)."""
+    return dataclasses.replace(event, at_time=float(t))
+
+
+def _resolve_at_time(events, times: Optional[np.ndarray],
+                     arrival_rate: float):
+    """Lower ``at_time`` addressing onto tuple indices for one stream chunk
+    (``times=None`` means the uniform grid ``i / arrival_rate``)."""
+    out = []
+    for e in events:
+        t = getattr(e, "at_time", None)
+        if t is not None:
+            if times is None:
+                idx = int(np.ceil(t * arrival_rate))
+            else:
+                idx = int(np.searchsorted(times, t, side="left"))
+            e = dataclasses.replace(e, at=idx, at_time=None)
+        out.append(e)
+    return out
+
+
+@dataclasses.dataclass
+class EdgeState:
+    """Carried execution state of one grouped edge across successive feeds
+    (ISSUE 5 sessions).  The grouper itself is stateful and carried by the
+    caller; this holds everything :func:`simulate_edge` used to rebuild per
+    call: per-worker FIFO backlog, the (event-mutated) true capacities, the
+    live worker set, the capacity-sampling rng, and the global index of the
+    next tuple (so ``sample_every`` pacing stays on the stream-global grid).
+    """
+
+    busy_until: np.ndarray
+    capacities: np.ndarray
+    active: set
+    rng: np.random.Generator
+    offset: int = 0
 
 
 @dataclasses.dataclass
@@ -102,10 +163,21 @@ class StreamMetrics:
 @dataclasses.dataclass
 class EdgeResult:
     """One grouped edge's outcome: paper metrics + per-tuple finish times
-    (the arrival times of the downstream stage's input stream)."""
+    (the arrival times of the downstream stage's input stream).
 
-    metrics: StreamMetrics
+    ``metrics`` is ``None`` when the call opted out via
+    ``compute_metrics=False`` (sessions aggregate at close instead);
+    ``latencies`` are the raw per-tuple queueing latencies of this call
+    (``finishes - arrivals`` computed before the finish-time rounding, so
+    sessions can aggregate cross-feed percentiles bit-identically);
+    ``state`` is the carried :class:`EdgeState` — pass it back into the
+    next :func:`simulate_edge` call to continue the same stream."""
+
+    metrics: Optional[StreamMetrics]
     finishes: np.ndarray
+    latencies: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0))
+    state: Optional[EdgeState] = None
 
 
 def _split_events(events, n: int):
@@ -151,8 +223,19 @@ def _apply_events(i, mem_ev, ev_idx, cap_ev, cap_idx, grouper, capacities,
     return ev_idx, cap_idx, active
 
 
-def _setup(grouper, capacities, arrival_rate, mem_ev, cap_ev):
-    """Shared preamble: capacities, initial samples, busy array sizing."""
+def _event_hi_worker(mem_ev, cap_ev, hi_w: int) -> int:
+    for e in mem_ev:
+        if e.workers:
+            hi_w = max(hi_w, max(e.workers))
+    for e in cap_ev:
+        if e.capacities:
+            hi_w = max(hi_w, max(e.capacities))
+    return hi_w
+
+
+def _setup(grouper, capacities, arrival_rate, mem_ev, cap_ev, seed):
+    """Fresh-edge preamble: capacities, initial samples, busy array sizing —
+    bundled into the :class:`EdgeState` a session carries across feeds."""
     w = grouper.num_workers
     if capacities is None:
         # feasible utilisation ~0.9 across the initial worker set
@@ -163,22 +246,34 @@ def _setup(grouper, capacities, arrival_rate, mem_ev, cap_ev):
     for wk in range(w):
         grouper.record_capacity_sample(wk, float(capacities[wk]))
 
-    hi_w = w - 1
-    for e in mem_ev:
-        if e.workers:
-            hi_w = max(hi_w, max(e.workers))
-    for e in cap_ev:
-        if e.capacities:
-            hi_w = max(hi_w, max(e.capacities))
+    hi_w = _event_hi_worker(mem_ev, cap_ev, w - 1)
     busy_until = np.zeros(hi_w + 1, dtype=np.float64)
     if capacities.shape[0] < busy_until.shape[0]:
         pad = np.full(busy_until.shape[0] - capacities.shape[0],
                       capacities.mean())
         capacities = np.concatenate([capacities, pad])
-    return capacities, busy_until
+    return EdgeState(busy_until=busy_until, capacities=capacities,
+                     active=set(range(w)),
+                     rng=np.random.default_rng(seed))
 
 
-def _metrics(grouper, busy_until, latencies, n) -> StreamMetrics:
+def _grow_state(state: EdgeState, mem_ev, cap_ev) -> None:
+    """Extend a carried state's worker arrays when this feed's events name
+    workers beyond the current range (scale-out in a later feed)."""
+    hi_w = _event_hi_worker(mem_ev, cap_ev, state.busy_until.shape[0] - 1)
+    need = hi_w + 1 - state.busy_until.shape[0]
+    if need > 0:
+        state.busy_until = np.concatenate(
+            [state.busy_until, np.zeros(need, dtype=np.float64)])
+        state.capacities = np.concatenate(
+            [state.capacities, np.full(need, state.capacities.mean())])
+
+
+def edge_metrics(grouper, busy_until, latencies, n) -> StreamMetrics:
+    """The paper metrics for one grouped edge, computed from the grouper's
+    cumulative counters, the final per-worker busy-until array and the
+    per-tuple latencies (sessions call this at close over the concatenated
+    feeds; one-shot calls get it per :func:`simulate_edge` call)."""
     makespan = float(busy_until.max()) if n else 0.0
     counts = grouper.assigned_counts[: len(busy_until)].astype(np.float64)
     imbalance = float((counts.max() - counts.mean()) / max(counts.mean(), 1e-12))
@@ -244,7 +339,11 @@ def simulate_edge(
     events: Sequence[object] = (),
     seed: int = 0,
     event_observer: Optional[Callable[[str, Grouper, object], None]] = None,
-    tuple_observer: Optional[Callable[[np.ndarray, np.ndarray], None]] = None,
+    tuple_observer: Optional[Callable[..., None]] = None,
+    values: Optional[np.ndarray] = None,
+    state: Optional[EdgeState] = None,
+    dt: Optional[float] = None,
+    compute_metrics: bool = True,
 ) -> EdgeResult:
     """Run one grouped edge: route ``keys`` through ``grouper`` and advance
     the destination stage's per-worker FIFO queues.
@@ -258,25 +357,50 @@ def simulate_edge(
                   "reference" (the per-tuple oracle interpreter).
     capacities:   true seconds/tuple per worker (default: all 1/arrival_rate
                   scaled so ~W tuples are in flight — i.e. balanced feasible).
-    sample_every: period (in tuples) of the Alg.-3 capacity sampling hook.
+                  Ignored when ``state`` is carried (its capacities rule).
+    sample_every: period (in tuples) of the Alg.-3 capacity sampling hook,
+                  counted on the stream-global grid (``state.offset`` aware).
     events:       mixed :class:`MembershipEvent` / :class:`CapacityEvent`
-                  sequence; ``at`` indexes this edge's input stream and is a
-                  segment cut site in the batched mode.
+                  sequence; ``at`` indexes this call's input chunk and is a
+                  segment cut site in the batched mode.  Events addressed via
+                  :func:`at_time` are resolved against ``times`` (or the
+                  uniform grid) before splitting.
     event_observer: optional ``f(kind, grouper, event)`` callback fired with
                   kind "pre_membership"/"post_membership" around membership
                   changes and "capacity" after a capacity change — the
                   remap-accounting hook.
-    tuple_observer: optional ``f(keys, workers)`` callback fed the routed
-                  chunks of the stream in order (each tuple exactly once,
-                  interleaved correctly with the event hooks) — the keyed
-                  operator-state hook (:mod:`repro.state`).  In batched
-                  mode it fires once per segment; in reference mode the
-                  per-tuple assignments are buffered and flushed before
-                  each event and at stream end.
+    tuple_observer: optional ``f(keys, workers, values)`` callback fed the
+                  routed chunks of the stream in order (each tuple exactly
+                  once, interleaved correctly with the event hooks) — the
+                  keyed operator-state hook (:mod:`repro.state`).  ``values``
+                  is the matching payload slice, or ``None`` when the stream
+                  carries no payload column.  In batched mode it fires once
+                  per segment; in reference mode the per-tuple assignments
+                  are buffered and flushed before each event and at stream
+                  end.
+    values:       optional per-tuple float64 payload column (ISSUE 5
+                  record batches) — routed alongside the keys and handed to
+                  the tuple observer; it does not affect routing or timing.
+    state:        carried :class:`EdgeState` from this edge's previous feed
+                  (sessions).  ``None`` starts a fresh edge; the (fresh or
+                  carried) state is returned on :attr:`EdgeResult.state`.
+                  Continuing a stream requires explicit ``times`` — with
+                  ``times=None`` arrivals would restart at 0 against a
+                  carried absolute-time backlog, so that is rejected.
+    dt:           explicit estimator-tick pacing (seconds/tuple) handed to
+                  the grouper.  Default: ``1/arrival_rate``, or the mean
+                  spacing of ``times`` when given.  Sessions pin the source
+                  edge to ``1/arrival_rate`` so cutting a uniform stream
+                  into feeds keeps epoch pacing bit-identical.
+    compute_metrics: set False to skip the per-call :class:`StreamMetrics`
+                  (``EdgeResult.metrics`` is then ``None``) — sessions
+                  aggregate latencies across feeds and compute metrics
+                  once at close, so per-feed percentile passes are waste.
 
     ``keys`` must be a 1-D integer array of interned key ids for the batched
     mode (``repro.data.synthetic`` generators emit int32); anything else
-    silently takes the reference interpreter.
+    falls back to the reference interpreter with a :class:`UserWarning`
+    (a 10-20x slowdown that should never be silent).
     """
     if mode not in ("batched", "reference"):
         raise ValueError(f"unknown mode {mode!r}; 'batched' or 'reference'")
@@ -285,42 +409,70 @@ def simulate_edge(
         if times.shape[0] != len(keys):
             raise ValueError(
                 f"times has {times.shape[0]} entries for {len(keys)} keys")
+    if values is not None:
+        values = np.asarray(values, dtype=np.float64)
+        if values.shape[0] != len(keys):
+            raise ValueError(
+                f"values has {values.shape[0]} entries for {len(keys)} keys")
+    if state is not None and state.offset > 0 and times is None:
+        raise ValueError(
+            "continuing a carried EdgeState requires explicit times: with "
+            "times=None arrivals restart at 0 while busy_until carries the "
+            "previous feeds' absolute finish times — pass the stream's "
+            "real timestamps")
+    events = _resolve_at_time(events, times, arrival_rate)
     if mode == "batched":
         keys_arr = np.asarray(keys)
         if keys_arr.ndim == 1 and keys_arr.dtype.kind in "iu":
             return _edge_batched(
                 grouper, keys_arr, times, capacities, arrival_rate,
                 sample_every, sample_noise, events, seed, event_observer,
-                tuple_observer)
+                tuple_observer, values, state, dt, compute_metrics)
+        warnings.warn(
+            f"simulate_edge falling back to the per-tuple reference "
+            f"interpreter: keys dtype={keys_arr.dtype} shape="
+            f"{keys_arr.shape} is not a 1-D integer array (a 10-20x "
+            f"slowdown; intern keys via repro.data.synthetic.intern_keys "
+            f"to stay on the batched path)",
+            UserWarning, stacklevel=2)
     return _edge_reference(
         grouper, keys, times, capacities, arrival_rate,
         sample_every, sample_noise, events, seed, event_observer,
-        tuple_observer)
+        tuple_observer, values, state, compute_metrics)
 
 
 def _edge_batched(grouper, keys_arr, times, capacities, arrival_rate,
                   sample_every, sample_noise, events, seed,
-                  event_observer, tuple_observer=None) -> EdgeResult:
-    rng = np.random.default_rng(seed)
-    w = grouper.num_workers
+                  event_observer, tuple_observer=None, values=None,
+                  state=None, dt=None, compute_metrics=True) -> EdgeResult:
     n = keys_arr.shape[0]
     mem_ev, cap_ev = _split_events(events, n)
-    capacities, busy_until = _setup(grouper, capacities, arrival_rate,
-                                    mem_ev, cap_ev)
+    if state is None:
+        state = _setup(grouper, capacities, arrival_rate, mem_ev, cap_ev,
+                       seed)
+    else:
+        _grow_state(state, mem_ev, cap_ev)
+    busy_until = state.busy_until
+    capacities = state.capacities
+    rng = state.rng
+    off = state.offset
 
-    dt = 1.0 / arrival_rate
-    if times is not None and n > 1:
-        # mean spacing of the explicit stream — FISH's estimator-tick pacing
-        dt = float((times[-1] - times[0]) / (n - 1)) or dt
+    if dt is None:
+        dt = 1.0 / arrival_rate
+        if times is not None and n > 1:
+            # mean spacing of this chunk — FISH's estimator-tick pacing
+            dt = float((times[-1] - times[0]) / (n - 1)) or dt
     latencies = np.empty(n, dtype=np.float64)
-    active = set(range(w))
+    active = state.active
 
     # segment cut sites: membership/capacity events + capacity-sample points
+    # (sample points sit on the stream-global grid: offset-aware)
     cuts = {0, n}
     cuts.update(e.at for e in mem_ev)
     cuts.update(e.at for e in cap_ev)
     if sample_every:
-        cuts.update(range(sample_every, n, sample_every))
+        first = (-off) % sample_every or sample_every
+        cuts.update(range(first, n, sample_every))
     bounds = sorted(cuts)
     ev_idx = 0
     cap_idx = 0
@@ -337,48 +489,62 @@ def _edge_batched(grouper, keys_arr, times, capacities, arrival_rate,
             now0 = float(seg_times[0])
         seg_workers = grouper.assign_batch(keys_arr[lo:hi], now0, dt)
         if tuple_observer is not None:
-            tuple_observer(keys_arr[lo:hi], seg_workers)
+            tuple_observer(keys_arr[lo:hi], seg_workers,
+                           None if values is None else values[lo:hi])
         _advance_fifo(busy_until, seg_workers, seg_times, capacities,
                       latencies[lo:hi])
-        if sample_every and hi % sample_every == 0:
+        if sample_every and (off + hi) % sample_every == 0:
             for wk in sorted(active):
                 noisy = capacities[wk] * (1.0 + rng.normal(0.0, sample_noise))
                 grouper.record_capacity_sample(wk, float(max(noisy, 1e-12)))
 
+    state.active = active
+    state.offset = off + n
     all_times = (np.arange(n, dtype=np.float64) * dt if times is None
                  else times)
-    return EdgeResult(_metrics(grouper, busy_until, latencies, n),
-                      all_times + latencies)
+    metrics = (edge_metrics(grouper, busy_until, latencies, n)
+               if compute_metrics else None)
+    return EdgeResult(metrics, all_times + latencies, latencies, state)
 
 
 def _edge_reference(grouper, keys, times, capacities, arrival_rate,
                     sample_every, sample_noise, events, seed,
-                    event_observer, tuple_observer=None) -> EdgeResult:
-    rng = np.random.default_rng(seed)
-    w = grouper.num_workers
+                    event_observer, tuple_observer=None, values=None,
+                    state=None, compute_metrics=True) -> EdgeResult:
     n = len(keys)
     mem_ev, cap_ev = _split_events(events, n)
-    capacities, busy_until = _setup(grouper, capacities, arrival_rate,
-                                    mem_ev, cap_ev)
+    if state is None:
+        state = _setup(grouper, capacities, arrival_rate, mem_ev, cap_ev,
+                       seed)
+    else:
+        _grow_state(state, mem_ev, cap_ev)
+    busy_until = state.busy_until
+    capacities = state.capacities
+    rng = state.rng
+    off = state.offset
 
     dt = 1.0 / arrival_rate
     latencies = np.empty(n, dtype=np.float64)
     finishes = np.empty(n, dtype=np.float64)
     ev_idx = 0
     cap_idx = 0
-    active = set(range(w))
+    active = state.active
 
     # per-tuple assignments are buffered and flushed to the tuple observer
     # before any event fires, preserving the batched mode's interleaving
     buf_k: list = []
     buf_w: list = []
+    buf_v: list = []
 
     def _flush_tuples() -> None:
         if buf_k and tuple_observer is not None:
             tuple_observer(np.asarray(buf_k),
-                           np.asarray(buf_w, dtype=np.int64))
+                           np.asarray(buf_w, dtype=np.int64),
+                           np.asarray(buf_v, dtype=np.float64)
+                           if values is not None else None)
             buf_k.clear()
             buf_w.clear()
+            buf_v.clear()
 
     for i, key in enumerate(keys):
         if tuple_observer is not None and (
@@ -393,18 +559,24 @@ def _edge_reference(grouper, keys, times, capacities, arrival_rate,
         if tuple_observer is not None:
             buf_k.append(key)
             buf_w.append(worker)
+            if values is not None:
+                buf_v.append(float(values[i]))
         start = max(busy_until[worker], now)
         finish = start + capacities[worker]
         busy_until[worker] = finish
         latencies[i] = finish - now
         finishes[i] = finish
-        if sample_every and (i + 1) % sample_every == 0:
+        if sample_every and (off + i + 1) % sample_every == 0:
             for wk in sorted(active):
                 noisy = capacities[wk] * (1.0 + rng.normal(0.0, sample_noise))
                 grouper.record_capacity_sample(wk, float(max(noisy, 1e-12)))
 
     _flush_tuples()
-    return EdgeResult(_metrics(grouper, busy_until, latencies, n), finishes)
+    state.active = active
+    state.offset = off + n
+    metrics = (edge_metrics(grouper, busy_until, latencies, n)
+               if compute_metrics else None)
+    return EdgeResult(metrics, finishes, latencies, state)
 
 
 def _warn_legacy(name: str) -> None:

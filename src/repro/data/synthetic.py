@@ -10,6 +10,10 @@
   from Table 2 (noted in DESIGN.md §7).
 * :func:`token_stream` — keyed *document* stream for the data-pipeline
   integration (keys follow piecewise zipf; payload is a token array).
+* :func:`record_batches` — the token stream re-columnated as session-ready
+  :class:`~repro.topology.RecordBatch` chunks (ISSUE 5): keys + a real
+  float64 payload column + uniform-grid timestamps, so the Table-2 dataset
+  proxies replay end to end through ``Engine.open(...).feed``.
 """
 
 from __future__ import annotations
@@ -23,6 +27,7 @@ __all__ = [
     "zipf_time_evolving",
     "piecewise_zipf",
     "token_stream",
+    "record_batches",
     "intern_keys",
 ]
 
@@ -156,3 +161,49 @@ def token_stream(
             draws = rng.choice(vocab_size, size=doc_len, p=p_tok)
             toks = (draws + (k * 7)) % vocab_size  # doc-conditional shift
             yield int(k), toks.astype(np.int32)
+
+
+def record_batches(
+    num_docs: int,
+    num_keys: int,
+    doc_len: int,
+    vocab_size: int,
+    batch: int = 1_024,
+    arrival_rate: float = 10_000.0,
+    z: float = 1.2,
+    phases: int = 4,
+    seed: int = 0,
+    token_z: float = 1.3,
+):
+    """Replay :func:`token_stream` as session-ready record batches.
+
+    Each document becomes one record: key = the doc key, value = the doc's
+    token sum (a real — and integral, so ``sum`` aggregation is exact —
+    float64 payload), timestamp = its position on the uniform
+    ``arrival_rate`` grid.  Yields :class:`~repro.topology.RecordBatch`
+    chunks of ``batch`` records (last one short), lazily — nothing is
+    materialised upfront, matching :func:`token_stream`'s contract.
+    """
+    from ..topology.graph import RecordBatch
+
+    dt = 1.0 / arrival_rate
+    ks: list = []
+    vs: list = []
+    base = 0
+    for k, toks in token_stream(num_docs, num_keys, doc_len, vocab_size,
+                                z=z, phases=phases, seed=seed,
+                                token_z=token_z):
+        ks.append(k)
+        vs.append(float(int(toks.sum())))
+        if len(ks) == batch:
+            n = len(ks)
+            yield RecordBatch(np.asarray(ks, dtype=np.int32),
+                              (base + np.arange(n, dtype=np.float64)) * dt,
+                              np.asarray(vs))
+            base += n
+            ks, vs = [], []
+    if ks:
+        n = len(ks)
+        yield RecordBatch(np.asarray(ks, dtype=np.int32),
+                          (base + np.arange(n, dtype=np.float64)) * dt,
+                          np.asarray(vs))

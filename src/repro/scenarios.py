@@ -232,20 +232,36 @@ def run_dspe_scenario(
     engine: str = "batched",
     sample_remap: int = 512,
     window: Optional[WindowOp] = None,
+    feeds: int = 1,
 ) -> Dict:
     """Route the scenario's stream through ``scheme`` in the DSPE simulator
     and return the paper metrics plus per-event remap accounting.  With a
     ``window``, the worker stage runs the keyed aggregation and the report
     gains a ``state`` row: migration cost + post-merge exactness against
-    the no-churn oracle (:func:`repro.state.direct_aggregate`)."""
+    the no-churn oracle (:func:`repro.state.direct_aggregate`).
+
+    ``feeds`` > 1 replays the scenario through the streaming session API
+    (ISSUE 5): the stream is cut into that many record batches fed
+    incrementally, with all churn/straggler events registered up front —
+    the long-running-DSPE execution mode (``feeds=1`` is the one-shot
+    ``run()``, bit-identical to feeding a single batch)."""
     keys = build_keys(scenario.workload)
     n = int(keys.shape[0])
     events = [ScopedEvent(_STAGE, e) for e in compile_events(scenario, n)]
     sim = SimulatorEngine(mode=engine, remap_sample=sample_remap)
-    rep = sim.run(scenario_topology(scenario, scheme, window),
-                  Source(keys, arrival_rate=scenario.arrival_rate), events)
+    topo = scenario_topology(scenario, scheme, window)
+    source = Source(keys, arrival_rate=scenario.arrival_rate)
+    if feeds <= 1:
+        rep = sim.run(topo, source, events)
+    else:
+        session = sim.open(topo, arrival_rate=scenario.arrival_rate)
+        session.advance(events)
+        for batch in source.iter_batches(batch_size=-(-n // feeds)):
+            session.feed(batch)
+        rep = session.close()
     er = rep.edge(_STAGE)
-    out = {"scheme": scheme, "engine": engine, "n_tuples": n}
+    out = {"scheme": scheme, "engine": engine, "n_tuples": n,
+           "feeds": feeds}
     out.update(er.row())
     out["remap_events"] = er.remap_events
     out["remap_frac_mean"] = er.remap_frac_mean

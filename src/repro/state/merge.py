@@ -60,11 +60,12 @@ def merge_partials(partials: Sequence[WindowPartial], op: WindowOp) -> Dict:
     return _finalize(op, acc)
 
 
-def direct_aggregate(keys, op: WindowOp) -> Dict:
-    """The oracle: window results computed directly from the key stream,
+def direct_aggregate(keys, op: WindowOp, values=None) -> Dict:
+    """The oracle: window results computed directly from the key stream
+    (plus the payload ``values`` column for ``value="payload"`` operators),
     bypassing routing, state stores, churn and migration entirely."""
     keys = np.asarray(keys).astype(np.int64, copy=False)
-    values = tuple_values(op, keys)
+    values = tuple_values(op, keys, payload=values)
     n = keys.shape[0]
     acc: Dict[int, Dict[int, np.ndarray]] = {}
     for start in range(0, n, op.stride):

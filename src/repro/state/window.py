@@ -7,12 +7,18 @@ routing schemes), one of three aggregations (``count`` / ``sum`` /
 ``topk``), a store backend, and a migration policy for churn.
 
 :class:`KeyedStateManager` is the runtime: engines feed it the routed
-``(keys, workers)`` chunks of one grouped edge (in stream order) and fire
-its membership hooks around churn events.  It maintains one state store per
-(open window, worker), flushes closed windows into :class:`WindowPartial`
+``(keys, workers[, values])`` chunks of one grouped edge (in stream order)
+and fire its membership hooks around churn events.  State is held
+*pane-based* (ISSUE 5): each tuple folds into exactly one state store per
+worker — the store of its slide-aligned pane — and windows are composed
+from ``size/slide`` consecutive panes when they close (for tumbling
+windows a pane *is* the window, so this is the identical layout).  Sliding
+windows therefore cost one store update per tuple instead of
+``size/slide``, and live state bytes count each pane once instead of once
+per overlapping window.  Closed windows flush into :class:`WindowPartial`
 records (the partial aggregates a downstream merge stage combines), and
-runs the state-migration protocol (:mod:`repro.state.migration`) on every
-membership change.
+the state-migration protocol (:mod:`repro.state.migration`) runs over the
+live panes on every membership change.
 
 Because every tuple folds into exactly one worker's store with an
 order-independent int64 aggregate, the *merged* per-key results are a pure
@@ -46,9 +52,9 @@ _MIX = np.int64(2654435761)  # Knuth multiplicative-hash constant
 class WindowOp:
     """A windowed keyed aggregation on a stage (count-based windows).
 
-    agg:       "count" (tuples per key), "sum" (deterministic per-tuple
-               payload summed per key) or "topk" (k heaviest keys per
-               window by tuple count).
+    agg:       "count" (tuples per key), "sum" (per-tuple payload summed
+               per key) or "topk" (k heaviest keys per window by tuple
+               count).
     size:      window length in tuples of the stage's input stream.
     slide:     sliding step; ``None`` means tumbling (slide == size).
                ``size`` must be a multiple of ``slide`` so window
@@ -60,7 +66,9 @@ class WindowOp:
                replays the entry's tuples at the new owner
                (tuples-replayed accounted).  Results are exact either way.
     value:     payload for "sum" — "hashed" (deterministic pseudo-payload
-               per key) or "key" (the key id itself).
+               per key), "key" (the key id itself), or "payload" (the
+               stream's real ``values`` column — ISSUE 5 record batches;
+               folded as int64, so fractional payloads truncate).
     """
 
     agg: str = "count"
@@ -92,22 +100,32 @@ class WindowOp:
         if self.migration not in ("migrate", "rebuild"):
             raise ValueError(f"unknown migration policy {self.migration!r}; "
                              f"'migrate' or 'rebuild'")
-        if self.value not in ("hashed", "key"):
+        if self.value not in ("hashed", "key", "payload"):
             raise ValueError(f"unknown value kind {self.value!r}; "
-                             f"'hashed' or 'key'")
+                             f"'hashed', 'key' or 'payload'")
 
     @property
     def stride(self) -> int:
         return self.slide if self.slide is not None else self.size
 
 
-def tuple_values(op: WindowOp, keys: np.ndarray) -> np.ndarray:
-    """The deterministic per-tuple int64 contribution folded into the key's
-    state entry.  A pure function of the key, so aggregates are independent
-    of routing/engine/churn."""
+def tuple_values(op: WindowOp, keys: np.ndarray,
+                 payload: Optional[np.ndarray] = None) -> np.ndarray:
+    """The per-tuple int64 contribution folded into the key's state entry.
+    For ``value="hashed"``/``"key"`` a pure function of the key (so
+    aggregates are independent of routing/engine/churn); for
+    ``value="payload"`` the stream's real values column (ISSUE 5 — still
+    order-independent under int64 summation, so the same contract holds)."""
     keys = np.asarray(keys).astype(np.int64)
     if op.agg in ("count", "topk"):
         return np.ones(keys.shape[0], dtype=np.int64)
+    if op.value == "payload":
+        if payload is None:
+            raise ValueError(
+                "WindowOp(value='payload') needs the stream's values "
+                "column — feed RecordBatches with values=, or use "
+                "value='hashed'/'key' for payload-free streams")
+        return np.asarray(payload).astype(np.int64)
     if op.value == "key":
         return keys
     return ((keys * _MIX) & np.int64(0x7FFFFFFF)) % 97 + 1
@@ -153,7 +171,12 @@ class StateReport:
         return d
 
 
-class _OpenWindow:
+class _Pane:
+    """One slide-aligned block of per-worker stores: the unit every tuple
+    folds into exactly once, and the unit migration moves.  (For tumbling
+    windows a pane covers the whole window.)  Attribute layout matches what
+    :func:`repro.state.migration.apply_membership_change` walks."""
+
     __slots__ = ("start", "end", "stores", "last_idx")
 
     def __init__(self, start: int, end: int):
@@ -168,10 +191,17 @@ class KeyedStateManager:
 
     Engines drive three entry points, all in stream order:
 
-    * :meth:`feed` — the routed (keys, workers) of the next chunk;
+    * :meth:`feed` — the routed (keys, workers[, values]) of the next chunk;
     * :meth:`on_event` — the membership observer hook (same signature as
       the engines' ``event_observer``), which runs the migration protocol;
     * :meth:`finalize` — stream end: close the remaining open windows.
+
+    Internally state lives in panes (one per slide block); a window's
+    per-worker partial is composed from its ``size/slide`` panes when the
+    window closes.  Windows close in start order; once the window starting
+    at pane ``p`` has flushed, no later window needs ``p`` and the pane is
+    dropped — so a pane is retained for exactly ``size`` tuples, the same
+    horizon the per-window layout had.
     """
 
     def __init__(self, op: WindowOp):
@@ -182,7 +212,8 @@ class KeyedStateManager:
         self.state_bytes_peak = 0
         self.state_bytes_final = 0
         self._per_worker_peak: Dict[int, int] = {}
-        self._open: Dict[int, _OpenWindow] = {}
+        self._panes: Dict[int, _Pane] = {}
+        self._next_window = 0  # start index of the next window to flush
         self._pre_routes: Optional[Dict[int, Optional[int]]] = None
         self._finalized = False
         self._seen_keys: set = set()
@@ -191,8 +222,8 @@ class KeyedStateManager:
     def _note_bytes(self) -> int:
         total = 0
         per_worker: Dict[int, int] = {}
-        for win in self._open.values():
-            for w, st in win.stores.items():
+        for pane in self._panes.values():
+            for w, st in pane.stores.items():
                 b = st.size_bytes()
                 total += b
                 per_worker[w] = per_worker.get(w, 0) + b
@@ -203,38 +234,51 @@ class KeyedStateManager:
             self.state_bytes_peak = total
         return total
 
-    def _close(self, win: _OpenWindow) -> None:
-        for w in sorted(win.stores):
-            st = win.stores[w]
-            if st.num_entries == 0:
+    def _flush_window(self, start: int) -> None:
+        """Compose the window starting at ``start`` from its panes (one
+        per-worker partial, keys sorted) and drop the panes no later
+        window needs."""
+        size, stride = self.op.size, self.op.stride
+        panes = [self._panes[p] for p in range(start, start + size, stride)
+                 if p in self._panes]
+        workers = sorted({w for pane in panes for w in pane.stores})
+        for w in workers:
+            parts = [(pane.stores[w].items(), pane.last_idx.get(w, start))
+                     for pane in panes
+                     if w in pane.stores and pane.stores[w].num_entries]
+            if not parts:
                 continue
-            ks, vs, cs = st.items()
+            if len(parts) == 1:
+                (ks, vs, cs), last = parts[0]
+            else:
+                ks = np.concatenate([p[0][0] for p in parts])
+                uniq, inv = np.unique(ks, return_inverse=True)
+                vs = np.zeros(uniq.shape[0], dtype=np.int64)
+                cs = np.zeros(uniq.shape[0], dtype=np.int64)
+                np.add.at(vs, inv, np.concatenate([p[0][1] for p in parts]))
+                np.add.at(cs, inv, np.concatenate([p[0][2] for p in parts]))
+                ks = uniq
+                last = max(p[1] for p in parts)
             self.partials.append(WindowPartial(
-                window=win.start, worker=w, keys=ks, values=vs, counts=cs,
-                last_index=win.last_idx.get(w, win.start)))
-        del self._open[win.start]
+                window=start, worker=w, keys=ks, values=vs, counts=cs,
+                last_index=last))
+        self._next_window = start + stride
+        for p in [p for p in self._panes if p < self._next_window]:
+            del self._panes[p]
 
-    def _close_expired(self) -> None:
-        expired = [s for s in self._open if self._open[s].end <= self.idx]
-        if expired:
+    def _flush_ready(self) -> None:
+        """Flush every window whose end has passed (in start order)."""
+        if self._next_window + self.op.size <= self.idx:
             self._note_bytes()
-            for s in sorted(expired):
-                self._close(self._open[s])
-
-    def _roll(self) -> None:
-        """Open the window starting at the current slide block; close every
-        window whose end has passed (flushing its partials)."""
-        self._close_expired()
-        stride = self.op.stride
-        block = (self.idx // stride) * stride
-        if block not in self._open:
-            self._open[block] = _OpenWindow(block, block + self.op.size)
+            while self._next_window + self.op.size <= self.idx:
+                self._flush_window(self._next_window)
 
     # -- stream input -------------------------------------------------------------
-    def feed(self, keys, workers) -> None:
-        """Fold the next routed chunk into the open windows' stores.
-        ``keys[i]`` was routed to ``workers[i]``; tuple ``i`` has global
-        input index ``self.idx + i``."""
+    def feed(self, keys, workers, values=None) -> None:
+        """Fold the next routed chunk into the live panes' stores.
+        ``keys[i]`` was routed to ``workers[i]`` (carrying payload
+        ``values[i]`` when the stream has a values column); tuple ``i``
+        has global input index ``self.idx + i``."""
         if self._finalized:
             raise RuntimeError("KeyedStateManager already finalized")
         keys = np.asarray(keys).astype(np.int64, copy=False)
@@ -243,14 +287,17 @@ class KeyedStateManager:
         if n == 0:
             return
         self._seen_keys.update(np.unique(keys).tolist())
-        values = tuple_values(self.op, keys)
+        values = tuple_values(self.op, keys, payload=values)
         stride = self.op.stride
         backend = self.op.backend
         pos = 0
         while pos < n:
-            self._roll()
-            block_end = (self.idx // stride + 1) * stride
-            take = min(n - pos, block_end - self.idx)
+            self._flush_ready()
+            block = (self.idx // stride) * stride
+            pane = self._panes.get(block)
+            if pane is None:
+                pane = self._panes[block] = _Pane(block, block + stride)
+            take = min(n - pos, block + stride - self.idx)
             kc = keys[pos:pos + take]
             wc = workers[pos:pos + take]
             vc = values[pos:pos + take]
@@ -262,13 +309,12 @@ class KeyedStateManager:
                 w = int(ws[s])
                 sl = order[s:e]
                 last = self.idx + int(sl.max())
-                for win in self._open.values():
-                    st = win.stores.get(w)
-                    if st is None:
-                        st = win.stores[w] = make_store(backend)
-                    st.update_batch(kc[sl], vc[sl])
-                    if last > win.last_idx.get(w, -1):
-                        win.last_idx[w] = last
+                st = pane.stores.get(w)
+                if st is None:
+                    st = pane.stores[w] = make_store(backend)
+                st.update_batch(kc[sl], vc[sl])
+                if last > pane.last_idx.get(w, -1):
+                    pane.last_idx[w] = last
             self.idx += take
             pos += take
 
@@ -277,12 +323,14 @@ class KeyedStateManager:
         if kind == "pre_membership":
             # engines fire events before feeding the post-event chunk, so a
             # window that completed exactly at the event index may still be
-            # lazily open — flush it first: completed state never migrates
-            self._close_expired()
+            # lazily unflushed — flush it first, so its partials reflect
+            # pre-event ownership; panes still serving open windows are
+            # live state and migrate with their keys' new owners
+            self._flush_ready()
             self._pre_routes = self._snapshot_routes(grouper)
         elif kind == "post_membership":
             apply_membership_change(
-                list(self._open.values()), self._pre_routes or {}, grouper,
+                list(self._panes.values()), self._pre_routes or {}, grouper,
                 self.op, self.migration)
             self._pre_routes = None
             self._note_bytes()
@@ -290,8 +338,8 @@ class KeyedStateManager:
 
     def _snapshot_routes(self, grouper) -> Dict[int, Optional[int]]:
         routes: Dict[int, Optional[int]] = {}
-        for win in self._open.values():
-            for st in win.stores.values():
+        for pane in self._panes.values():
+            for st in pane.stores.values():
                 ks, _, _ = st.items()
                 for k in ks.tolist():
                     if k not in routes:
@@ -303,8 +351,8 @@ class KeyedStateManager:
         if self._finalized:
             return
         self.state_bytes_final = self._note_bytes()
-        for s in sorted(self._open):
-            self._close(self._open[s])
+        while self._next_window < self.idx:
+            self._flush_window(self._next_window)
         self._finalized = True
 
     # -- outputs ---------------------------------------------------------------------

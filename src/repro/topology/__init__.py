@@ -24,10 +24,11 @@ from ..state.window import WindowOp  # keyed operator state on a Stage
 from .configs import (SCHEME_CONFIGS, DChoicesConfig, FieldConfig,
                       FishConfig, PKGConfig, SchemeConfig, ShuffleConfig,
                       WChoicesConfig, build_grouper, config_for)
-from .engine import (EdgeReport, Engine, RemapAccountant, ServingTopologyEngine,
-                     SimulatorEngine, TopologyReport)
-from .graph import (SOURCE, Edge, KeyTransform, ScopedEvent, Source, Stage,
-                    Topology, hashed_fanout, project_mod)
+from .engine import (EdgeReport, Engine, RemapAccountant, ServingSession,
+                     ServingTopologyEngine, Session, SimulatorEngine,
+                     SimulatorSession, TopologyReport)
+from .graph import (SOURCE, Edge, KeyTransform, RecordBatch, ScopedEvent,
+                    Source, Stage, Topology, hashed_fanout, project_mod)
 
 __all__ = [
     "SCHEME_CONFIGS",
@@ -47,13 +48,17 @@ __all__ = [
     "Stage",
     "Edge",
     "Topology",
+    "RecordBatch",
     "Source",
     "ScopedEvent",
     "WindowOp",
     "Engine",
+    "Session",
     "EdgeReport",
     "TopologyReport",
     "RemapAccountant",
     "SimulatorEngine",
+    "SimulatorSession",
     "ServingTopologyEngine",
+    "ServingSession",
 ]

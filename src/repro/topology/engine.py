@@ -1,7 +1,17 @@
-"""Topology engines — one protocol, two implementations (ISSUE 3 tentpole).
+"""Topology engines — one protocol, two implementations (ISSUE 3 tentpole),
+executed through incremental streaming sessions (ISSUE 5 tentpole).
 
-:class:`Engine` is the protocol: ``run(topology, source, events) ->
-TopologyReport``.  Implementations:
+:class:`Engine` is the protocol: ``open(topology) -> Session`` for
+incremental record-batch execution, with ``run(topology, source, events) ->
+TopologyReport`` kept as the one-shot convenience (open / advance / feed
+every batch / close — feeding the whole stream as one batch is
+bit-identical to ``run``).  A :class:`Session` carries per-edge state
+across feeds: per-worker FIFO backlog (:class:`~repro.core.EdgeState`),
+grouper epoch state, remap accountants and keyed-state managers all
+survive between ``feed`` calls, so hot-key flips can straddle feed
+boundaries exactly like they do in a long-running DSPE.  Events registered
+via ``advance`` may address the stream by tuple index or by timestamp
+(``at_time``) and fire when the addressed tuple is fed.  Implementations:
 
 * :class:`SimulatorEngine` — the DSPE discrete-event simulator.  Each
   grouped edge runs through :func:`repro.core.stream.simulate_edge`
@@ -29,19 +39,23 @@ from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
-from ..core.stream import (CapacityEvent, MembershipEvent, StreamMetrics,
+from ..core.stream import (CapacityEvent, MembershipEvent, edge_metrics,
                            simulate_edge)
 from ..state.window import KeyedStateManager, StateReport
 from .configs import build_grouper
-from .graph import SOURCE, Edge, ScopedEvent, Source, Stage, Topology, scoped
+from .graph import (SOURCE, Edge, RecordBatch, ScopedEvent, Source, Stage,
+                    Topology)
 
 __all__ = [
     "EdgeReport",
     "TopologyReport",
     "Engine",
+    "Session",
     "RemapAccountant",
     "SimulatorEngine",
+    "SimulatorSession",
     "ServingTopologyEngine",
+    "ServingSession",
 ]
 
 
@@ -137,14 +151,177 @@ class TopologyReport:
 
 
 @runtime_checkable
+class Session(Protocol):
+    """One streaming session: incremental execution of one topology.
+
+    Lifecycle (ISSUE 5): ``Engine.open(topology)`` → any interleaving of
+    ``feed(batch)`` (ingest the next :class:`RecordBatch`; batches must be
+    time-ordered) and ``advance(events)`` (register membership/capacity
+    events, addressed by per-stage tuple index or by ``at_time``) →
+    ``close()`` (flush open windows, release operator partial streams
+    through their downstream subtrees, and return the same
+    :class:`TopologyReport` schema ``run`` produces).  All per-edge state —
+    FIFO backlog, grouper epochs, keyed window state, remap accounting —
+    carries across feeds.
+    """
+
+    def feed(self, batch: RecordBatch) -> None:
+        ...
+
+    def advance(self, events: Sequence[ScopedEvent]) -> None:
+        ...
+
+    def close(self) -> TopologyReport:
+        ...
+
+
+@runtime_checkable
 class Engine(Protocol):
-    """One engine protocol: execute a topology against a source stream."""
+    """One engine protocol: execute a topology against a source stream,
+    either one-shot (``run``) or incrementally (``open`` → session)."""
 
     name: str
+
+    def open(self, topology: Topology, *,
+             arrival_rate: Optional[float] = None) -> Session:
+        ...
 
     def run(self, topology: Topology, source: Source,
             events: Sequence[ScopedEvent] = ()) -> TopologyReport:
         ...
+
+
+def _run_via_session(engine, topology: Topology, source: Source,
+                     events: Sequence[ScopedEvent]) -> TopologyReport:
+    """The one-shot path is literally a session: open, register the events,
+    feed every batch, close.  With the array-form Source (one batch) this
+    is bit-identical to the pre-session engines."""
+    session = engine.open(topology, arrival_rate=source.arrival_rate)
+    if events:
+        session.advance(events)
+    for batch in source.iter_batches():
+        session.feed(batch)
+    return session.close()
+
+
+class _BaseSession:
+    """Shared session mechanics — event registration, feed validation and
+    close-time report assembly; everything engine-specific (how a feed
+    executes, what state an edge carries) lives in the subclasses."""
+
+    def __init__(self, engine, topology: Topology):
+        self.engine = engine
+        self.topology = topology
+        self._edges = topology.ordered_edges()
+        self._sinks = set(topology.sinks())
+        self._st: Dict[str, object] = {}
+        self._pending: Dict[str, List] = {e.dst: [] for e in self._edges}
+        self._n_source = 0
+        self._last_ts = -np.inf
+        self._total_time = 0.0
+        self._e2e: List[np.ndarray] = []
+        self._report: Optional[TopologyReport] = None
+
+    def advance(self, events: Sequence[ScopedEvent]) -> None:
+        """Register membership/capacity events for subsequent feeds.  Each
+        event addresses its stage's *input* stream by tuple index (``at``,
+        stream-global) or timestamp (``at_time``); an index/timestamp the
+        stream never reaches means the event never fires."""
+        self._check_open()
+        for se in events:
+            if not isinstance(se, ScopedEvent):
+                raise TypeError(
+                    f"advance takes ScopedEvent(stage, event) wrappers, "
+                    f"got {type(se).__name__}")
+            if se.stage not in self._pending:
+                raise ValueError(f"no stage named {se.stage!r} in topology "
+                                 f"{self.topology.name!r}")
+            ev = se.event
+            if getattr(ev, "at_time", None) is None and ev.at < 0:
+                # at=-1 is the "address me via at_time()" placeholder; an
+                # event still carrying it was built but never addressed
+                raise ValueError(
+                    f"event for stage {se.stage!r} has no address: give "
+                    f"at= (tuple index) or wrap with at_time(event, t)")
+            self._pending[se.stage].append(ev)
+
+    def close(self) -> TopologyReport:
+        """Flush open windows, release operator partial streams through
+        their downstream subtrees, and report (same schema as ``run``)."""
+        self._check_open()
+        state: Dict[str, Dict] = {}
+        self._close_pump(state)
+        reports = [self._edge_report(e) for e in self._edges]
+        lats = np.concatenate(self._e2e) if self._e2e else np.empty(0)
+        avg, p50, p95, p99 = _percentiles(lats)
+        self._report = TopologyReport(
+            engine=self.engine.name, topology=self.topology.name,
+            n_source_tuples=self._n_source, total_time=self._total_time,
+            e2e_latency_avg=avg, e2e_latency_p50=p50, e2e_latency_p95=p95,
+            e2e_latency_p99=p99, edges=reports, state=state,
+            migration_bytes=sum(r.migration_bytes for r in reports),
+            tuples_replayed=sum(r.tuples_replayed for r in reports),
+        )
+        return self._report
+
+    # -- shared internals ------------------------------------------------------
+    def _check_open(self) -> None:
+        if self._report is not None:
+            raise RuntimeError("session is closed")
+
+    def _check_batch(self, batch: RecordBatch) -> bool:
+        """Validate a feed (type, emptiness, cross-feed time ordering) and
+        advance the stream clock.  Returns False for an empty batch."""
+        self._check_open()
+        if not isinstance(batch, RecordBatch):
+            raise TypeError(
+                f"feed takes a RecordBatch, got {type(batch).__name__}")
+        if len(batch) == 0:
+            return False
+        ts = batch.timestamps
+        if float(ts[0]) < self._last_ts:
+            raise ValueError(
+                f"batches must be time-ordered: this feed starts at "
+                f"t={float(ts[0]):g} but the stream is already at "
+                f"t={self._last_ts:g}")
+        self._last_ts = float(ts[-1])
+        return True
+
+    def _zero_report(self, edge: Edge, stage: Stage) -> EdgeReport:
+        """The report row of an edge that never received a tuple."""
+        return EdgeReport(
+            edge=edge.name, src=edge.src, dst=edge.dst,
+            scheme=edge.grouping.scheme, workers=stage.parallelism,
+            n_tuples=0, execution_time=0.0, latency_avg=0.0,
+            latency_p50=0.0, latency_p95=0.0, latency_p99=0.0,
+            throughput=0.0, memory_overhead=0, memory_overhead_norm=0.0,
+            imbalance=0.0)
+
+
+def _due_events(pending: List, offset: int, times: np.ndarray):
+    """Split a stage's pending events into the ones due within this feed's
+    index window ``[offset, offset + len(times))`` — rewritten to feed-local
+    indices — and the rest, which stay pending.  Time-addressed events
+    resolve against this feed's input timestamps (first tuple at or after
+    the timestamp); a timestamp that already slipped past (it fell between
+    two feeds) fires at the feed's first tuple, and one past the fed stream
+    stays pending (never firing if the stream ends first, mirroring an
+    out-of-range index)."""
+    n = int(times.shape[0])
+    due, keep = [], []
+    for e in pending:
+        t = getattr(e, "at_time", None)
+        if t is not None:
+            if n == 0 or t > times[-1]:
+                keep.append(e)
+                continue
+            at = offset + int(np.searchsorted(times, t, side="left"))
+            e = dataclasses.replace(e, at=at, at_time=None)
+        if e.at < offset + n:
+            due.append(dataclasses.replace(e, at=max(e.at - offset, 0)))
+        else:
+            keep.append(e)
+    return due, keep
 
 
 # ---------------------------------------------------------------------------
@@ -155,19 +332,38 @@ class Engine(Protocol):
 class RemapAccountant:
     """Event observer that probes a fixed key sample around each membership
     event and counts primary-route changes (works against any grouper via
-    ``probe_route``; schemes with no key affinity report ``None``)."""
+    ``probe_route``; schemes with no key affinity report ``None``).
+
+    ``offset`` rebases the recorded event position onto the stream-global
+    index: sessions hand :func:`simulate_edge` feed-local events, so they
+    set it to the feed's base index before each feed (0 for one-shot runs,
+    keeping the reported rows identical to the pre-session engines)."""
 
     def __init__(self, sample_keys: Sequence):
         self.sample = list(sample_keys)
+        self.offset = 0
         self.per_event: List[Dict] = []
         self._before: Optional[List[Optional[int]]] = None
+
+    def extend_sample(self, keys: Sequence, cap: int) -> None:
+        """Grow the probe sample with unseen keys (up to ``cap``): sessions
+        call this per feed while events are outstanding, so keys that first
+        appear in later feeds — a post-flip hot head — are probed too."""
+        have = set(self.sample)
+        for k in keys:
+            if len(self.sample) >= cap:
+                break
+            if k not in have:
+                have.add(k)
+                self.sample.append(k)
 
     def __call__(self, kind: str, grouper, event) -> None:
         if kind == "pre_membership":
             self._before = [grouper.probe_route(k) for k in self.sample]
         elif kind == "post_membership":
             after = [grouper.probe_route(k) for k in self.sample]
-            row = {"at": int(event.at), "sampled": len(self.sample)}
+            row = {"at": int(event.at) + self.offset,
+                   "sampled": len(self.sample)}
             if self.sample and after[0] is not None:
                 moved = sum(1 for a, b in zip(self._before, after) if a != b)
                 row["moved"] = moved
@@ -239,13 +435,14 @@ def _emit_state(mgr: KeyedStateManager, finishes: np.ndarray,
     state entry, keyed by the aggregation key and released when its worker
     flushed the window (the finish time of that worker's last tuple in the
     window; ``fallback_time`` covers entries whose anchor tuple never
-    finished — the serving engine's dropped requests)."""
+    finished — the serving engine's dropped requests).  Partial tuples
+    carry no payload column."""
     ks, last = mgr.partial_entries()
     t = finishes[last]
     t = np.where(t >= 0.0, t, fallback_time)
     roots = in_roots[last]
     order = np.argsort(t, kind="stable")
-    return ks[order], t[order], roots[order]
+    return ks[order], t[order], roots[order], None
 
 
 # ---------------------------------------------------------------------------
@@ -275,111 +472,206 @@ class SimulatorEngine:
         self.remap_sample = remap_sample
         self.name = f"dspe-{mode}"
 
+    def open(self, topology: Topology, *,
+             arrival_rate: Optional[float] = None) -> "SimulatorSession":
+        """Open an incremental streaming session on this simulator.
+        ``arrival_rate`` is the capacity-planning hint for stages without
+        an explicit cost (``None``: inferred from the first feed)."""
+        return SimulatorSession(self, topology, arrival_rate=arrival_rate)
+
     def run(self, topology: Topology, source: Source,
             events: Sequence[ScopedEvent] = ()) -> TopologyReport:
-        keys = np.asarray(source.keys)
-        n = int(keys.shape[0])
-        dt = 1.0 / source.arrival_rate
-        # per-stage streams: (keys, arrival times, root source index)
-        streams = {SOURCE: (keys, np.arange(n, dtype=np.float64) * dt,
-                            np.arange(n, dtype=np.int64))}
-        sinks = set(topology.sinks())
-        reports: List[EdgeReport] = []
-        e2e: List[np.ndarray] = []
-        state: Dict[str, Dict] = {}
-        total_time = 0.0
+        return _run_via_session(self, topology, source, events)
 
-        for idx, edge in enumerate(topology.ordered_edges()):
-            in_keys, in_times, in_roots = streams[edge.src]
-            stage = topology.stage(edge.dst)
-            m = int(in_keys.shape[0])
+
+class _SimEdge:
+    """One grouped edge's carried session state (DSPE simulator)."""
+
+    __slots__ = ("stage", "grouper", "caps", "state", "acct", "mgr",
+                 "lats", "n", "seed", "dt_hint", "finishes", "roots", "srep")
+
+    def __init__(self, stage: Stage, grouper, caps: np.ndarray, seed: int,
+                 dt_hint: Optional[float], mgr: Optional[KeyedStateManager]):
+        self.stage = stage
+        self.grouper = grouper
+        self.caps = caps
+        self.state = None            # core.stream.EdgeState after 1st feed
+        self.seed = seed
+        self.dt_hint = dt_hint
+        self.acct = RemapAccountant([])
+        self.mgr = mgr
+        self.lats: List[np.ndarray] = []
+        self.n = 0
+        self.finishes: List[np.ndarray] = []  # operator stages only
+        self.roots: List[np.ndarray] = []     # operator stages only
+        self.srep: Optional[StateReport] = None
+
+
+class SimulatorSession(_BaseSession):
+    """Incremental record-batch execution on the DSPE simulator.
+
+    Every feed pushes one :class:`RecordBatch` through the whole topology
+    subtree reachable via transform stages; the closed-form FIFO in
+    :func:`repro.core.stream.simulate_edge` continues from the carried
+    per-worker ``busy_until`` so queue backlog survives the feed boundary.
+    Operator stages fold tuples into their keyed windows per feed and
+    release the partial-aggregate stream through their downstream merge
+    edges at :meth:`close` (when the final windows flush).
+
+    Worker-capacity defaults for stages without an explicit ``cost`` /
+    ``capacities`` are frozen at the edge's first feed (from the arrival
+    rate observed there, or the ``arrival_rate`` hint for the source edge).
+    """
+
+    def __init__(self, engine: "SimulatorEngine", topology: Topology,
+                 arrival_rate: Optional[float] = None):
+        super().__init__(engine, topology)
+        self._rate = arrival_rate
+        self._order = {e.name: i for i, e in enumerate(self._edges)}
+        self._src_times: List[np.ndarray] = []
+
+    # -- protocol --------------------------------------------------------------
+    def feed(self, batch: RecordBatch) -> None:
+        """Ingest the next record batch and run it through the topology."""
+        if not self._check_batch(batch):
+            return
+        n = len(batch)
+        ts = batch.timestamps
+        base = self._n_source
+        roots = np.arange(base, base + n, dtype=np.int64)
+        self._n_source += n
+        self._src_times.append(ts)
+        streams = {SOURCE: (batch.keys, ts, roots, batch.values)}
+        self._pump(streams, lambda r: ts[r - base])
+
+    # -- internals -------------------------------------------------------------
+    def _close_pump(self, state: Dict[str, Dict]) -> None:
+        src_all = (np.concatenate(self._src_times) if self._src_times
+                   else np.empty(0))
+        self._pump({}, lambda r: src_all[r], state=state)
+
+    def _pump(self, streams: Dict, src_arrival, state=None) -> None:
+        """Push per-stage streams through the DAG in dataflow order.  With
+        ``state`` set (close-time), operator stages finalize and release
+        their remaining partials downstream."""
+        for edge in self._edges:
+            if edge.src in streams:
+                emission = self._run_edge(edge, *streams[edge.src],
+                                          src_arrival)
+                if emission is not None:
+                    streams[edge.dst] = emission
+            if state is None:
+                continue
+            st = self._st.get(edge.name)
+            if st is not None and st.mgr is not None:
+                st.mgr.finalize()
+                st.srep = st.mgr.report(st.stage.name)
+                state[st.stage.name] = st.srep.summary()
+                if st.stage.name not in self._sinks:
+                    fin = (np.concatenate(st.finishes) if st.finishes
+                           else np.empty(0))
+                    roots = (np.concatenate(st.roots) if st.roots
+                             else np.empty(0, dtype=np.int64))
+                    streams[st.stage.name] = _emit_state(
+                        st.mgr, fin, roots,
+                        float(fin.max()) if fin.size else 0.0)
+
+    def _run_edge(self, edge: Edge, in_keys, in_times, in_roots, in_values,
+                  src_arrival) -> Optional[tuple]:
+        eng = self.engine
+        st = self._st.get(edge.name)
+        stage = self.topology.stage(edge.dst)
+        m = int(in_keys.shape[0])
+        if st is None:
             span = float(in_times[-1] - in_times[0]) if m > 1 else 0.0
-            rate = (m - 1) / span if span > 0 else source.arrival_rate
-            caps = stage.worker_capacities(rate, self.utilization)
+            fallback = self._rate if self._rate else 10_000.0
+            rate = (m - 1) / span if span > 0 else fallback
+            idx = self._order[edge.name]
             # the grouper gets no oracle capacities: capacity-aware schemes
             # must *discover* the true P_w through the periodic (noisy)
             # sampling hook, exactly like the legacy single-hop engine
-            grouper = build_grouper(edge.grouping, stage.parallelism)
-            sub_events = scoped(events, edge.dst)
-            # probe sample only when a membership event can actually fire —
-            # _sample_keys is an O(m log m) unique over the edge stream
-            acct = RemapAccountant(
-                _sample_keys(in_keys, self.remap_sample) if sub_events
-                else [])
-            mgr = _stage_manager(stage)
-            res = simulate_edge(
-                grouper, in_keys,
-                # the source stream is uniform by construction: taking the
-                # times=None fast path keeps this bit-identical to the
-                # legacy single-hop engine
-                times=None if edge.src == SOURCE else in_times,
-                arrival_rate=source.arrival_rate,
-                mode=self.mode, capacities=caps,
-                sample_every=self.sample_every,
-                sample_noise=self.sample_noise,
-                events=sub_events,
-                seed=self.seed + 17 * idx,
-                event_observer=(acct if mgr is None
-                                else _chain_observers(acct, mgr.on_event)),
-                tuple_observer=mgr.feed if mgr is not None else None,
-            )
-            srep = None
-            if mgr is not None:
-                mgr.finalize()
-                srep = mgr.report(stage.name)
-                state[stage.name] = srep.summary()
-            reports.append(self._edge_report(edge, stage, res.metrics, m,
-                                             acct, srep))
-            if m:
-                total_time = max(total_time, float(res.finishes.max()))
-            if stage.name in sinks:
-                e2e.append(res.finishes - in_roots * dt)
-            elif mgr is not None:  # operator stages emit their partials
-                streams[edge.dst] = _emit_state(
-                    mgr, res.finishes, in_roots,
-                    float(res.finishes.max()) if m else 0.0)
-            else:  # intermediate stage: release transformed tuples
-                streams[edge.dst] = _emit(stage, in_keys, res.finishes,
-                                          in_roots)
-
-        lats = np.concatenate(e2e) if e2e else np.empty(0)
-        avg, p50, p95, p99 = _percentiles(lats)
-        return TopologyReport(
-            engine=self.name, topology=topology.name, n_source_tuples=n,
-            total_time=total_time, e2e_latency_avg=avg, e2e_latency_p50=p50,
-            e2e_latency_p95=p95, e2e_latency_p99=p99, edges=reports,
-            state=state,
-            migration_bytes=sum(r.migration_bytes for r in reports),
-            tuples_replayed=sum(r.tuples_replayed for r in reports),
+            st = self._st[edge.name] = _SimEdge(
+                stage=stage,
+                grouper=build_grouper(edge.grouping, stage.parallelism),
+                caps=stage.worker_capacities(rate, eng.utilization),
+                seed=eng.seed + 17 * idx,
+                dt_hint=(1.0 / self._rate
+                         if edge.src == SOURCE and self._rate else None),
+                mgr=_stage_manager(stage))
+        due, keep = _due_events(self._pending[edge.dst], st.n, in_times)
+        self._pending[edge.dst] = keep
+        # probe sample only while membership events are outstanding —
+        # _sample_keys is an O(m log m) unique over the edge stream; it
+        # accumulates across feeds so late-arriving hot keys are probed too
+        if due or keep:
+            st.acct.extend_sample(_sample_keys(in_keys, eng.remap_sample),
+                                  eng.remap_sample)
+        st.acct.offset = st.n  # events below are feed-local; report global
+        mgr = st.mgr
+        res = simulate_edge(
+            st.grouper, in_keys, times=in_times,
+            arrival_rate=self._rate or 10_000.0, mode=eng.mode,
+            capacities=st.caps if st.state is None else None,
+            sample_every=eng.sample_every, sample_noise=eng.sample_noise,
+            events=due, seed=st.seed,
+            event_observer=(st.acct if mgr is None
+                            else _chain_observers(st.acct, mgr.on_event)),
+            tuple_observer=mgr.feed if mgr is not None else None,
+            values=in_values, state=st.state, dt=st.dt_hint,
+            compute_metrics=False,  # aggregated once at close
         )
+        st.state = res.state
+        st.lats.append(res.latencies)
+        st.n += m
+        if m:
+            self._total_time = max(self._total_time,
+                                   float(res.finishes.max()))
+        if stage.name in self._sinks:
+            self._e2e.append(res.finishes - src_arrival(in_roots))
+        elif mgr is not None:
+            # operator stages release their partial stream at close() —
+            # remember the finish times its entries are anchored to
+            st.finishes.append(res.finishes)
+            st.roots.append(np.asarray(in_roots))
+        else:  # intermediate stage: release transformed tuples
+            return _emit(stage, in_keys, res.finishes, in_roots, in_values)
+        return None
 
-    @staticmethod
-    def _edge_report(edge: Edge, stage: Stage, metrics: StreamMetrics,
-                     n_tuples: int, acct: RemapAccountant,
-                     srep: Optional[StateReport] = None) -> EdgeReport:
-        extra = _state_extra(srep)
-        return EdgeReport(
-            edge=edge.name, src=edge.src, dst=edge.dst,
-            scheme=edge.grouping.scheme, workers=stage.parallelism,
-            n_tuples=n_tuples, remap_events=acct.per_event,
-            remap_frac_mean=acct.frac_mean(), **metrics.row(), **extra,
-        )
+    def _edge_report(self, edge: Edge) -> EdgeReport:
+        st = self._st.get(edge.name)
+        stage = self.topology.stage(edge.dst)
+        if st is None:  # the edge never received a tuple
+            return self._zero_report(edge, stage)
+        lats = np.concatenate(st.lats) if st.lats else np.empty(0)
+        metrics = edge_metrics(st.grouper, st.state.busy_until, lats, st.n)
+        return EdgeReport(edge=edge.name, src=edge.src, dst=edge.dst,
+                          scheme=edge.grouping.scheme,
+                          workers=stage.parallelism, n_tuples=st.n,
+                          remap_events=st.acct.per_event,
+                          remap_frac_mean=st.acct.frac_mean(),
+                          **metrics.row(), **_state_extra(st.srep))
 
 
 def _emit(stage: Stage, in_keys: np.ndarray, finishes: np.ndarray,
-          in_roots: np.ndarray):
+          in_roots: np.ndarray, in_values: Optional[np.ndarray] = None):
     """The stream a stage emits: transformed keys released at each tuple's
     finish time, sorted into arrival order (stable — ties keep emission
-    order, mirroring a FIFO merge of the per-worker output streams)."""
+    order, mirroring a FIFO merge of the per-worker output streams).  A
+    payload column rides along: each emitted tuple inherits its parent's
+    value (a split sentence's words carry the sentence's payload)."""
     t = stage.transform
     if t is not None:
         out_keys = t(in_keys)
         out_times = np.repeat(finishes, t.fanout)
         out_roots = np.repeat(in_roots, t.fanout)
+        out_values = (None if in_values is None
+                      else np.repeat(in_values, t.fanout))
     else:
         out_keys, out_times, out_roots = in_keys, finishes, in_roots
+        out_values = in_values
     order = np.argsort(out_times, kind="stable")
-    return out_keys[order], out_times[order], out_roots[order]
+    return (out_keys[order], out_times[order], out_roots[order],
+            None if out_values is None else out_values[order])
 
 
 # ---------------------------------------------------------------------------
@@ -409,111 +701,225 @@ class ServingTopologyEngine:
         self.max_ticks = max_ticks
         self.remap_sample = remap_sample
 
+    def open(self, topology: Topology, *,
+             arrival_rate: Optional[float] = None) -> "ServingSession":
+        """Open an incremental streaming session on the serving engine
+        (``arrival_rate`` is accepted for protocol symmetry; serving time
+        is scheduler ticks, paced by the topology bottleneck)."""
+        return ServingSession(self, topology)
+
     def run(self, topology: Topology, source: Source,
             events: Sequence[ScopedEvent] = ()) -> TopologyReport:
-        from ..serving.engine import Request, ServingEngine
+        return _run_via_session(self, topology, source, events)
 
-        keys = np.asarray(source.keys)
-        if keys.shape[0] > self.max_requests:
-            pick = np.linspace(0, keys.shape[0] - 1,
-                               self.max_requests).astype(np.int64)
-            keys = keys[pick]
-        n = int(keys.shape[0])
+
+class _ServingEdge:
+    """One grouped edge's carried session state (serving engine)."""
+
+    __slots__ = ("stage", "eng", "acct", "mgr", "reqs", "in_times", "n",
+                 "tick", "roots", "srep")
+
+    def __init__(self, stage: Stage, eng,
+                 mgr: Optional[KeyedStateManager]):
+        self.stage = stage
+        self.eng = eng
+        self.acct = RemapAccountant([])
+        self.mgr = mgr
+        self.reqs: List = []
+        self.in_times: List[np.ndarray] = []
+        self.n = 0
+        self.tick = 0
+        self.roots: List[np.ndarray] = []  # operator stages only
+        self.srep: Optional[StateReport] = None
+
+
+class ServingSession(_BaseSession):
+    """Incremental record-batch execution on the continuous-batching
+    serving engine: each feed's tuples become 1-token requests submitted
+    onto the carried per-edge replica pools, and the per-edge tick loops
+    resume where the previous feed left them (each feed drains before the
+    next — backlogged replicas carry their queues across the boundary).
+
+    Serving time is scheduler ticks: a feed's records arrive on the
+    stream-global tick grid regardless of their wall-clock timestamps.
+    ``at_time`` events therefore resolve against the *source* wall-clock
+    timestamps and scale onto each stage's input stream by the cumulative
+    transform fanout.  Feeds larger than ``max_requests`` are subsampled
+    (per feed — per-tick scheduling is Python-loop work).
+    """
+
+    def __init__(self, engine: "ServingTopologyEngine", topology: Topology):
+        super().__init__(engine, topology)
         # bottleneck-feasible pacing: source tuples per tick such that every
         # stage sees at most `utilization` of its token capacity
-        per_tick = self.utilization * min(
+        per_tick = engine.utilization * min(
             topology.stage(e.dst).parallelism / topology.fanout_to(e.dst)
             for e in topology.edges
         )
-        dt = 1.0 / max(per_tick, 1e-9)
-        src_times = np.arange(n, dtype=np.float64) * dt
-        streams = {SOURCE: (keys, src_times,
-                            np.arange(n, dtype=np.int64))}
-        sinks = set(topology.sinks())
-        reports: List[EdgeReport] = []
-        e2e: List[np.ndarray] = []
-        state: Dict[str, Dict] = {}
-        total_time = 0.0
+        self._dt = 1.0 / max(per_tick, 1e-9)
 
-        for edge in topology.ordered_edges():
-            in_keys, in_times, in_roots = streams[edge.src]
-            stage = topology.stage(edge.dst)
-            m = int(in_keys.shape[0])
+    # -- protocol --------------------------------------------------------------
+    def feed(self, batch: RecordBatch) -> None:
+        """Ingest the next record batch (subsampled to ``max_requests``)."""
+        if not self._check_batch(batch):
+            return
+        keys, ts, vals = batch.keys, batch.timestamps, batch.values
+        if keys.shape[0] > self.engine.max_requests:
+            pick = np.linspace(0, keys.shape[0] - 1,
+                               self.engine.max_requests).astype(np.int64)
+            keys, ts = keys[pick], ts[pick]
+            vals = None if vals is None else vals[pick]
+        n = int(keys.shape[0])
+        base = self._n_source
+        self._n_source += n
+        self._resolve_at_time(ts, base)
+        src_ticks = np.arange(base, base + n, dtype=np.float64) * self._dt
+        streams = {SOURCE: (keys, src_ticks,
+                            np.arange(base, base + n, dtype=np.int64),
+                            vals)}
+        self._pump(streams)
+
+    # -- internals -------------------------------------------------------------
+    def _close_pump(self, state: Dict[str, Dict]) -> None:
+        self._pump({}, state=state)
+
+    def _resolve_at_time(self, ts: np.ndarray, base: int) -> None:
+        """Lower time-addressed events onto stage-input tuple indices: the
+        first (subsampled) source record at or after the timestamp, scaled
+        by the stage's cumulative transform fanout."""
+        for stage, pending in self._pending.items():
+            if not any(getattr(e, "at_time", None) is not None
+                       for e in pending):
+                continue
+            fan = self.topology.fanout_to(stage)
+            out = []
+            for e in pending:
+                t = getattr(e, "at_time", None)
+                if t is not None and ts.shape[0] and t <= float(ts[-1]):
+                    src_idx = base + int(np.searchsorted(ts, t, side="left"))
+                    e = dataclasses.replace(e, at=src_idx * fan,
+                                            at_time=None)
+                out.append(e)
+            self._pending[stage] = out
+
+    def _pump(self, streams: Dict, state=None) -> None:
+        for edge in self._edges:
+            if edge.src in streams:
+                emission = self._run_edge(edge, *streams[edge.src])
+                if emission is not None:
+                    streams[edge.dst] = emission
+            if state is None:
+                continue
+            st = self._st.get(edge.name)
+            if st is not None and st.mgr is not None:
+                st.mgr.finalize()
+                st.srep = st.mgr.report(st.stage.name)
+                state[st.stage.name] = st.srep.summary()
+                if st.stage.name not in self._sinks:
+                    fins = np.array([r.finished for r in st.reqs])
+                    roots = (np.concatenate(st.roots) if st.roots
+                             else np.empty(0, dtype=np.int64))
+                    streams[st.stage.name] = _emit_state(
+                        st.mgr, fins, roots, float(st.eng.now))
+
+    def _run_edge(self, edge: Edge, in_keys, in_times, in_roots,
+                  in_values) -> Optional[tuple]:
+        from ..serving.engine import Request, ServingEngine
+
+        cfg = self.engine
+        st = self._st.get(edge.name)
+        stage = self.topology.stage(edge.dst)
+        m = int(in_keys.shape[0])
+        if st is None:
             caps = stage.worker_capacities(1.0)  # relative speeds only
             speeds = (1.0 / caps) / (1.0 / caps).mean()
-            eng = ServingEngine(stage.parallelism,
-                                slots_per_replica=self.slots_per_replica,
-                                tokens_per_tick=speeds,
-                                grouping=edge.grouping)
-            pending = sorted(scoped(events, edge.dst), key=lambda e: e.at)
-            acct = RemapAccountant(
-                _sample_keys(in_keys, self.remap_sample) if pending else [])
-            mgr = _stage_manager(stage)
-            observer = (acct if mgr is None
-                        else _chain_observers(acct, mgr.on_event))
-            reqs = [Request(i, int(k), arrival=float(t), target_tokens=1)
-                    for i, (k, t) in enumerate(zip(in_keys.tolist(),
-                                                   in_times.tolist()))]
-            tick = 0
-            nxt = 0
-            while len(eng.done) < m and tick < self.max_ticks:
-                while pending and pending[0].at <= nxt:
-                    self._apply_event(eng, pending.pop(0), observer)
-                while nxt < m and in_times[nxt] <= tick:
-                    eng.submit(reqs[nxt])
-                    if mgr is not None:  # routed exactly once, at ingress
-                        mgr.feed(in_keys[nxt:nxt + 1],
-                                 np.array([reqs[nxt].replica]))
-                    nxt += 1
-                eng.tick()
-                tick += 1
+            st = self._st[edge.name] = _ServingEdge(
+                stage=stage,
+                eng=ServingEngine(stage.parallelism,
+                                  slots_per_replica=cfg.slots_per_replica,
+                                  tokens_per_tick=speeds,
+                                  grouping=edge.grouping),
+                mgr=_stage_manager(stage))
+        pending = self._pending[edge.dst]
+        hi = st.n + m
+        due = sorted((e for e in pending
+                      if e.at_time is None and e.at < hi),
+                     key=lambda e: e.at)
+        self._pending[edge.dst] = [e for e in pending
+                                   if e.at_time is not None or e.at >= hi]
+        if due or self._pending[edge.dst]:
+            st.acct.extend_sample(_sample_keys(in_keys, cfg.remap_sample),
+                                  cfg.remap_sample)
+        mgr = st.mgr
+        observer = (st.acct if mgr is None
+                    else _chain_observers(st.acct, mgr.on_event))
+        reqs_f = [Request(st.n + i, int(k), arrival=float(t),
+                          target_tokens=1)
+                  for i, (k, t) in enumerate(zip(in_keys.tolist(),
+                                                 in_times.tolist()))]
+        st.reqs.extend(reqs_f)
+        st.in_times.append(np.asarray(in_times, dtype=np.float64))
+        if mgr is not None:
+            st.roots.append(np.asarray(in_roots))
+        eng = st.eng
+        target = len(eng.done) + m
+        tick = st.tick
+        nxt = 0
+        while len(eng.done) < target and tick < cfg.max_ticks:
+            while due and due[0].at <= st.n + nxt:
+                self._apply_event(eng, due.pop(0), observer)
+            while nxt < m and in_times[nxt] <= tick:
+                eng.submit(reqs_f[nxt])
+                if mgr is not None:  # routed exactly once, at ingress
+                    mgr.feed(in_keys[nxt:nxt + 1],
+                             np.array([reqs_f[nxt].replica]),
+                             None if in_values is None
+                             else in_values[nxt:nxt + 1])
+                nxt += 1
+            eng.tick()
+            tick += 1
+        st.tick = tick
+        st.n += m
+        finishes = np.array([r.finished for r in reqs_f])
+        done = finishes >= 0
+        if done.any():
+            self._total_time = max(self._total_time,
+                                   float(finishes[done].max()))
+        if stage.name in self._sinks:
+            self._e2e.append((finishes - in_roots * self._dt)[done])
+        elif mgr is not None:
+            pass  # partial stream released at close(), via st.reqs/st.roots
+        else:  # intermediate stage: release transformed tuples
+            return _emit(stage, in_keys[done], finishes[done],
+                         in_roots[done],
+                         None if in_values is None else in_values[done])
+        return None
 
-            srep = None
-            if mgr is not None:
-                mgr.finalize()
-                srep = mgr.report(stage.name)
-                state[stage.name] = srep.summary()
-            finishes = np.array([r.finished for r in reqs])
-            done = finishes >= 0
-            lats = (finishes - in_times)[done]
-            avg, p50, p95, p99 = _percentiles(lats)
-            router = eng.router
-            reports.append(EdgeReport(
-                edge=edge.name, src=edge.src, dst=edge.dst,
-                scheme=edge.grouping.scheme, workers=stage.parallelism,
-                n_tuples=m, execution_time=float(eng.now),
-                latency_avg=avg, latency_p50=p50, latency_p95=p95,
-                latency_p99=p99,
-                throughput=eng.total_tokens / max(eng.now, 1.0),
-                memory_overhead=router.memory_overhead(),
-                memory_overhead_norm=router.memory_overhead_normalized(),
-                imbalance=_imbalance(router.assigned_counts),
-                remap_events=acct.per_event,
-                remap_frac_mean=acct.frac_mean(),
-                dropped=int(m - done.sum()),
-                **_state_extra(srep),
-            ))
-            if done.any():
-                total_time = max(total_time, float(finishes[done].max()))
-            if stage.name in sinks:
-                e2e.append((finishes - in_roots * dt)[done])
-            elif mgr is not None:  # operator stages emit their partials
-                streams[edge.dst] = _emit_state(mgr, finishes, in_roots,
-                                                float(eng.now))
-            else:  # intermediate stage: release transformed tuples
-                streams[edge.dst] = _emit(stage, in_keys[done],
-                                          finishes[done], in_roots[done])
-
-        lats = np.concatenate(e2e) if e2e else np.empty(0)
+    def _edge_report(self, edge: Edge) -> EdgeReport:
+        st = self._st.get(edge.name)
+        stage = self.topology.stage(edge.dst)
+        if st is None:  # the edge never received a tuple
+            return self._zero_report(edge, stage)
+        finishes = np.array([r.finished for r in st.reqs])
+        in_times = np.concatenate(st.in_times)
+        done = finishes >= 0
+        lats = (finishes - in_times)[done]
         avg, p50, p95, p99 = _percentiles(lats)
-        return TopologyReport(
-            engine=self.name, topology=topology.name, n_source_tuples=n,
-            total_time=total_time, e2e_latency_avg=avg, e2e_latency_p50=p50,
-            e2e_latency_p95=p95, e2e_latency_p99=p99, edges=reports,
-            state=state,
-            migration_bytes=sum(r.migration_bytes for r in reports),
-            tuples_replayed=sum(r.tuples_replayed for r in reports),
-        )
+        router = st.eng.router
+        return EdgeReport(
+            edge=edge.name, src=edge.src, dst=edge.dst,
+            scheme=edge.grouping.scheme, workers=stage.parallelism,
+            n_tuples=st.n, execution_time=float(st.eng.now),
+            latency_avg=avg, latency_p50=p50, latency_p95=p95,
+            latency_p99=p99,
+            throughput=st.eng.total_tokens / max(st.eng.now, 1.0),
+            memory_overhead=router.memory_overhead(),
+            memory_overhead_norm=router.memory_overhead_normalized(),
+            imbalance=_imbalance(router.assigned_counts),
+            remap_events=st.acct.per_event,
+            remap_frac_mean=st.acct.frac_mean(),
+            dropped=int(st.n - done.sum()),
+            **_state_extra(st.srep))
 
     def _apply_event(self, eng, event, observer) -> None:
         if isinstance(event, MembershipEvent):
@@ -527,7 +933,8 @@ class ServingTopologyEngine:
                         f"serving engine cannot add replica {new}: replica "
                         f"ids are never reused and must extend the range "
                         f"contiguously (next id is {eng.num_replicas})")
-                eng.add_replica(speed=1.0, slots=self.slots_per_replica)
+                eng.add_replica(speed=1.0,
+                                slots=self.engine.slots_per_replica)
             observer("post_membership", eng.router, event)
         elif isinstance(event, CapacityEvent):
             for wk, cap in event.capacities.items():

@@ -16,9 +16,14 @@ module is the declarative half of that API:
   broadcast its output along several outbound edges).  That covers the
   paper's pipelines (chains) and fan-out trees; fan-in (shared worker pools
   fed by several grouped edges) is out of scope and rejected eagerly.
-* :class:`Source` — the keyed input stream + its arrival rate.
+* :class:`RecordBatch` — a frozen columnar chunk of the input stream
+  (int keys + optional float64 payload ``values`` + explicit nondecreasing
+  ``timestamps``): the unit a session ingests (ISSUE 5).
+* :class:`Source` — the keyed input stream: an array one-batch convenience
+  form, or an iterable of record batches.
 * :class:`ScopedEvent` — a membership/capacity event targeted at one
-  stage's worker pool, with ``at`` indexing that edge's input stream.
+  stage's worker pool, with ``at`` indexing that edge's input stream (or
+  ``at_time`` addressing it by stream timestamp).
 
 Engines that execute a topology live in :mod:`repro.topology.engine`.
 """
@@ -26,7 +31,8 @@ Engines that execute a topology live in :mod:`repro.topology.engine`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -42,6 +48,7 @@ __all__ = [
     "Stage",
     "Edge",
     "Topology",
+    "RecordBatch",
     "Source",
     "ScopedEvent",
 ]
@@ -289,17 +296,132 @@ class Topology:
         return f
 
 
+def _frozen_column(arr: Optional[np.ndarray], dtype=None) -> Optional[np.ndarray]:
+    """A read-only copy-on-write view of one batch column: callers keep
+    their arrays writable; the batch's view can never mutate mid-session."""
+    if arr is None:
+        return None
+    out = np.asarray(arr) if dtype is None else np.asarray(arr, dtype=dtype)
+    if out.flags.writeable:
+        out = out.copy()
+        out.setflags(write=False)
+    return out
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
-class Source:
-    """The topology's input: interned integer keys at ``arrival_rate``
-    tuples/second (tuple ``i`` arrives at ``i / arrival_rate``)."""
+class RecordBatch:
+    """A frozen columnar chunk of a keyed stream (ISSUE 5) — the unit a
+    :class:`~repro.topology.engine.Session` ingests via ``feed``:
+
+    * ``keys`` — 1-D interned integer key ids (int32 preferred: the batched
+      grouping engine routes without hashing Python objects);
+    * ``timestamps`` — float64 per-record arrival times in seconds,
+      nondecreasing within the batch (and across the batches of one
+      session);
+    * ``values`` — optional float64 payload column (the real tuple values a
+      ``WindowOp(value="payload")`` aggregates instead of the pseudo-payload).
+
+    Columns are copied read-only on construction, so a batch can be fed to
+    several sessions (or replayed) without aliasing hazards.
+    """
 
     keys: np.ndarray
+    timestamps: np.ndarray
+    values: Optional[np.ndarray] = None
+
+    def __post_init__(self) -> None:
+        keys = np.asarray(self.keys)
+        if keys.ndim != 1 or keys.dtype.kind not in "iu":
+            raise TypeError(
+                f"RecordBatch keys must be a 1-D integer array, got "
+                f"dtype={keys.dtype} shape={keys.shape} (intern via "
+                f"repro.data.synthetic.intern_keys)")
+        ts = np.asarray(self.timestamps, dtype=np.float64)
+        if ts.shape != keys.shape:
+            raise ValueError(
+                f"timestamps shape {ts.shape} != keys shape {keys.shape}")
+        if ts.shape[0] > 1 and np.any(np.diff(ts) < 0.0):
+            raise ValueError("timestamps must be nondecreasing")
+        vals = self.values
+        if vals is not None:
+            vals = np.asarray(vals, dtype=np.float64)
+            if vals.shape != keys.shape:
+                raise ValueError(
+                    f"values shape {vals.shape} != keys shape {keys.shape}")
+        object.__setattr__(self, "keys", _frozen_column(keys))
+        object.__setattr__(self, "timestamps", _frozen_column(ts))
+        object.__setattr__(self, "values", _frozen_column(vals))
+
+    def __len__(self) -> int:
+        return int(self.keys.shape[0])
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Source:
+    """The topology's input stream, in either of two forms:
+
+    * **array form** (the one-batch convenience): ``Source(keys,
+      arrival_rate=...)`` — interned integer keys at ``arrival_rate``
+      tuples/second (tuple ``i`` arrives at ``i / arrival_rate``), with
+      optional per-tuple ``values`` payload and explicit ``timestamps``
+      overriding the uniform grid;
+    * **batch form** (ISSUE 5): ``Source(batches=<iterable of
+      RecordBatch>)`` — an incremental stream whose batches a session feeds
+      one at a time.  ``arrival_rate`` remains the capacity-planning hint
+      for stages without an explicit cost.
+
+    A Source wrapping a generator is single-use (the generator is consumed
+    by ``iter_batches``); the array form is reusable.
+    """
+
+    keys: Optional[np.ndarray] = None
     arrival_rate: float = 10_000.0
+    values: Optional[np.ndarray] = None
+    timestamps: Optional[np.ndarray] = None
+    batches: Optional[Iterable[RecordBatch]] = None
 
     def __post_init__(self) -> None:
         if self.arrival_rate <= 0.0:
             raise ValueError("arrival_rate must be positive")
+        if (self.keys is None) == (self.batches is None):
+            raise ValueError("give exactly one of keys= (array form) or "
+                             "batches= (record-batch form)")
+        if self.batches is not None and (self.values is not None
+                                         or self.timestamps is not None):
+            raise ValueError("values/timestamps columns belong inside each "
+                             "RecordBatch in batch form")
+
+    def iter_batches(self, batch_size: Optional[int] = None
+                     ) -> Iterator[RecordBatch]:
+        """The stream as :class:`RecordBatch` chunks.  Array form yields one
+        batch (or uniform-grid chunks of ``batch_size`` — the session-API
+        replay of a materialized stream); batch form yields the wrapped
+        iterable as-is (``batch_size`` must be ``None``)."""
+        if batch_size is not None and batch_size <= 0:
+            raise ValueError(f"batch_size must be positive, got {batch_size}")
+        if self.batches is not None:
+            if batch_size is not None:
+                raise ValueError("batch_size only applies to the array form")
+            for b in self.batches:
+                if not isinstance(b, RecordBatch):
+                    raise TypeError(f"batches must yield RecordBatch, got "
+                                    f"{type(b).__name__}")
+                yield b
+            return
+        keys = np.asarray(self.keys)
+        n = int(keys.shape[0])
+        if self.timestamps is not None:
+            ts = np.asarray(self.timestamps, dtype=np.float64)
+        else:
+            ts = np.arange(n, dtype=np.float64) * (1.0 / self.arrival_rate)
+        vals = self.values
+        if batch_size is None:
+            batch_size = max(n, 1)
+        for lo in range(0, n, batch_size):
+            hi = min(lo + batch_size, n)
+            yield RecordBatch(
+                keys[lo:hi], ts[lo:hi],
+                None if vals is None else np.asarray(vals)[lo:hi])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -316,16 +438,3 @@ class ScopedEvent:
             raise TypeError(
                 f"ScopedEvent wraps MembershipEvent or CapacityEvent, got "
                 f"{type(self.event).__name__}")
-
-
-def scoped(events: Sequence[object], stage: str) -> List[object]:
-    """The raw events targeting ``stage`` (helper for engines)."""
-    out = []
-    for se in events:
-        if not isinstance(se, ScopedEvent):
-            raise TypeError(
-                f"topology engines take ScopedEvent(stage, event) wrappers, "
-                f"got {type(se).__name__}")
-        if se.stage == stage:
-            out.append(se.event)
-    return out

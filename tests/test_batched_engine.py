@@ -110,9 +110,12 @@ def test_simulator_metrics_bounded(scheme, keys):
 
 
 def test_simulator_object_keys_fall_back():
-    """Non-integer keys take the reference path transparently."""
+    """Non-integer keys take the reference path — loudly (ISSUE 5): the
+    10-20x slowdown warns with the offending dtype/shape."""
     str_keys = np.array([f"k{i % 7}" for i in range(300)], dtype=object)
-    m = _sim_batched(build_grouper("pkg", 4), str_keys, arrival_rate=1e3)
+    with pytest.warns(UserWarning, match=r"falling back.*dtype=object.*"
+                                         r"shape=\(300,\)"):
+        m = _sim_batched(build_grouper("pkg", 4), str_keys, arrival_rate=1e3)
     assert m.execution_time > 0
 
     # interned ids take the batched path and stay exact vs their own oracle
