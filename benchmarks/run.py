@@ -20,9 +20,10 @@ def main() -> None:
                     help="substring filter on benchmark module name")
     args = ap.parse_args()
 
-    from . import (bench_breakdown, bench_chash, bench_deploy, bench_grouping,
-                   bench_latency, bench_memory, bench_moe, bench_motivating,
-                   bench_params, bench_scenarios, bench_session, bench_state,
+    from . import (bench_breakdown, bench_chash, bench_deploy,
+                   bench_feed_fused, bench_grouping, bench_latency,
+                   bench_memory, bench_moe, bench_motivating, bench_params,
+                   bench_scenarios, bench_session, bench_state,
                    bench_topology, roofline)
 
     modules = [
@@ -37,6 +38,7 @@ def main() -> None:
         ("bench_topology", bench_topology),       # multi-stage DAGs (ISSUE 3)
         ("bench_state", bench_state),             # keyed operator state (ISSUE 4)
         ("bench_session", bench_session),         # streaming sessions (ISSUE 5)
+        ("bench_feed_fused", bench_feed_fused),   # fused device feeds (ISSUE 6)
         ("bench_deploy", bench_deploy),           # Figs. 18-20
         ("bench_moe", bench_moe),                 # beyond-paper MoE routing
         ("roofline", roofline),                   # §Roofline table

@@ -139,6 +139,10 @@ class EdgeState:
     active: set
     rng: np.random.Generator
     offset: int = 0
+    #: fused-mode residency: a ``FusedEdgeRunner`` holding this edge's
+    #: device-resident arrays across feeds (ISSUE 6), or the
+    #: ``_FUSED_FALLBACK`` sentinel once the edge has dropped to batched
+    device: object = None
 
 
 @dataclasses.dataclass
@@ -171,13 +175,22 @@ class EdgeResult:
     (``finishes - arrivals`` computed before the finish-time rounding, so
     sessions can aggregate cross-feed percentiles bit-identically);
     ``state`` is the carried :class:`EdgeState` — pass it back into the
-    next :func:`simulate_edge` call to continue the same stream."""
+    next :func:`simulate_edge` call to continue the same stream;
+    ``dispatches`` counts host↔device launches this call made (ISSUE 6 —
+    the fused engine's "one dispatch per steady-state feed" claim is
+    measured here; the host engines report 0)."""
 
     metrics: Optional[StreamMetrics]
     finishes: np.ndarray
     latencies: np.ndarray = dataclasses.field(
         default_factory=lambda: np.empty(0))
     state: Optional[EdgeState] = None
+    dispatches: int = 0
+
+
+# sentinel stored on EdgeState.device once a fused edge has fallen back to
+# the batched engine — later feeds delegate silently (one warning per edge)
+_FUSED_FALLBACK = object()
 
 
 def _split_events(events, n: int):
@@ -340,6 +353,7 @@ def simulate_edge(
     seed: int = 0,
     event_observer: Optional[Callable[[str, Grouper, object], None]] = None,
     tuple_observer: Optional[Callable[..., None]] = None,
+    state_sink: Optional[object] = None,
     values: Optional[np.ndarray] = None,
     state: Optional[EdgeState] = None,
     dt: Optional[float] = None,
@@ -353,8 +367,14 @@ def simulate_edge(
                   arrives at ``i / arrival_rate``).  A topology engine passes
                   the *finish* times of the upstream stage here, which is how
                   a stream propagates through successive grouped edges.
-    mode:         "batched" (segment-wise closed-form FIFO — ISSUE 1) or
-                  "reference" (the per-tuple oracle interpreter).
+    mode:         "batched" (segment-wise closed-form FIFO — ISSUE 1),
+                  "reference" (the per-tuple oracle interpreter), or
+                  "fused" (ISSUE 6: one jitted device launch per segment —
+                  routing + FIFO + keyed-state update fused; device state
+                  carried on ``EdgeState.device`` across feeds.  Falls
+                  back to batched with a :class:`UserWarning` when the
+                  feed is outside the fused envelope — see
+                  ``repro.kernels.feed_fused.fused_reject_reason``).
     capacities:   true seconds/tuple per worker (default: all 1/arrival_rate
                   scaled so ~W tuples are in flight — i.e. balanced feasible).
                   Ignored when ``state`` is carried (its capacities rule).
@@ -377,7 +397,16 @@ def simulate_edge(
                   carries no payload column.  In batched mode it fires once
                   per segment; in reference mode the per-tuple assignments
                   are buffered and flushed before each event and at stream
-                  end.
+                  end.  Fused mode rejects it (keyed state flows through
+                  ``state_sink`` there) and falls back to batched.
+    state_sink:   fused-mode keyed-state consumer — a
+                  :class:`repro.state.window.KeyedStateManager` (or
+                  anything with ``op``/``idx``/``feed_aggregated``).  The
+                  fused engine aggregates (key, worker) pane contributions
+                  on device and syncs them at pane boundaries and events
+                  via ``feed_aggregated`` instead of streaming every
+                  routed chunk through ``tuple_observer``.  Only valid
+                  with ``mode="fused"``.
     values:       optional per-tuple float64 payload column (ISSUE 5
                   record batches) — routed alongside the keys and handed to
                   the tuple observer; it does not affect routing or timing.
@@ -402,8 +431,15 @@ def simulate_edge(
     falls back to the reference interpreter with a :class:`UserWarning`
     (a 10-20x slowdown that should never be silent).
     """
-    if mode not in ("batched", "reference"):
-        raise ValueError(f"unknown mode {mode!r}; 'batched' or 'reference'")
+    if mode not in ("batched", "reference", "fused"):
+        raise ValueError(
+            f"unknown mode {mode!r}; 'batched', 'reference' or 'fused'")
+    if state_sink is not None and mode != "fused":
+        raise ValueError(
+            "state_sink is the fused engine's keyed-state channel; "
+            "batched/reference modes stream state via tuple_observer")
+    if state_sink is not None and tuple_observer is not None:
+        raise ValueError("pass state_sink or tuple_observer, not both")
     if times is not None:
         times = np.asarray(times, dtype=np.float64)
         if times.shape[0] != len(keys):
@@ -421,6 +457,55 @@ def simulate_edge(
             "previous feeds' absolute finish times — pass the stream's "
             "real timestamps")
     events = _resolve_at_time(events, times, arrival_rate)
+    if mode == "fused":
+        keys_arr = np.asarray(keys)
+        int_keys = keys_arr.ndim == 1 and keys_arr.dtype.kind in "iu"
+        obs = state_sink.feed if state_sink is not None else tuple_observer
+        dev = state.device if state is not None else None
+        if dev is _FUSED_FALLBACK:  # this edge already dropped to batched
+            if int_keys:
+                return _edge_batched(
+                    grouper, keys_arr, times, capacities, arrival_rate,
+                    sample_every, sample_noise, events, seed,
+                    event_observer, obs, values, state, dt, compute_metrics)
+            return _edge_reference(
+                grouper, keys, times, capacities, arrival_rate,
+                sample_every, sample_noise, events, seed, event_observer,
+                obs, values, state, compute_metrics)
+        from ..kernels.feed_fused import fused_reject_reason
+
+        if not int_keys:
+            reason = (f"keys dtype={keys_arr.dtype} shape={keys_arr.shape}"
+                      " is not a 1-D integer array")
+        else:
+            reason = fused_reject_reason(grouper, keys_arr, values,
+                                         state_sink, tuple_observer)
+        if reason is None:
+            return _edge_fused(
+                grouper, keys_arr, times, capacities, arrival_rate,
+                sample_every, sample_noise, events, seed, event_observer,
+                state_sink, values, state, dt, compute_metrics)
+        warnings.warn(
+            f"simulate_edge falling back to the batched engine: {reason}",
+            UserWarning, stacklevel=2)
+        if dev is not None:  # mid-session: sync device state out first
+            if state_sink is not None:
+                dev.flush_pane(state_sink)
+            dev.host_sync(grouper)
+        if state is not None:
+            state.device = _FUSED_FALLBACK
+        if int_keys:
+            res = _edge_batched(
+                grouper, keys_arr, times, capacities, arrival_rate,
+                sample_every, sample_noise, events, seed, event_observer,
+                obs, values, state, dt, compute_metrics)
+        else:
+            res = _edge_reference(
+                grouper, keys, times, capacities, arrival_rate,
+                sample_every, sample_noise, events, seed, event_observer,
+                obs, values, state, compute_metrics)
+        res.state.device = _FUSED_FALLBACK
+        return res
     if mode == "batched":
         keys_arr = np.asarray(keys)
         if keys_arr.ndim == 1 and keys_arr.dtype.kind in "iu":
@@ -505,6 +590,107 @@ def _edge_batched(grouper, keys_arr, times, capacities, arrival_rate,
     metrics = (edge_metrics(grouper, busy_until, latencies, n)
                if compute_metrics else None)
     return EdgeResult(metrics, all_times + latencies, latencies, state)
+
+
+def _edge_fused(grouper, keys_arr, times, capacities, arrival_rate,
+                sample_every, sample_noise, events, seed, event_observer,
+                state_sink=None, values=None, state=None, dt=None,
+                compute_metrics=True) -> EdgeResult:
+    """ISSUE 6 fused engine: one jitted device launch per event-free
+    segment.  Cut sites are only events and operator pane boundaries —
+    capacity-sample points are *not* cuts (the sample snapshots are taken
+    from the host-authoritative capacities after the covering segment,
+    preserving the batched engine's exact rng draw sequence), so a
+    steady-state feed with aligned panes is a single dispatch."""
+    from ..kernels.feed_fused import FusedEdgeRunner
+
+    n = keys_arr.shape[0]
+    mem_ev, cap_ev = _split_events(events, n)
+    if state is None:
+        state = _setup(grouper, capacities, arrival_rate, mem_ev, cap_ev,
+                       seed)
+    else:
+        _grow_state(state, mem_ev, cap_ev)
+    capacities = state.capacities
+    rng = state.rng
+    off = state.offset
+
+    runner = state.device
+    if runner is None:
+        runner = FusedEdgeRunner(grouper, state, state_sink)
+        state.device = runner
+
+    if dt is None:
+        dt = 1.0 / arrival_rate
+        if times is not None and n > 1:
+            dt = float((times[-1] - times[0]) / (n - 1)) or dt
+    if times is None:
+        times = np.arange(n, dtype=np.float64) * dt
+    latencies = np.empty(n, dtype=np.float64)
+    finishes = np.empty(n, dtype=np.float64)
+    active = state.active
+
+    # segment cut sites: events + pane boundaries.  The pane grid is
+    # global: tuples already synced to the sink plus the open device pane.
+    cuts = {0, n}
+    cuts.update(e.at for e in mem_ev)
+    cuts.update(e.at for e in cap_ev)
+    stride = 0
+    gbase = 0
+    if state_sink is not None:
+        stride = state_sink.op.stride
+        gbase = state_sink.idx + runner.pane_fed
+        first = (-gbase) % stride or stride
+        cuts.update(range(first, n, stride))
+    bounds = sorted(cuts)
+    ev_idx = 0
+    cap_idx = 0
+
+    runner.begin_feed(grouper, state, keys_arr, values, times, state_sink)
+
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        if stride and (gbase + lo) % stride == 0:
+            runner.flush_pane(state_sink)
+        due = ((ev_idx < len(mem_ev) and mem_ev[ev_idx].at == lo)
+               or (cap_idx < len(cap_ev) and cap_ev[cap_idx].at == lo))
+        if due:
+            # the sink must see every pre-event tuple and the grouper its
+            # replicas before the event handler reshapes the worker set
+            runner.flush_pane(state_sink)
+            runner.host_sync(grouper)
+            mem0 = ev_idx
+            ev_idx, cap_idx, active = _apply_events(
+                lo, mem_ev, ev_idx, cap_ev, cap_idx, grouper, capacities,
+                active, event_observer)
+            state.active = active
+            if ev_idx > mem0:
+                runner.refresh_membership(grouper, state)
+        fin = runner.run_segment(grouper, state, lo, hi)
+        finishes[lo:hi] = fin
+        latencies[lo:hi] = fin - times[lo:hi]
+        if sample_every:
+            # sample points crossed by this segment (global grid); the
+            # capacities/active set are constant inside a segment, so the
+            # snapshot equals the batched engine's — same rng sequence
+            k0 = (off + lo) // sample_every + 1
+            k1 = (off + hi) // sample_every
+            for _k in range(k0, k1 + 1):
+                for wk in sorted(active):
+                    noisy = capacities[wk] * (
+                        1.0 + rng.normal(0.0, sample_noise))
+                    grouper.record_capacity_sample(
+                        wk, float(max(noisy, 1e-12)))
+
+    if stride and (gbase + n) % stride == 0:
+        runner.flush_pane(state_sink)  # feed ends on a pane boundary
+    state.active = active
+    state.offset = off + n
+    metrics = None
+    if compute_metrics:
+        runner.host_sync(grouper)
+        metrics = edge_metrics(grouper, state.busy_until, latencies, n)
+    return EdgeResult(metrics, finishes, latencies, state,
+                      dispatches=runner.dispatches)
 
 
 def _edge_reference(grouper, keys, times, capacities, arrival_rate,

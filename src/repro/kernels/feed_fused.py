@@ -1,0 +1,807 @@
+"""Device-resident fused feed hot path (ISSUE 6 tentpole).
+
+One jitted launch per (edge, segment) chains the three layers the batched
+engine runs as separate host passes:
+
+a. **routing** — all six schemes as ``jax.numpy`` ops over device state:
+   SG is round-robin arithmetic; FG/PKG/DC/WC/FISH look their candidates
+   up in a precomputed consistent-hash ring table (``searchsorted`` over
+   the ring points — the device mirror of ``chash.lookup_n``); PKG runs
+   the exact sequential two-choice ``lax.scan``; DC/WC/FISH classify hot
+   keys against a device-resident dense frequency tracker (the decayed
+   epoch counting of ``kernels/fish_count.py``, here over the per-key
+   table the CHK pass reads) and pick per tuple via a masked-argmin scan
+   (FISH: the Eq. 2 wait-time argmin against the Alg. 3 estimator state);
+b. **FIFO** — the closed-form per-worker recurrence solved on device,
+   either as one ``lax.scan`` (exact, the CPU default) or as
+   ``jax.lax.associative_scan`` over a segmented maximum-accumulate
+   (``fifo_impl="assoc"``, the depth-log parallel form, default on TPU);
+c. **keyed-state update** — per-(key, worker) pane aggregate tables
+   updated by scatter-add inside the same launch; panes sync to the host
+   :class:`~repro.state.window.KeyedStateManager` only at pane boundaries
+   and membership events (``merge_entries`` accumulates, so a pane can be
+   synced mid-way and continue on zeroed device tables exactly).  The
+   standalone probe/accumulate kernel behind the ``"device"`` store
+   backend lives in :mod:`repro.kernels.store_probe`.
+
+A steady-state ``session.feed(batch)`` is therefore **one** device
+dispatch (counted in :attr:`FusedEdgeRunner.dispatches`, surfaced as
+``EdgeResult.dispatches``): per-key state (tracker, CHK memory, replica
+matrix, pane tables) stays device-resident across feeds; only the small
+per-worker vectors (busy, counts, estimator) and the per-tuple finish
+times cross the boundary as part of the launch round-trip.
+
+Shape discipline: segment lengths pad to power-of-two buckets (min
+:data:`MIN_BUCKET`) so varying RecordBatch lengths reuse one trace;
+:data:`TRACE_COUNT` increments per trace for the compile-count
+regression test.  Everything sized per-key is a dense table of
+``key_capacity + 1`` rows (row = key id, last row = phantom absorbing
+the padding lanes), everything per-worker has ``busy_len + 1`` lanes
+(last = phantom worker).  Worker-universe or key-capacity growth and
+ring rebuilds with a different point count change static shapes and
+recompile — rare, documented in DESIGN.md §11.
+
+Semantics vs the reference oracle (DESIGN.md §6): SG/FG/PKG routing,
+counts, replicas and window aggregates are exact (timing carries an f32
+epsilon from the on-device relative clock); DC/WC/FISH read frequencies
+at segment granularity from a dense (unbounded) tracker and FISH ticks
+its estimator at segment starts — bounded drift, same class as the
+batched engine's sub-chunking.
+"""
+
+from __future__ import annotations
+
+from hashlib import sha1 as _sha1
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+__all__ = ["FusedEdgeRunner", "fused_reject_reason", "TRACE_COUNT",
+           "MIN_BUCKET", "KEY_CAP_LIMIT"]
+
+TRACE_COUNT = 0  # bumped at trace time — the compile-count regression probe
+MIN_BUCKET = 64  # smallest pow2 padding bucket for segment lengths
+KEY_CAP_LIMIT = 1 << 21  # dense per-key tables; larger key ids fall back
+
+_SEG_CACHE: dict = {}  # static signature -> jitted segment function
+
+_SCHEMES = ("sg", "fg", "pkg", "dc", "wc", "fish")
+_RING_SCHEMES = ("fg", "pkg", "dc", "wc", "fish")
+_BIG_I32 = np.int32(2 ** 30)
+
+
+def _bucket(n: int) -> int:
+    """Smallest power of two >= n that is >= MIN_BUCKET."""
+    return max(MIN_BUCKET, 1 << (int(n) - 1).bit_length())
+
+
+def _pow2_at_least(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def fused_reject_reason(grouper, keys_arr: np.ndarray,
+                        values: Optional[np.ndarray],
+                        state_sink, tuple_observer) -> Optional[str]:
+    """Why this feed cannot run fused (None = it can).  Checked per feed;
+    any reason makes the edge fall back to the batched engine for good."""
+    scheme = getattr(grouper, "name", None)
+    if scheme not in _SCHEMES:
+        return f"scheme {scheme!r} has no fused routing"
+    if scheme == "fish" and not getattr(grouper, "use_consistent_hash", True):
+        return "fused FISH requires the consistent-hash candidate path"
+    if tuple_observer is not None:
+        return ("fused mode feeds keyed state through state_sink, not "
+                "tuple_observer")
+    if keys_arr.shape[0]:
+        kmin = int(keys_arr.min())
+        kmax = int(keys_arr.max())
+        if kmin < 0:
+            return "fused key tables are dense; negative key ids"
+        if kmax >= KEY_CAP_LIMIT:
+            return (f"fused key tables are dense; key id {kmax} exceeds "
+                    f"capacity limit {KEY_CAP_LIMIT}")
+    if state_sink is not None:
+        from ..state.window import tuple_values
+
+        op = state_sink.op
+        vals = tuple_values(op, keys_arr, payload=values)
+        if vals.shape[0]:
+            lim = (2 ** 31 - 1) // max(op.stride, 1)
+            if int(np.abs(vals).max()) > lim:
+                return ("pane aggregates could overflow int32: "
+                        f"|value| > {lim} at stride {op.stride}")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# ring candidate table — the device mirror of chash.lookup_n
+# ---------------------------------------------------------------------------
+
+
+def _build_ring_table(ring, dmax: int):
+    """(sorted ring points uint32, (R, dmax) int32 first-d-distinct-owners).
+
+    ``searchsorted(points, h, side='right') % R`` lands on the same ring
+    position as ``bisect_right`` + wrap in ``chash.lookup``; row r holds
+    the first ``dmax`` distinct owners walking clockwise from position r —
+    exactly ``lookup_n``'s prefix for every d <= dmax.  Rebuilt host-side
+    only on membership change (the ring only changes there); rows are
+    padded with -1 past the number of distinct live owners.
+    """
+    pts_l = ring._points
+    r_n = len(pts_l)
+    pts = np.asarray(pts_l, dtype=np.uint32)
+    owners = [ring._owner[p] for p in pts_l]
+    d_eff = min(dmax, len(set(owners)))
+    cands = np.full((r_n, dmax), -1, dtype=np.int32)
+    for r in range(r_n):
+        seen = set()
+        out = []
+        i = r
+        while len(out) < d_eff:
+            o = owners[i]
+            if o not in seen:
+                seen.add(o)
+                out.append(o)
+            i += 1
+            if i == r_n:
+                i = 0
+        cands[r, :d_eff] = out
+    return pts, cands
+
+
+# ---------------------------------------------------------------------------
+# traced segment bodies
+# ---------------------------------------------------------------------------
+
+
+def _fifo_scan(busy, caps, workers, t):
+    """Exact sequential FIFO: f_i = max(busy[w_i], t_i) + caps[w_i]."""
+
+    def step(b, x):
+        w, tt = x
+        f = jnp.maximum(b[w], tt) + caps[w]
+        return b.at[w].set(f), f
+
+    return jax.lax.scan(step, busy, (workers, t))
+
+
+def _fifo_assoc(busy, caps, workers, t):
+    """Closed-form FIFO via ``associative_scan`` (ISSUE 6 tentpole, part b).
+
+    Sort by worker (stable), then within a worker's run of rank j the
+    recurrence unrolls to ``f_j = (j+1)P + max(b0, cummax_j(t_k - kP))``;
+    the inner cummax is a segmented maximum-accumulate keyed on the worker
+    id, evaluated in O(log n) depth.  Equal to :func:`_fifo_scan` up to
+    f32 rounding."""
+    n = workers.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    order = jnp.argsort(workers)  # stable in jnp
+    ws = workers[order]
+    ts = t[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), ws[1:] != ws[:-1]])
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(first, iota, 0))
+    j = (iota - seg_start).astype(jnp.float32)
+    capw = caps[ws]
+    g = ts - j * capw
+
+    def comb(a, b):
+        aw, ag = a
+        bw, bg = b
+        return bw, jnp.where(aw == bw, jnp.maximum(ag, bg), bg)
+
+    _, m = jax.lax.associative_scan(comb, (ws, g))
+    f = (j + 1.0) * capw + jnp.maximum(busy[ws], m)
+    fin = jnp.zeros_like(f).at[order].set(f)
+    return busy.at[ws].max(f), fin
+
+
+def _ring_rows(a, width=None):
+    """(n_pad, width or dmax) candidate rows for this segment's hashed
+    keys.
+
+    Key→candidates is fixed between membership changes, so when the key
+    table is smaller than the segment the ring walk runs once per *key*
+    (over the dense hash cache) and tuples gather their row — ~4× fewer
+    binary-search probes at 16k-tuple segments.  Phantom-row gathers
+    clamp (JAX OOB semantics) and are masked off by ``valid``.  Schemes
+    with a fixed fanout (fg: 1, pkg: 2) pass ``width`` so the per-tuple
+    gather moves ``width`` candidates instead of the full dmax row."""
+    r_n = a["pts"].shape[0]
+    cands = a["cands"] if width is None else a["cands"][:, :width]
+    if "hash_arr" in a:
+        idx = jnp.searchsorted(a["pts"], a["hash_arr"], side="right") % r_n
+        return cands[idx][a["keys"]]
+    idx = jnp.searchsorted(a["pts"], a["h"], side="right") % r_n
+    return cands[idx]
+
+
+def _route_pkg(a, row):
+    """Exact sequential two-choice with cumulative counts (tie -> first)."""
+    c0 = row[:, 0]
+    c1 = jnp.where(row[:, 1] >= 0, row[:, 1], row[:, 0])
+
+    def step(counts, x):
+        a0, a1, v = x
+        w = jnp.where(counts[a0] <= counts[a1], a0, a1)
+        w = jnp.where(v, w, a["phantom_w"])
+        return counts.at[w].add(v.astype(jnp.int32)), w
+
+    return jax.lax.scan(step, a["counts"], (c0, c1, a["valid"]))
+
+
+def _tracker_update(a, scheme):
+    """Dense per-key frequency tracker update (whole segment at once,
+    mirroring the batched engine's update-then-classify sub-chunk order).
+    Returns (trk, f per tuple, f_top)."""
+    one = jnp.where(a["valid"], 1.0, 0.0)
+    if scheme == "fish":
+        # decay-weighted contributions: a tuple decays once per epoch
+        # boundary after it inside the segment, none before it.  cexp_t
+        # counts the boundaries at or before tuple t (the boundary decay
+        # fires before the tuple is counted); pre_decay covers a segment
+        # starting exactly on a boundary.
+        cexp = ((a["g0"] + jnp.arange(a["valid"].shape[0], dtype=jnp.int32))
+                // a["epoch"]) - (a["g0"] // a["epoch"]) + a["pre_decay"]
+        wgt = one * jnp.power(a["alpha"],
+                              a["c_total"] - cexp.astype(jnp.float32))
+        trk = a["trk"] * jnp.power(a["alpha"], a["c_total"])
+        trk = trk.at[a["keys"]].add(wgt)
+    else:  # dc/wc: no decay (reference tracker runs alpha=1, epoch=2^62)
+        trk = a["trk"].at[a["keys"]].add(one)
+    total = jnp.sum(trk)
+    f = jnp.where(total > 0.0, trk[a["keys"]] / total, 0.0)
+    f_top = jnp.where(total > 0.0, jnp.max(trk) / total, 0.0)
+    return trk, f, f_top
+
+
+def _route_dcwc(a, row, scheme):
+    """DC/WC: hot keys spread over d ring candidates (DC) or the whole
+    live set (WC); light keys are the exact PKG two-choice.  One masked-
+    argmin ``lax.scan`` over cumulative counts mirrors the sequential
+    least-loaded selection (argmin tie -> first candidate in ring order,
+    matching ``min(cl, key=counts.__getitem__)``; WC's full-set argmin
+    tie -> smallest worker id, matching the (count, id) heap)."""
+    trk, f, _ = _tracker_update(a, scheme)
+    hot = f > a["theta"]
+    wnum = a["wnum"]  # live worker-universe size (traced; can grow mid-run)
+    d_heavy = jnp.clip(jnp.ceil(f * wnum / jnp.sqrt(a["theta"])),
+                       2.0, wnum).astype(jnp.int32)
+    d = jnp.where(hot, d_heavy, 2)
+    dmax = row.shape[1]
+    iota_d = jnp.arange(dmax, dtype=jnp.int32)
+
+    def step(counts, x):
+        r, dd, h, v = x
+        waits = jnp.where((iota_d < dd) & (r >= 0), counts[r], _BIG_I32)
+        w = r[jnp.argmin(waits)]
+        if scheme == "wc":
+            full = jnp.where(a["act_mask"], counts, _BIG_I32)
+            w = jnp.where(h, jnp.argmin(full).astype(w.dtype), w)
+        w = jnp.where(v, w, a["phantom_w"])
+        return counts.at[w].add(v.astype(jnp.int32)), w
+
+    counts, workers = jax.lax.scan(
+        step, a["counts"], (row, d, hot, a["valid"]))
+    return counts, workers, trk
+
+
+def _route_fish(a, row):
+    """FISH: Alg. 1 (dense decayed tracker) + Alg. 2 (CHK with monotone
+    memory M_k) + Alg. 3 (per-tuple Eq. 2 wait-time argmin against the
+    estimator state) — the per-tuple oracle's selection with frequencies
+    read at segment granularity."""
+    trk, f, f_top = _tracker_update(a, "fish")
+    hot = (f > a["theta"]) & (f > 0.0) & (f_top > 0.0)
+    ratio = jnp.maximum(f_top / jnp.maximum(f, 1e-30), 1.0)
+    index = jnp.clip(jnp.floor(jnp.log2(ratio)), 0.0, 30.0)
+    wnum = a["wnum"]
+    d0 = jnp.clip(jnp.floor(wnum / jnp.exp2(index)),
+                  a["d_min"].astype(jnp.float32), wnum).astype(jnp.int32)
+    m_prev = a["m_k"][a["keys"]]
+    d = jnp.where(hot, jnp.maximum(d0, m_prev), 2)
+    m_k = a["m_k"].at[a["keys"]].max(
+        jnp.where(hot & a["valid"], jnp.maximum(m_prev, d0), 0))
+
+    # estimator tick (Alg. 3 Eq. 1), applied once at segment start when due
+    backlog, assigned = a["ebl"], a["eas"]
+    work = (backlog + assigned) * a["ecaps"]
+    ticked = jnp.where(work > a["elapsed"],
+                       (work - a["elapsed"]) / a["ecaps"], 0.0)
+    backlog = jnp.where(a["do_tick"] > 0, ticked, backlog)
+    assigned = jnp.where(a["do_tick"] > 0, 0.0, assigned)
+
+    dmax = row.shape[1]
+    iota_d = jnp.arange(dmax, dtype=jnp.int32)
+    # the scan reads only `asn`; counts never feed the argmin, so they
+    # accumulate in one dense pass after the loop instead of a scatter
+    # per step.
+    def step(asn, x):
+        r, dd, v = x
+        waits = jnp.where((iota_d < dd) & (r >= 0),
+                          (backlog[r] + asn[r]) * a["ecaps"][r], jnp.inf)
+        w = r[jnp.argmin(waits)]
+        w = jnp.where(v, w, a["phantom_w"])
+        return asn.at[w].add(jnp.where(v, 1.0, 0.0)), w
+
+    assigned, workers = jax.lax.scan(
+        step, assigned, (row, d, a["valid"]))
+    lanes = jnp.arange(a["counts"].shape[0], dtype=workers.dtype)
+    counts = a["counts"] + jnp.sum(
+        (workers[None, :] == lanes[:, None]) & a["valid"][None, :],
+        axis=1).astype(jnp.int32)
+    return counts, workers, trk, m_k, backlog, assigned
+
+
+def _get_seg_fn(sig):
+    """Build (or fetch) the jitted segment function for one static shape
+    signature — (scheme, padded length, worker lanes, key rows, ring
+    points, candidate width, pane?, fresh pane?, fifo impl) is the
+    recompile boundary."""
+    fn = _SEG_CACHE.get(sig)
+    if fn is not None:
+        return fn
+    scheme, n_pad, w1, kcap1, r_n, dmax, has_pane, reset, fifo_impl = sig
+    phantom_w = w1 - 1
+    fifo = _fifo_scan if fifo_impl == "scan" else _fifo_assoc
+
+    def seg(dev, a):
+        # `dev` holds the per-key device tables (replica matrix, tracker,
+        # pane planes) — donated, so XLA updates them in place instead of
+        # copying the ~MB accumulators every launch
+        global TRACE_COUNT
+        TRACE_COUNT += 1  # runs at trace time only
+        a = dict(a)
+        a.update(dev)
+        a["phantom_w"] = jnp.int32(phantom_w)
+        # padding is always the array tail, so validity is derived from
+        # the live count instead of shipping a bool lane per tuple
+        a["valid"] = jnp.arange(n_pad, dtype=jnp.int32) < a["m"]
+        out = {}
+        trk = None
+        def _count(workers):
+            # dense broadcast-sum: ~3x cheaper than a 1-lane scatter on
+            # the CPU backend at these worker counts
+            lanes = jnp.arange(w1, dtype=jnp.int32)
+            seg = ((workers[None, :] == lanes[:, None])
+                   & a["valid"][None, :]).sum(axis=1, dtype=jnp.int32)
+            return a["counts"] + seg
+
+        if scheme == "sg":
+            iota = jnp.arange(n_pad, dtype=jnp.int32)
+            workers = a["act"][(a["rr"] + iota) % a["a_live"]]
+            workers = jnp.where(a["valid"], workers, phantom_w)
+            counts = _count(workers)
+        else:
+            row = _ring_rows(a, {"fg": 1, "pkg": 2}.get(scheme))
+            if scheme == "fg":
+                workers = jnp.where(a["valid"], row[:, 0], phantom_w)
+                counts = _count(workers)
+            elif scheme == "pkg":
+                counts, workers = _route_pkg(a, row)
+            elif scheme in ("dc", "wc"):
+                counts, workers, trk = _route_dcwc(a, row, scheme)
+            else:  # fish
+                (counts, workers, trk, m_k, backlog,
+                 assigned) = _route_fish(a, row)
+                out["m_k"] = m_k
+                out["ebl"] = backlog
+                out["eas"] = assigned
+        if trk is not None:
+            out["trk"] = trk
+
+        busy, fin = fifo(a["busy"], a["caps"], workers, a["t"])
+        out["fin"] = fin
+        out["busy"] = busy
+        out["counts"] = counts
+        if has_pane:
+            # one stacked scatter updates value and count planes together,
+            # through a flat row index (1-D indexed scatters lower to a
+            # cheaper XLA scatter than 2-D ones on CPU); its count plane
+            # then gives the replica update as a dense OR — both measurably
+            # cheaper than separate 2-D scatters
+            vc = jnp.stack([jnp.where(a["valid"], a["vals"], 0),
+                            a["valid"].astype(jnp.int32)], axis=-1)
+            # worker-major flat index: the host flush's flatnonzero then
+            # yields entries already grouped per worker with keys
+            # ascending, so it needs no sort at all
+            flat = workers * kcap1 + a["keys"]
+            # `reset` marks the first segment of a pane: the tables start
+            # from in-jit zeros (a fused memset) instead of round-tripping
+            # an eagerly allocated zero buffer through the launch
+            base = (jnp.zeros((w1 * kcap1, 2), jnp.int32) if reset
+                    else a["pane_tab"].reshape(w1 * kcap1, 2))
+            # indices are in-bounds by construction (the phantom worker
+            # lane and phantom key row absorb padding), so skipping the
+            # per-element bounds check measurably speeds the CPU scatter
+            pane = base.at[flat].add(
+                vc, mode="promise_in_bounds").reshape(w1, kcap1, 2)
+            out["pane_tab"] = pane
+            # contiguous count-plane copy: the host flush scans this with
+            # one flatnonzero instead of a strided nonzero over the table
+            out["pane_cnt"] = pane[:, :, 1]
+            out["repl"] = a["repl"] | (pane[:, :, 1] > 0).T
+            gidx = a["seg_base"] + jnp.arange(n_pad, dtype=jnp.int32)
+            gidx = jnp.where(a["valid"], gidx, -1)
+            lanes = jnp.arange(w1, dtype=jnp.int32)
+            seg_last = jnp.max(
+                jnp.where(workers[None, :] == lanes[:, None],
+                          gidx[None, :], -1), axis=1)
+            out["pane_last"] = (seg_last if reset else
+                                jnp.maximum(a["pane_last"], seg_last))
+        else:
+            out["repl"] = a["repl"].at[a["keys"], workers].set(True)
+        return out
+
+    fn = _SEG_CACHE[sig] = jax.jit(seg, donate_argnums=0)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# the per-edge runner (device state residency across feeds)
+# ---------------------------------------------------------------------------
+
+
+class FusedEdgeRunner:
+    """Device-resident execution state of one fused edge.
+
+    Lives on ``EdgeState.device`` across feeds.  Per-key state —
+    frequency tracker, CHK memory, replica matrix, open pane tables —
+    stays on device between launches; per-worker vectors (busy, counts,
+    estimator) round-trip with each launch as arguments/outputs, keeping
+    the host copies authoritative so event handling and metrics never
+    need a separate sync.  ``host_sync`` folds the replica matrix back
+    into the grouper — called before metrics/close and membership events.
+    """
+
+    def __init__(self, grouper, state, sink):
+        self.scheme = grouper.name
+        self.has_pane = sink is not None
+        self.fifo_impl = ("assoc" if jax.default_backend() == "tpu"
+                          else "scan")
+        self.dispatches = 0       # launches this feed (EdgeResult counter)
+        self.pane_fed = 0         # tuples in the device pane, unsynced
+        self._kcap = 0
+        self._w1 = 0
+        self._dmax = 1 if self.scheme == "fg" else (
+            2 if self.scheme == "pkg" else 0)  # 0 = worker-universe width
+        self._pts = None          # ring points (np uint32)
+        self._cands = None        # ring candidate rows (np int32)
+        self._pts_dev = None
+        self._cands_dev = None
+        self._hash_arr = None     # dense key -> hash32 cache (np uint32)
+        self._hash_ok = None
+        self._repl_dirty = False
+        # device-resident per-key state
+        self.trk = None
+        self.m_k = None
+        self.repl = None
+        self.pane_tab = None      # (w1, kcap1, 2): value / count planes
+        self.pane_cnt = None      # contiguous count plane for the flush scan
+        self.pane_last = None
+        self._repl_synced = None  # host mirror of already-synced pairs
+
+    # -- shape management (the recompile boundary; rare) --------------------
+    def _ensure_shapes(self, grouper, state, kmax: int) -> None:
+        w1 = state.busy_until.shape[0] + 1
+        new_kcap = self._kcap
+        if kmax >= new_kcap:
+            new_kcap = _pow2_at_least(max(kmax + 1, MIN_BUCKET))
+        if w1 == self._w1 and new_kcap == self._kcap:
+            return
+        old_k, old_w = self._kcap, self._w1
+        kcap1 = new_kcap + 1
+        self._hash_arr = _grow1(self._hash_arr, old_k, new_kcap, np.uint32)
+        self._hash_ok = _grow1(self._hash_ok, old_k, new_kcap, np.bool_)
+        if self.scheme in _RING_SCHEMES and new_kcap <= (1 << 14):
+            # prefill the whole ring-hash cache at the (rare) resize so
+            # steady-state feeds never touch SHA-1; for sparse key spaces
+            # past 16k ids stay lazy per feed
+            self._fill_hashes(np.flatnonzero(~self._hash_ok))
+        # the old phantom key row (index old_k) is dropped by the [:old_k]
+        # copy — it only ever holds the padding lanes' sink entries
+        self.trk = _grow_dev1(self.trk, old_k, kcap1, jnp.float32)
+        self.m_k = _grow_dev1(self.m_k, old_k, kcap1, jnp.int32)
+        self.repl = _grow_dev2(self.repl, old_k, old_w, kcap1, w1, jnp.bool_)
+        self._repl_synced = _grow_host2(self._repl_synced, old_k, old_w,
+                                        kcap1, w1)
+        if self.has_pane and self.pane_tab is not None:
+            # an empty (flushed) pane stays None — the next launch's
+            # `reset` variant rebuilds it at the new shape from zeros
+            self.pane_tab = _grow_dev3(self.pane_tab, old_k, old_w,
+                                       kcap1, w1)
+            self.pane_cnt = _grow_dev2(self.pane_cnt, old_w, old_k,
+                                       w1, kcap1, jnp.int32)
+            self.pane_last = _grow_last(self.pane_last, old_w, w1)
+        grew_w = w1 != self._w1
+        self._kcap = new_kcap
+        self._w1 = w1
+        if grew_w:
+            self.refresh_membership(grouper, state)
+
+    def refresh_membership(self, grouper, state) -> None:
+        """Rebuild the device ring table + live-set arrays after a
+        membership change (or worker-universe growth)."""
+        if self.scheme in _RING_SCHEMES:
+            dmax = self._dmax or max(state.busy_until.shape[0], 2)
+            self._pts, self._cands = _build_ring_table(grouper.ring, dmax)
+            self._pts_dev = jnp.asarray(self._pts)
+            self._cands_dev = jnp.asarray(self._cands)
+        act = np.asarray(sorted(state.active), dtype=np.int32)
+        self._act = act
+        self._act_pad = np.full(self._w1, self._w1 - 1, np.int32)
+        self._act_pad[:act.shape[0]] = act
+        self._act_mask = np.zeros(self._w1, bool)
+        self._act_mask[act] = True
+
+    # -- per-feed lifecycle -------------------------------------------------
+    def begin_feed(self, grouper, state, keys_arr, values, times,
+                   sink) -> None:
+        self.dispatches = 0
+        self._base = float(times[0]) if times.shape[0] else 0.0
+        kmax = int(keys_arr.max()) if keys_arr.shape[0] else 0
+        self._ensure_shapes(grouper, state, kmax)
+        self._feed_keys = keys_arr.astype(np.int32)
+        self._feed_times = times
+        if self.scheme in _RING_SCHEMES:
+            self._feed_hash = self._hashes(keys_arr)
+        if self.has_pane:
+            from ..state.window import tuple_values
+
+            self._feed_vals = tuple_values(
+                sink.op, keys_arr, payload=values).astype(np.int32)
+
+    def _fill_hashes(self, miss: np.ndarray) -> None:
+        if miss.shape[0]:
+            # inlined hash32 for plain int keys (same SHA-1 bucket as
+            # chash.hash32): skips the per-key canonicalise/dispatch
+            sha1, fb = _sha1, int.from_bytes
+            self._hash_arr[miss] = np.fromiter(
+                (fb(sha1(repr(k).encode("utf-8")).digest()[:4], "big")
+                 for k in miss.tolist()),
+                dtype=np.uint32, count=miss.shape[0])
+            self._hash_ok[miss] = True
+
+    def _hashes(self, keys_arr: np.ndarray) -> np.ndarray:
+        ok = self._hash_ok[keys_arr]
+        if not ok.all():
+            self._fill_hashes(np.unique(keys_arr[~ok]))
+        return self._hash_arr[keys_arr]
+
+    def run_segment(self, grouper, state, lo: int, hi: int) -> np.ndarray:
+        """One fused launch for tuples [lo, hi) of the current feed.
+        Returns their absolute finish times (float64, host)."""
+        m = hi - lo
+        n_pad = _bucket(m)
+        w1 = self._w1
+        kcap1 = self._kcap + 1
+        scheme = self.scheme
+
+        keys_i = np.full(n_pad, self._kcap, np.int32)  # pad -> phantom row
+        keys_i[:m] = self._feed_keys[lo:hi]
+        t = np.zeros(n_pad, np.float32)
+        t[:m] = self._feed_times[lo:hi] - self._base
+
+        busy = np.zeros(w1, np.float32)
+        busy[:w1 - 1] = state.busy_until - self._base
+        caps = np.ones(w1, np.float32)
+        caps[:w1 - 1] = state.capacities
+        counts = np.zeros(w1, np.int32)
+        cn = grouper.assigned_counts.shape[0]
+        counts[:cn] = grouper.assigned_counts
+
+        # host-side inputs go in as plain numpy — jit transfers them at
+        # dispatch for a fraction of the cost of an eager jnp conversion
+        # per array (the dominant host overhead at 16k-tuple feeds).
+        # Per-key tables ride in `dev`, the donated arg: each is replaced
+        # by its updated output, never read again through the old handle.
+        dev = {"repl": self.repl}
+        a = {"keys": keys_i, "m": np.int32(m), "t": t, "busy": busy,
+             "caps": caps, "counts": counts}
+        r_n = 0
+        dmax = 0
+        if scheme == "sg":
+            a["act"] = self._act_pad
+            a["a_live"] = np.int32(self._act.shape[0])
+            a["rr"] = np.int32(grouper._rr)
+        else:
+            a["pts"] = self._pts_dev
+            a["cands"] = self._cands_dev
+            r_n = self._pts.shape[0]
+            dmax = self._cands.shape[1]
+            if kcap1 <= n_pad:  # static per sig: route keys, gather tuples
+                a["hash_arr"] = self._hash_arr
+            else:
+                h = np.zeros(n_pad, np.uint32)
+                h[:m] = self._feed_hash[lo:hi]
+                a["h"] = h
+        if scheme in ("dc", "wc", "fish"):
+            dev["trk"] = self.trk
+            a["theta"] = np.float32(self._theta(grouper))
+            a["wnum"] = np.float32(grouper.num_workers)
+            if scheme == "wc":
+                a["act_mask"] = self._act_mask
+        if scheme == "fish":
+            fa = self._fish_args(grouper, lo, hi, state.offset)
+            dev["m_k"] = fa.pop("m_k")
+            a.update(fa)
+        reset = False
+        if self.has_pane:
+            vals = np.zeros(n_pad, np.int32)
+            vals[:m] = self._feed_vals[lo:hi]
+            a["vals"] = vals
+            reset = self.pane_tab is None  # first segment of a fresh pane
+            if not reset:
+                dev["pane_tab"] = self.pane_tab
+                dev["pane_last"] = self.pane_last
+            a["seg_base"] = np.int32(state.offset + lo)
+
+        sig = (scheme, n_pad, w1, kcap1, r_n, dmax, self.has_pane, reset,
+               self.fifo_impl)
+        out = _get_seg_fn(sig)(dev, a)
+        self.dispatches += 1
+
+        # device-resident state stays device-side
+        self.repl = out["repl"]
+        if "trk" in out:
+            self.trk = out["trk"]
+        if "m_k" in out:
+            self.m_k = out["m_k"]
+        if self.has_pane:
+            self.pane_tab = out["pane_tab"]
+            self.pane_cnt = out["pane_cnt"]
+            self.pane_last = out["pane_last"]
+            self.pane_fed += m
+        self._repl_dirty = True
+
+        # small per-worker vectors ride back with the launch's output fetch
+        state.busy_until[:] = self._base + np.asarray(
+            out["busy"], dtype=np.float64)[:w1 - 1]
+        grouper.assigned_counts[:] = np.asarray(
+            out["counts"], dtype=np.int64)[:cn]
+        if scheme == "sg":
+            grouper._rr = int((grouper._rr + m) % self._act.shape[0])
+        elif scheme == "fish":
+            est = grouper.estimator
+            nw = est.backlog.shape[0]
+            est.backlog[:] = np.asarray(out["ebl"], dtype=np.float64)[:nw]
+            est.assigned[:] = np.asarray(out["eas"], dtype=np.float64)[:nw]
+        return self._base + np.asarray(out["fin"], dtype=np.float64)[:m]
+
+    def _theta(self, grouper) -> float:
+        if self.scheme == "fish":
+            return grouper.params.theta(grouper.num_workers)
+        return grouper.theta  # dc/wc property (theta_frac / num_workers)
+
+    def _fish_args(self, grouper, lo: int, hi: int, offset: int) -> dict:
+        p = grouper.params
+        est = grouper.estimator
+        g0 = offset + lo
+        g1 = offset + hi
+        # epoch-boundary decay fires *before* the boundary tuple is
+        # counted, so a segment starting exactly on a boundary decays once
+        # up front
+        pre = 1 if (g0 > 0 and g0 % p.epoch == 0) else 0
+        c_total = (g1 - 1) // p.epoch - g0 // p.epoch + pre
+        now0 = float(self._feed_times[lo])
+        do_tick = 0
+        elapsed = 0.0
+        if now0 - est._t_prior > est.interval:
+            do_tick = 1
+            elapsed = now0 - est._t_prior
+            est._t_prior = now0
+        w1 = self._w1
+        ebl = np.zeros(w1, np.float32)
+        eas = np.zeros(w1, np.float32)
+        ecaps = np.ones(w1, np.float32)
+        nw = est.backlog.shape[0]
+        ebl[:nw] = est.backlog
+        eas[:nw] = est.assigned
+        ecaps[:nw] = est.capacities
+        return {"m_k": self.m_k, "alpha": np.float32(p.alpha),
+                "epoch": np.int32(p.epoch), "g0": np.int32(g0),
+                "pre_decay": np.int32(pre),
+                "c_total": np.float32(c_total),
+                "d_min": np.int32(p.d_min),
+                "ebl": ebl, "eas": eas, "ecaps": ecaps,
+                "do_tick": np.int32(do_tick),
+                "elapsed": np.float32(elapsed)}
+
+    # -- host sync points ---------------------------------------------------
+    def flush_pane(self, sink) -> None:
+        """Sync the open device pane into the host KeyedStateManager and
+        drop the device tables (``merge_entries`` accumulates, so the pane
+        can keep filling on device afterwards)."""
+        if not self.has_pane or self.pane_fed == 0:
+            return
+        cnt = np.asarray(self.pane_cnt)
+        tab = np.asarray(self.pane_tab).reshape(-1, 2)
+        last = np.asarray(self.pane_last)
+        # phantom row/lane never accumulate (padding lanes scatter zeros),
+        # so one flatnonzero over the contiguous count plane finds every
+        # live entry — already per-worker grouped with keys ascending,
+        # because the device table is worker-major
+        flat = np.flatnonzero(cnt)
+        entries = []
+        if flat.shape[0]:
+            ws, ks0 = np.divmod(flat, cnt.shape[1])
+            ks = ks0.astype(np.int64)
+            vs = tab[flat, 0].astype(np.int64)
+            cs = tab[flat, 1].astype(np.int64)
+            starts = np.concatenate(
+                [[0], np.flatnonzero(ws[1:] != ws[:-1]) + 1, [ws.shape[0]]])
+            for s, e in zip(starts[:-1].tolist(), starts[1:].tolist()):
+                w = int(ws[s])
+                entries.append((w, ks[s:e], vs[s:e], cs[s:e], int(last[w])))
+        sink.feed_aggregated(self.pane_fed, entries)
+        # None marks the pane empty — the next segment's launch starts
+        # from in-jit zeros (its `reset` variant), so no buffer is
+        # allocated or transferred here
+        self.pane_tab = None
+        self.pane_cnt = None
+        self.pane_last = None
+        self.pane_fed = 0
+
+    def host_sync(self, grouper) -> None:
+        """Fold device-resident per-key state back into the grouper: new
+        (key, worker) replica pairs since the last sync.  Called before
+        metrics/close and before membership events."""
+        if not self._repl_dirty:
+            return
+        dev = np.asarray(self.repl)
+        new = dev[:-1, :-1] & ~self._repl_synced[:-1, :-1]
+        for k, w in zip(*np.nonzero(new)):
+            grouper.replicas.setdefault(int(k), set()).add(int(w))
+        # asarray of a CPU device buffer is a view, and self.repl is
+        # donated to the next launch — copy before the buffer is reused
+        self._repl_synced = dev.copy()
+        self._repl_dirty = False
+
+
+# -- growth helpers (rare: each growth is a recompile boundary) -------------
+
+
+def _grow1(arr, old, new, dtype):
+    out = np.zeros(new, dtype)
+    if arr is not None:
+        out[:old] = arr[:old]
+    return out
+
+
+def _grow_dev1(arr, old, new1, dtype):
+    out = jnp.zeros((new1,), dtype)
+    return out if arr is None else out.at[:old].set(arr[:old])
+
+
+def _grow_dev2(arr, old_k, old_w, kcap1, w1, dtype):
+    out = jnp.zeros((kcap1, w1), dtype)
+    if arr is None:
+        return out
+    # the old phantom column (old_w - 1) may only hold phantom-row entries,
+    # which the [:old_k] row slice already drops — safe to copy columns
+    return out.at[:old_k, :old_w].set(arr[:old_k, :old_w])
+
+
+def _grow_dev3(arr, old_k, old_w, kcap1, w1):
+    # pane tables are worker-major: (w1, kcap1, 2)
+    out = jnp.zeros((w1, kcap1, 2), jnp.int32)
+    if arr is None:
+        return out
+    return out.at[:old_w, :old_k, :].set(arr[:old_w, :old_k, :])
+
+
+def _grow_host2(arr, old_k, old_w, kcap1, w1):
+    out = np.zeros((kcap1, w1), bool)
+    if arr is not None:
+        out[:old_k, :old_w] = arr[:old_k, :old_w]
+    return out
+
+
+def _grow_last(arr, old_w, w1):
+    out = jnp.full((w1,), -1, jnp.int32)
+    return out if arr is None else out.at[:old_w].set(arr[:old_w])

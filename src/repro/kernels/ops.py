@@ -14,9 +14,10 @@ import jax.numpy as jnp
 
 from . import fish_count as _fish_count
 from . import ssd as _ssd
+from . import store_probe as _store_probe
 from . import ref as ref  # re-exported for tests/benchmarks
 
-__all__ = ["fish_count", "fish_epoch_count", "ssd_scan", "ref"]
+__all__ = ["fish_count", "fish_epoch_count", "ssd_scan", "store_probe", "ref"]
 
 
 def _interpret() -> bool:
@@ -52,6 +53,50 @@ def fish_epoch_count(table_keys: jnp.ndarray, table_counts: jnp.ndarray,
         interpret=_interpret(),
     )
     return counts[:k], matched, cand, first
+
+
+def store_probe(table_keys: jnp.ndarray, batch_keys: jnp.ndarray,
+                batch_vals: jnp.ndarray, *, block_n: int = 1024,
+                impl: str = None):
+    """Keyed-state probe/accumulate (ISSUE 6): per-slot int32 (vsum, csum)
+    of one routed chunk against a resident slot table, plus per-token hit
+    flags.  Pads the table to lane width (128; empty slots key=-1).
+
+    impl: "pallas" | "sorted" | None.  None = pallas on TPU (or with
+    REPRO_FORCE_PALLAS=1), else a ``jnp.searchsorted`` fallback that needs
+    ``table_keys`` sorted ascending (which :class:`repro.state.store.
+    DeviceStateStore` maintains) — identical results, O(N log K) on CPU
+    instead of the O(N·K) compare matrix.
+    """
+    import os
+
+    if impl is None:
+        if jax.default_backend() == "tpu" or os.environ.get("REPRO_FORCE_PALLAS"):
+            impl = "pallas"
+        else:
+            impl = "sorted"
+    if impl == "pallas":
+        k = table_keys.shape[0]
+        k_pad = -k % 128
+        padded = jnp.pad(table_keys, (0, k_pad), constant_values=-1)
+        vsum, csum, matched = _store_probe.store_probe(
+            padded, batch_keys, batch_vals, block_n=block_n,
+            interpret=_interpret())
+        return vsum[:k], csum[:k], matched
+    return _store_probe_sorted(table_keys, batch_keys, batch_vals)
+
+
+@jax.jit
+def _store_probe_sorted(table_keys, batch_keys, batch_vals):
+    k = table_keys.shape[0]
+    slot = jnp.searchsorted(table_keys, batch_keys)
+    slot_c = jnp.clip(slot, 0, max(k - 1, 0))
+    matched = (table_keys[slot_c] == batch_keys) if k else jnp.zeros(
+        batch_keys.shape, bool)
+    tgt = jnp.where(matched, slot_c, k)  # misses land in a scratch slot
+    vsum = jnp.zeros(k + 1, jnp.int32).at[tgt].add(batch_vals)
+    csum = jnp.zeros(k + 1, jnp.int32).at[tgt].add(1)
+    return vsum[:k], csum[:k], matched
 
 
 def ssd_scan(x, a, b, c, *, chunk: int = 128, initial_state=None,

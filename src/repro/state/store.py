@@ -36,6 +36,7 @@ __all__ = [
     "ENTRY_BYTES",
     "DictStateStore",
     "ArrayStateStore",
+    "DeviceStateStore",
     "STORE_BACKENDS",
     "make_store",
 ]
@@ -75,7 +76,7 @@ class DictStateStore:
                 e[1] += 1
 
     def merge_entries(self, keys: np.ndarray, values: np.ndarray,
-                      counts: np.ndarray) -> None:
+                      counts: np.ndarray, own: bool = False) -> None:
         d = self._d
         for k, v, c in zip(keys.tolist(), values.tolist(), counts.tolist()):
             e = d.get(k)
@@ -125,6 +126,10 @@ class ArrayStateStore:
         self._c = np.zeros(cap, dtype=np.int64)
         self._n = 0      # live entries
         self._used = 0   # live entries + tombstones
+        # sorted-unique single-merge fast path (fused pane flush): the
+        # first merge into an empty table parks here and only builds the
+        # hash table if the store is ever touched again
+        self._lazy = None
 
     # -- hashing / probing ---------------------------------------------------------
     def _home(self, keys: np.ndarray) -> np.ndarray:
@@ -194,28 +199,48 @@ class ArrayStateStore:
         return slot
 
     def _maybe_grow(self, incoming: int) -> None:
-        while (self._used + incoming) * 10 >= self._k.shape[0] * 6:
-            ks, vs, cs = self.items()
-            cap = self._k.shape[0] * 2
-            self._k = np.full(cap, _EMPTY, dtype=np.int64)
-            self._v = np.zeros(cap, dtype=np.int64)
-            self._c = np.zeros(cap, dtype=np.int64)
-            self._n = 0
-            self._used = 0
-            if ks.shape[0]:
-                slots = self._insert_new(ks)
-                self._v[slots] = vs
-                self._c[slots] = cs
+        cap = self._k.shape[0]
+        if (self._used + incoming) * 10 < cap * 6:
+            return
+        while (self._used + incoming) * 10 >= cap * 6:
+            cap *= 2
+        ks, vs, cs = self.items()
+        self._k = np.full(cap, _EMPTY, dtype=np.int64)
+        self._v = np.zeros(cap, dtype=np.int64)
+        self._c = np.zeros(cap, dtype=np.int64)
+        self._n = 0
+        self._used = 0
+        if ks.shape[0]:
+            slots = self._insert_new(ks)
+            self._v[slots] = vs
+            self._c[slots] = cs
+
+    def _materialize(self) -> None:
+        """Fold a parked lazy merge into the hash table (first non-flush
+        access only; the tumbling-pane hot path never gets here)."""
+        if self._lazy is None:
+            return
+        ks, vs, cs = self._lazy
+        self._lazy = None
+        self._maybe_grow(ks.shape[0])
+        if self._used == 0 and self._bulk_fill(ks, vs, cs):
+            return
+        slots = self._slots_for(ks, insert=True)
+        self._v[slots] += vs
+        self._c[slots] += cs
 
     # -- interface ------------------------------------------------------------
     @property
     def num_entries(self) -> int:
+        if self._lazy is not None:
+            return self._lazy[0].shape[0]
         return self._n
 
     def size_bytes(self) -> int:
-        return self._n * ENTRY_BYTES
+        return self.num_entries * ENTRY_BYTES
 
     def update_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
+        self._materialize()
         uniq, inv = np.unique(np.asarray(keys, dtype=np.int64),
                               return_inverse=True)
         vsum = np.zeros(uniq.shape[0], dtype=np.int64)
@@ -227,16 +252,53 @@ class ArrayStateStore:
         self._c[slots] += csum
 
     def merge_entries(self, keys: np.ndarray, values: np.ndarray,
-                      counts: np.ndarray) -> None:
+                      counts: np.ndarray, own: bool = False) -> None:
         keys = np.asarray(keys, dtype=np.int64)
         if keys.shape[0] == 0:
             return
+        if (self._lazy is None and self._n == 0 and self._used == 0
+                and (keys.shape[0] == 1 or bool(np.all(keys[1:] > keys[:-1])))):
+            vs = np.asarray(values, dtype=np.int64)
+            cs = np.asarray(counts, dtype=np.int64)
+            if not own:
+                # defensive copies — the caller may mutate its arrays;
+                # bulk producers (the fused pane flush) hand ownership
+                # over instead and skip the ~MB of memcpy per flush
+                keys, vs, cs = keys.copy(), vs.copy(), cs.copy()
+            self._lazy = (keys, vs, cs)
+            return
+        self._materialize()
         self._maybe_grow(keys.shape[0])
+        if self._used == 0 and self._bulk_fill(keys, values, counts):
+            return
         slots = self._slots_for(keys, insert=True)
         self._v[slots] += np.asarray(values, dtype=np.int64)
         self._c[slots] += np.asarray(counts, dtype=np.int64)
 
+    def _bulk_fill(self, keys: np.ndarray, values: np.ndarray,
+                   counts: np.ndarray) -> bool:
+        """One-pass placement of unique ``keys`` into an *empty* table —
+        the fused engine's pane-flush hot path (each tumbling pane store
+        receives exactly one merge).  Placing in home-slot order with a
+        running ``max(home, prev + 1)`` yields the same contiguous probe
+        chains as sequential insertion, so later lookups are unaffected.
+        Bails (False) on the rare wrap past the table end."""
+        n = keys.shape[0]
+        hm = self._home(keys)
+        order = np.argsort(hm, kind="stable")
+        h = hm[order]
+        ar = np.arange(n, dtype=np.int64)
+        slots = np.maximum.accumulate(h - ar) + ar
+        if slots[-1] >= self._k.shape[0]:
+            return False
+        self._k[slots] = keys[order]
+        self._v[slots] = np.asarray(values, dtype=np.int64)[order]
+        self._c[slots] = np.asarray(counts, dtype=np.int64)[order]
+        self._n = self._used = n
+        return True
+
     def take(self, keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        self._materialize()
         keys = np.asarray(keys, dtype=np.int64)
         if keys.shape[0] == 0:
             return (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64))
@@ -250,6 +312,8 @@ class ArrayStateStore:
         return vals, cnts
 
     def items(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if self._lazy is not None:
+            return self._lazy
         live = np.flatnonzero(self._k >= 0)
         ks = self._k[live]
         order = np.argsort(ks, kind="stable")
@@ -257,7 +321,139 @@ class ArrayStateStore:
         return ks[order], self._v[live].copy(), self._c[live].copy()
 
 
-STORE_BACKENDS = {"dict": DictStateStore, "array": ArrayStateStore}
+class DeviceStateStore:
+    """Device-resident backend (ISSUE 6): the sorted slot table and int32
+    (value, count) accumulators live as jax device arrays, and folding a
+    reduced chunk is one probe/accumulate launch per column
+    (:func:`repro.kernels.ops.store_probe` — the Pallas kernel on TPU, a
+    ``searchsorted`` fallback elsewhere; two launches because the kernel
+    accumulates one value column at a time).  A sorted host int64 key
+    mirror keeps membership checks, sizing and ``items`` ordering
+    off-device; inserting unseen keys rebuilds the device table around
+    them (the open-addressing slow path — rare once the key set is warm).
+
+    Accumulation runs in the kernel's int32 domain: inputs are
+    range-checked per merge and widen back to int64 at ``items``/``take``
+    (aggregates beyond int32 over a store's lifetime are outside this
+    backend's envelope — the fused engine guards its pane totals the same
+    way)."""
+
+    backend = "device"
+
+    def __init__(self) -> None:
+        self._host_keys = np.empty(0, dtype=np.int64)  # sorted mirror
+        self._keys = None  # device int32, sorted ascending (lazy)
+        self._v = None     # device int32 value accumulators
+        self._c = None     # device int32 count accumulators
+
+    # -- interface ------------------------------------------------------------
+    @property
+    def num_entries(self) -> int:
+        return int(self._host_keys.shape[0])
+
+    def size_bytes(self) -> int:
+        return int(self._host_keys.shape[0]) * ENTRY_BYTES
+
+    def update_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
+        uniq, inv = np.unique(np.asarray(keys, dtype=np.int64),
+                              return_inverse=True)
+        vsum = np.zeros(uniq.shape[0], dtype=np.int64)
+        np.add.at(vsum, inv, np.asarray(values, dtype=np.int64))
+        csum = np.bincount(inv, minlength=uniq.shape[0]).astype(np.int64)
+        self._merge(uniq, vsum, csum)
+
+    def merge_entries(self, keys: np.ndarray, values: np.ndarray,
+                      counts: np.ndarray, own: bool = False) -> None:
+        self._merge(np.asarray(keys, dtype=np.int64),
+                    np.asarray(values, dtype=np.int64),
+                    np.asarray(counts, dtype=np.int64))
+
+    def _merge(self, uniq: np.ndarray, vsum: np.ndarray,
+               csum: np.ndarray) -> None:
+        """Fold per-key reduced (value, count) columns into the device
+        table.  ``uniq`` must be sorted unique (both callers guarantee
+        it)."""
+        import jax.numpy as jnp
+
+        from ..kernels import ops
+
+        n = uniq.shape[0]
+        if n == 0:
+            return
+        lim = 2 ** 31 - 1
+        if uniq[0] < 0 or uniq[-1] > lim:
+            raise ValueError(
+                "DeviceStateStore keys must fit int32 (got range "
+                f"[{uniq[0]}, {uniq[-1]}])")
+        if (np.abs(vsum).max(initial=0) > lim
+                or np.abs(csum).max(initial=0) > lim):
+            raise ValueError(
+                "DeviceStateStore accumulates in int32; chunk aggregates "
+                "exceed its range")
+        pos = np.searchsorted(self._host_keys, uniq)
+        k = self._host_keys.shape[0]
+        posc = np.clip(pos, 0, max(k - 1, 0))
+        present = ((pos < k) & (self._host_keys[posc] == uniq)) if k else (
+            np.zeros(n, dtype=bool))
+        missing = uniq[~present]
+        if missing.shape[0]:
+            union = np.sort(np.concatenate([self._host_keys, missing]))
+            nv = jnp.zeros(union.shape[0], jnp.int32)
+            nc = jnp.zeros(union.shape[0], jnp.int32)
+            if k:
+                old_pos = jnp.asarray(np.searchsorted(union,
+                                                      self._host_keys))
+                nv = nv.at[old_pos].set(self._v)
+                nc = nc.at[old_pos].set(self._c)
+            self._host_keys = union
+            self._keys = jnp.asarray(union.astype(np.int32))
+            self._v = nv
+            self._c = nc
+        keys32 = jnp.asarray(uniq.astype(np.int32))
+        vacc, _, _ = ops.store_probe(self._keys, keys32,
+                                     jnp.asarray(vsum.astype(np.int32)))
+        cacc, _, _ = ops.store_probe(self._keys, keys32,
+                                     jnp.asarray(csum.astype(np.int32)))
+        self._v = self._v + vacc
+        self._c = self._c + cacc
+
+    def take(self, keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        import jax.numpy as jnp
+
+        keys = np.asarray(keys, dtype=np.int64)
+        if keys.shape[0] == 0:
+            return (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64))
+        k = self._host_keys.shape[0]
+        pos = np.searchsorted(self._host_keys, keys)
+        posc = np.clip(pos, 0, max(k - 1, 0))
+        ok = ((pos < k) & (self._host_keys[posc] == keys)) if k else (
+            np.zeros(keys.shape[0], dtype=bool))
+        if not ok.all():
+            raise KeyError(
+                f"{int((~ok).sum())} keys absent from DeviceStateStore")
+        v = np.asarray(self._v, dtype=np.int64)
+        c = np.asarray(self._c, dtype=np.int64)
+        vals = v[pos].copy()
+        cnts = c[pos].copy()
+        keep = np.ones(k, dtype=bool)
+        keep[pos] = False
+        self._host_keys = self._host_keys[keep]
+        self._keys = jnp.asarray(self._host_keys.astype(np.int32))
+        self._v = jnp.asarray(v[keep].astype(np.int32))
+        self._c = jnp.asarray(c[keep].astype(np.int32))
+        return vals, cnts
+
+    def items(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if self._host_keys.shape[0] == 0:
+            return (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64),
+                    np.empty(0, dtype=np.int64))
+        return (self._host_keys.copy(),
+                np.asarray(self._v, dtype=np.int64),
+                np.asarray(self._c, dtype=np.int64))
+
+
+STORE_BACKENDS = {"dict": DictStateStore, "array": ArrayStateStore,
+                  "device": DeviceStateStore}
 
 
 def make_store(backend: str):

@@ -217,6 +217,7 @@ class KeyedStateManager:
         self._pre_routes: Optional[Dict[int, Optional[int]]] = None
         self._finalized = False
         self._seen_keys: set = set()
+        self._seen_pending: List[np.ndarray] = []
 
     # -- bookkeeping --------------------------------------------------------------
     def _note_bytes(self) -> int:
@@ -318,6 +319,68 @@ class KeyedStateManager:
             self.idx += take
             pos += take
 
+    def feed_aggregated(self, n_tuples: int, entries) -> None:
+        """Fused-engine input (ISSUE 6): the device engine aggregates one
+        pane's (key, worker) contributions on device and syncs them here
+        in bulk instead of streaming every routed chunk through
+        :meth:`feed`.
+
+        ``n_tuples`` is how many input tuples the sync covers (advances
+        ``self.idx``); ``entries`` is a list of ``(worker, keys int64,
+        values int64, counts int64, last_index)`` — values already folded
+        through :func:`tuple_values` by the caller.  The covered span must
+        lie within a single pane (the fused engine cuts segments at pane
+        boundaries); store merging accumulates, so one pane may be synced
+        in several calls (e.g. around membership events)."""
+        if self._finalized:
+            raise RuntimeError("KeyedStateManager already finalized")
+        if n_tuples == 0:
+            return
+        self._flush_ready()
+        stride = self.op.stride
+        block = (self.idx // stride) * stride
+        if self.idx + n_tuples > block + stride:
+            raise ValueError(
+                f"feed_aggregated span [{self.idx}, {self.idx + n_tuples})"
+                f" crosses the pane boundary at {block + stride}; the "
+                "fused engine must flush at pane boundaries")
+        pane = self._panes.get(block)
+        if pane is None:
+            pane = self._panes[block] = _Pane(block, block + stride)
+        backend = self.op.backend
+        for w, ks, vs, cs, last in entries:
+            if ks.shape[0] == 0:
+                continue
+            w = int(w)
+            self._seen_pending.append(ks)
+            st = pane.stores.get(w)
+            if st is None:
+                st = pane.stores[w] = make_store(backend)
+            # the fused flush builds these columns fresh per sync — the
+            # store may keep them without a defensive copy
+            st.merge_entries(ks, vs, cs, own=True)
+            if last > pane.last_idx.get(w, -1):
+                pane.last_idx[w] = int(last)
+        self.idx += n_tuples
+
+    def _seen_count(self) -> int:
+        """Distinct state keys seen.  Bulk (fused) inputs defer the set
+        union — one ``np.unique`` over the accumulated arrays at metric
+        time instead of per-worker set updates on the feed hot path."""
+        if self._seen_pending:
+            self._seen_keys.update(
+                np.unique(np.concatenate(self._seen_pending)).tolist())
+            self._seen_pending.clear()
+        return len(self._seen_keys)
+
+    def drain_partials(self, start: int) -> List[WindowPartial]:
+        """Flush every window that has closed and return the partials
+        appended since ``start`` — the incremental-emission hook (ISSUE 6
+        satellite): engines call this after each feed to push completed
+        windows downstream instead of holding them until close."""
+        self._flush_ready()
+        return self.partials[start:]
+
     # -- membership hook (engines' event_observer signature) -----------------------
     def on_event(self, kind: str, grouper, event=None) -> None:
         if kind == "pre_membership":
@@ -381,7 +444,7 @@ class KeyedStateManager:
             windows=len({p.window for p in self.partials}),
             partials=len(self.partials),
             partial_entries=int(sum(p.keys.shape[0] for p in self.partials)),
-            state_keys=len(self._seen_keys),
+            state_keys=self._seen_count(),
             state_bytes_peak=int(self.state_bytes_peak),
             state_bytes_final=int(self.state_bytes_final),
             per_worker_bytes=per_worker,

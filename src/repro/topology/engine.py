@@ -92,6 +92,10 @@ class EdgeReport:
     remap_events: List[Dict] = dataclasses.field(default_factory=list)
     remap_frac_mean: Optional[float] = None
     dropped: int = 0
+    # host↔device launches this edge made across the session (ISSUE 6) —
+    # the fused engine's "one dispatch per steady-state feed" evidence;
+    # the host engines report 0
+    dispatches: int = 0
     # keyed operator state (ISSUE 4) — populated when the destination stage
     # carries a WindowOp; state_bytes is the peak Σ_w store bytes (the
     # *measured* counterpart of the memory_overhead key-replica proxy)
@@ -429,20 +433,31 @@ def _state_extra(srep: Optional[StateReport]) -> Dict:
                 tuples_replayed=srep.tuples_replayed)
 
 
-def _emit_state(mgr: KeyedStateManager, finishes: np.ndarray,
-                in_roots: np.ndarray, fallback_time: float):
-    """The stream an operator stage emits: one partial-aggregate tuple per
-    state entry, keyed by the aggregation key and released when its worker
-    flushed the window (the finish time of that worker's last tuple in the
-    window; ``fallback_time`` covers entries whose anchor tuple never
-    finished — the serving engine's dropped requests).  Partial tuples
-    carry no payload column."""
-    ks, last = mgr.partial_entries()
-    t = finishes[last]
-    t = np.where(t >= 0.0, t, fallback_time)
-    roots = in_roots[last]
-    order = np.argsort(t, kind="stable")
-    return ks[order], t[order], roots[order], None
+def _emit_partials(partials, finishes: np.ndarray, in_roots: np.ndarray,
+                   fallback_time: float):
+    """The stream a batch of flushed window partials emits downstream: one
+    partial-aggregate tuple per state entry, keyed by the aggregation key
+    and released when its worker flushed the window (the finish time of
+    that worker's last tuple in the window; ``fallback_time`` covers
+    entries whose anchor tuple never finished — the serving engine's
+    dropped requests).  Partial tuples carry no payload column.  Sessions
+    call this per feed with the windows that closed during it (incremental
+    emission — ISSUE 6 satellite) and once more at close with the
+    remainder."""
+    if not partials:
+        return (np.empty(0, dtype=np.int64), np.empty(0),
+                np.empty(0, dtype=np.int64), None)
+    # release time and root are constant within a partial, so the stable
+    # element sort collapses to a stable sort of the partials themselves
+    last = np.array([p.last_index for p in partials], dtype=np.int64)
+    t_p = finishes[last]
+    t_p = np.where(t_p >= 0.0, t_p, fallback_time)
+    roots_p = in_roots[last]
+    sizes = np.array([p.keys.shape[0] for p in partials], dtype=np.int64)
+    order = np.argsort(t_p, kind="stable")
+    ks = np.concatenate([partials[i].keys for i in order.tolist()])
+    return (ks, np.repeat(t_p[order], sizes[order]),
+            np.repeat(roots_p[order], sizes[order]), None)
 
 
 # ---------------------------------------------------------------------------
@@ -457,12 +472,16 @@ class SimulatorEngine:
     mode="reference" is the per-tuple interpreter kept as the equivalence
     oracle — identical event/sampling discipline, so SG/FG/PKG topologies
     match it exactly and DC/WC/FISH stay within the DESIGN.md §6 bands.
+    mode="fused" (ISSUE 6) runs each grouped edge as one jitted device
+    launch per event-free segment — routing, closed-form FIFO, and keyed
+    window state fused in :mod:`repro.kernels.feed_fused` — with operator
+    windows flushed downstream incrementally at each feed's end.
     """
 
     def __init__(self, mode: str = "batched", utilization: float = 0.9,
                  sample_every: int = 5_000, sample_noise: float = 0.02,
                  seed: int = 0, remap_sample: int = 512):
-        if mode not in ("batched", "reference"):
+        if mode not in ("batched", "reference", "fused"):
             raise ValueError(f"unknown mode {mode!r}")
         self.mode = mode
         self.utilization = utilization
@@ -488,7 +507,8 @@ class _SimEdge:
     """One grouped edge's carried session state (DSPE simulator)."""
 
     __slots__ = ("stage", "grouper", "caps", "state", "acct", "mgr",
-                 "lats", "n", "seed", "dt_hint", "finishes", "roots", "srep")
+                 "lats", "n", "seed", "dt_hint", "finishes", "roots", "srep",
+                 "emitted", "dispatches")
 
     def __init__(self, stage: Stage, grouper, caps: np.ndarray, seed: int,
                  dt_hint: Optional[float], mgr: Optional[KeyedStateManager]):
@@ -505,6 +525,8 @@ class _SimEdge:
         self.finishes: List[np.ndarray] = []  # operator stages only
         self.roots: List[np.ndarray] = []     # operator stages only
         self.srep: Optional[StateReport] = None
+        self.emitted = 0             # window partials already sent downstream
+        self.dispatches = 0          # fused-mode device launches (ISSUE 6)
 
 
 class SimulatorSession(_BaseSession):
@@ -564,17 +586,27 @@ class SimulatorSession(_BaseSession):
                 continue
             st = self._st.get(edge.name)
             if st is not None and st.mgr is not None:
+                dev = (getattr(st.state, "device", None)
+                       if st.state is not None else None)
+                if dev is not None and hasattr(dev, "flush_pane"):
+                    # fused mode: drain the device pane tables so the final
+                    # (possibly partial) window reaches the manager before
+                    # finalize() flushes it
+                    dev.flush_pane(st.mgr)
                 st.mgr.finalize()
                 st.srep = st.mgr.report(st.stage.name)
                 state[st.stage.name] = st.srep.summary()
                 if st.stage.name not in self._sinks:
-                    fin = (np.concatenate(st.finishes) if st.finishes
-                           else np.empty(0))
-                    roots = (np.concatenate(st.roots) if st.roots
-                             else np.empty(0, dtype=np.int64))
-                    streams[st.stage.name] = _emit_state(
-                        st.mgr, fin, roots,
-                        float(fin.max()) if fin.size else 0.0)
+                    rest = st.mgr.partials[st.emitted:]
+                    if rest or st.emitted == 0:
+                        fin = (np.concatenate(st.finishes) if st.finishes
+                               else np.empty(0))
+                        roots = (np.concatenate(st.roots) if st.roots
+                                 else np.empty(0, dtype=np.int64))
+                        streams[st.stage.name] = _emit_partials(
+                            rest, fin, roots,
+                            float(fin.max()) if fin.size else 0.0)
+                        st.emitted = len(st.mgr.partials)
 
     def _run_edge(self, edge: Edge, in_keys, in_times, in_roots, in_values,
                   src_arrival) -> Optional[tuple]:
@@ -608,6 +640,7 @@ class SimulatorSession(_BaseSession):
                                   eng.remap_sample)
         st.acct.offset = st.n  # events below are feed-local; report global
         mgr = st.mgr
+        fused = eng.mode == "fused"
         res = simulate_edge(
             st.grouper, in_keys, times=in_times,
             arrival_rate=self._rate or 10_000.0, mode=eng.mode,
@@ -616,23 +649,33 @@ class SimulatorSession(_BaseSession):
             events=due, seed=st.seed,
             event_observer=(st.acct if mgr is None
                             else _chain_observers(st.acct, mgr.on_event)),
-            tuple_observer=mgr.feed if mgr is not None else None,
+            tuple_observer=(mgr.feed
+                            if (mgr is not None and not fused) else None),
+            state_sink=(mgr if (mgr is not None and fused) else None),
             values=in_values, state=st.state, dt=st.dt_hint,
             compute_metrics=False,  # aggregated once at close
         )
         st.state = res.state
         st.lats.append(res.latencies)
         st.n += m
+        st.dispatches += res.dispatches
         if m:
             self._total_time = max(self._total_time,
                                    float(res.finishes.max()))
         if stage.name in self._sinks:
             self._e2e.append(res.finishes - src_arrival(in_roots))
         elif mgr is not None:
-            # operator stages release their partial stream at close() —
-            # remember the finish times its entries are anchored to
+            # operator stages flush closed windows downstream at the end of
+            # each feed (incremental emission — ISSUE 6); the remainder goes
+            # out at close().  Finish times anchor the partial stream.
             st.finishes.append(res.finishes)
             st.roots.append(np.asarray(in_roots))
+            fresh = mgr.drain_partials(st.emitted)
+            if fresh:
+                st.emitted += len(fresh)
+                fin = np.concatenate(st.finishes)
+                roots = np.concatenate(st.roots)
+                return _emit_partials(fresh, fin, roots, float(fin.max()))
         else:  # intermediate stage: release transformed tuples
             return _emit(stage, in_keys, res.finishes, in_roots, in_values)
         return None
@@ -642,6 +685,11 @@ class SimulatorSession(_BaseSession):
         stage = self.topology.stage(edge.dst)
         if st is None:  # the edge never received a tuple
             return self._zero_report(edge, stage)
+        dev = getattr(st.state, "device", None)
+        if dev is not None and hasattr(dev, "host_sync"):
+            # fused mode keeps replica sets device-resident between feeds;
+            # memory_overhead needs them on the host grouper
+            dev.host_sync(st.grouper)
         lats = np.concatenate(st.lats) if st.lats else np.empty(0)
         metrics = edge_metrics(st.grouper, st.state.busy_until, lats, st.n)
         return EdgeReport(edge=edge.name, src=edge.src, dst=edge.dst,
@@ -649,6 +697,7 @@ class SimulatorSession(_BaseSession):
                           workers=stage.parallelism, n_tuples=st.n,
                           remap_events=st.acct.per_event,
                           remap_frac_mean=st.acct.frac_mean(),
+                          dispatches=st.dispatches,
                           **metrics.row(), **_state_extra(st.srep))
 
 
@@ -717,7 +766,7 @@ class _ServingEdge:
     """One grouped edge's carried session state (serving engine)."""
 
     __slots__ = ("stage", "eng", "acct", "mgr", "reqs", "in_times", "n",
-                 "tick", "roots", "srep")
+                 "tick", "roots", "srep", "emitted")
 
     def __init__(self, stage: Stage, eng,
                  mgr: Optional[KeyedStateManager]):
@@ -731,6 +780,7 @@ class _ServingEdge:
         self.tick = 0
         self.roots: List[np.ndarray] = []  # operator stages only
         self.srep: Optional[StateReport] = None
+        self.emitted = 0  # window partials already sent downstream
 
 
 class ServingSession(_BaseSession):
@@ -816,11 +866,14 @@ class ServingSession(_BaseSession):
                 st.srep = st.mgr.report(st.stage.name)
                 state[st.stage.name] = st.srep.summary()
                 if st.stage.name not in self._sinks:
-                    fins = np.array([r.finished for r in st.reqs])
-                    roots = (np.concatenate(st.roots) if st.roots
-                             else np.empty(0, dtype=np.int64))
-                    streams[st.stage.name] = _emit_state(
-                        st.mgr, fins, roots, float(st.eng.now))
+                    rest = st.mgr.partials[st.emitted:]
+                    if rest or st.emitted == 0:
+                        fins = np.array([r.finished for r in st.reqs])
+                        roots = (np.concatenate(st.roots) if st.roots
+                                 else np.empty(0, dtype=np.int64))
+                        streams[st.stage.name] = _emit_partials(
+                            rest, fins, roots, float(st.eng.now))
+                        st.emitted = len(st.mgr.partials)
 
     def _run_edge(self, edge: Edge, in_keys, in_times, in_roots,
                   in_values) -> Optional[tuple]:
@@ -888,7 +941,15 @@ class ServingSession(_BaseSession):
         if stage.name in self._sinks:
             self._e2e.append((finishes - in_roots * self._dt)[done])
         elif mgr is not None:
-            pass  # partial stream released at close(), via st.reqs/st.roots
+            # windows that closed during this feed go downstream now; the
+            # remainder is released at close() (incremental emission)
+            fresh = mgr.drain_partials(st.emitted)
+            if fresh:
+                st.emitted += len(fresh)
+                all_fins = np.array([r.finished for r in st.reqs])
+                roots = np.concatenate(st.roots)
+                return _emit_partials(fresh, all_fins, roots,
+                                      float(st.eng.now))
         else:  # intermediate stage: release transformed tuples
             return _emit(stage, in_keys[done], finishes[done],
                          in_roots[done],
