@@ -1,0 +1,32 @@
+"""Static hot-path hygiene + dataflow-contract checking (DESIGN.md §12).
+
+Three layers:
+
+- :mod:`repro.analysis.lint` — AST lint engine with JAX-aware rules
+  (host-sync-in-jit, retrace-hazard, np-jnp-mixing, frozen-mutation,
+  deprecated-shim, unordered-iteration, exactness-contract,
+  topology-config);
+- :mod:`repro.analysis.contracts` — the scheme × engine exactness table
+  and static mirrors of the runtime topology/config build errors;
+- :mod:`repro.analysis.audit` — runtime trace/transfer auditor for the
+  fused engine's jit boundaries.
+
+CLI: ``python -m repro.analysis [paths...]`` (see :mod:`.cli`), gated in
+CI against the checked-in ``analysis_baseline.json``.
+
+This package is import-light: pulling in the contracts table or the lint
+engine must not drag jax in (the CI lint job stays fast), so jax-touching
+imports live inside functions.
+"""
+
+from .contracts import (BANDED_SCHEMES, DRIFT_SCHEMES, EXACT_SCHEMES,
+                        EXACTNESS, SCHEMES, exactness)
+from .findings import Baseline, Finding, apply_baseline
+from .lint import RULES, lint_file, lint_paths
+
+__all__ = [
+    "SCHEMES", "EXACTNESS", "EXACT_SCHEMES", "BANDED_SCHEMES",
+    "DRIFT_SCHEMES", "exactness",
+    "Finding", "Baseline", "apply_baseline",
+    "RULES", "lint_file", "lint_paths",
+]

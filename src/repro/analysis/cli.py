@@ -1,0 +1,120 @@
+"""`python -m repro.analysis` — scan, compare against the baseline, gate.
+
+Exit codes: 0 clean (every finding baselined), 1 new findings (or a
+baseline problem), 2 usage error.  ``--strict-stale`` additionally fails
+when the baseline carries entries that no longer match anything, so the
+baseline shrinks as code is fixed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from .findings import Baseline, apply_baseline, findings_to_json
+from .lint import RULES, lint_paths
+
+__all__ = ["main"]
+
+_DEFAULT_SCAN = ("src", "tests", "benchmarks", "examples")
+
+
+def _repo_root(start: Path) -> Path:
+    cur = start.resolve()
+    for cand in (cur, *cur.parents):
+        if (cand / "pyproject.toml").exists():
+            return cand
+    return start
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static hot-path hygiene + dataflow-contract checks")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files/directories to scan (default: "
+                    + " ".join(_DEFAULT_SCAN) + " under the repo root)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="accepted-findings file (default: "
+                    "<repo>/analysis_baseline.json when present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding as new")
+    ap.add_argument("--write-baseline", type=Path, metavar="PATH",
+                    help="write the current scan as the baseline "
+                    "(carries forward existing justifications) and exit 0")
+    ap.add_argument("--json", type=Path, metavar="PATH",
+                    help="write the machine-readable findings report")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (default: all)")
+    ap.add_argument("--strict-stale", action="store_true",
+                    help="fail when baseline entries match nothing")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-finding output; summary only")
+    args = ap.parse_args(argv)
+
+    root = _repo_root(Path.cwd())
+    rules: Optional[List[str]] = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in rules if r not in RULES]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}; "
+                  f"available: {', '.join(RULES)}", file=sys.stderr)
+            return 2
+
+    paths = list(args.paths)
+    if not paths:
+        paths = [root / p for p in _DEFAULT_SCAN if (root / p).exists()]
+    missing = [p for p in paths if not Path(p).exists()]
+    if missing:
+        print(f"no such path: {', '.join(map(str, missing))}",
+              file=sys.stderr)
+        return 2
+
+    findings = lint_paths(paths, root, rules)
+
+    baseline = Baseline()
+    baseline_path = args.baseline
+    if baseline_path is None and not args.no_baseline:
+        cand = root / "analysis_baseline.json"
+        baseline_path = cand if cand.exists() else None
+    if baseline_path is not None and not args.no_baseline:
+        try:
+            baseline = Baseline.load(baseline_path)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"bad baseline: {e}", file=sys.stderr)
+            return 1
+
+    if args.write_baseline:
+        baseline.dump(args.write_baseline, findings=findings)
+        print(f"wrote {len(findings)} finding(s) to {args.write_baseline} "
+              f"— fill in every 'why' before committing")
+        return 0
+
+    fresh, stale = apply_baseline(findings, baseline)
+
+    if args.json:
+        args.json.write_text(
+            findings_to_json(findings, fresh=fresh, stale=stale) + "\n")
+
+    if not args.quiet:
+        for f in fresh:
+            print(f.format())
+    accepted = len(findings) - len(fresh)
+    print(f"repro.analysis: {len(findings)} finding(s) — "
+          f"{accepted} baselined, {len(fresh)} new"
+          + (f", {len(stale)} stale baseline entr"
+             + ("y" if len(stale) == 1 else "ies") if stale else ""))
+    if stale and (args.strict_stale or not args.quiet):
+        for fp in stale:
+            print(f"  stale baseline entry (fixed? remove it): {fp}")
+
+    if fresh:
+        print("new findings — fix them, or justify them in "
+              "analysis_baseline.json with a 'why'", file=sys.stderr)
+        return 1
+    if stale and args.strict_stale:
+        return 1
+    return 0

@@ -1,0 +1,151 @@
+"""Findings, fingerprints, and the accepted-findings baseline.
+
+A *finding* is one (rule, file, line) hit with severity and a fix-it hint.
+The CLI compares the current scan against a checked-in baseline
+(``analysis_baseline.json``) and fails only on findings the baseline does
+not cover — so legacy accepted findings don't block CI, while any *new*
+finding (or a new instance of an accepted one) goes red.
+
+Fingerprints are deliberately line-free: ``rule::path::scope`` where
+*scope* is the enclosing ``Class.function`` qualname (or ``<module>``).
+Unrelated edits that shift line numbers therefore do not invalidate the
+baseline; what is matched is "rule R fires N times inside scope S of file
+F".  The baseline stores a count per fingerprint plus a mandatory ``why``
+justification (JSON has no comments, so the justification is schema).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Severity",
+    "Finding",
+    "Baseline",
+    "apply_baseline",
+    "findings_to_json",
+]
+
+#: Severity ladder.  ``error`` findings gate CI; ``warn`` findings gate CI
+#: too (they are real hazards, just with plausible sanctioned uses that the
+#: baseline records); ``note`` findings are informational context that
+#: still must be baselined to keep the default scan clean.
+Severity = str
+SEVERITIES: Tuple[str, ...] = ("error", "warn", "note")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str           # rule id, e.g. "host-sync-in-jit"
+    path: str           # repo-relative posix path
+    line: int           # 1-based
+    col: int            # 0-based (ast convention)
+    severity: Severity
+    message: str        # what is wrong, with the offending source element
+    hint: str           # fix-it hint: what to do instead
+    scope: str = "<module>"  # enclosing qualname, for the fingerprint
+
+    def __post_init__(self) -> None:
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"bad severity {self.severity!r}")
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}::{self.path}::{self.scope}"
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.severity}[{self.rule}] {self.message}\n"
+                f"    hint: {self.hint}")
+
+
+class Baseline:
+    """Accepted findings: fingerprint → (allowed count, justification)."""
+
+    VERSION = 1
+
+    def __init__(self, entries: Optional[Dict[str, Tuple[int, str]]] = None
+                 ) -> None:
+        self.entries: Dict[str, Tuple[int, str]] = dict(entries or {})
+
+    # -- (de)serialisation -------------------------------------------------
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        data = json.loads(Path(path).read_text())
+        if data.get("version") != cls.VERSION:
+            raise ValueError(
+                f"{path}: unsupported baseline version {data.get('version')!r}")
+        entries: Dict[str, Tuple[int, str]] = {}
+        for item in data.get("accepted", []):
+            fp = item["fingerprint"]
+            why = item.get("why", "").strip()
+            if not why or why.startswith("TODO"):
+                raise ValueError(
+                    f"{path}: baseline entry {fp!r} has no 'why' "
+                    f"justification — every accepted finding must say why")
+            if fp in entries:
+                raise ValueError(f"{path}: duplicate baseline entry {fp!r}")
+            entries[fp] = (int(item.get("count", 1)), why)
+        return cls(entries)
+
+    def dump(self, path: Path, *, findings: Sequence[Finding] = ()) -> None:
+        """Write the baseline.  When regenerating from a scan
+        (``--write-baseline``), carry forward existing justifications and
+        stub the new ones so a human must fill them in."""
+        by_fp: Dict[str, int] = {}
+        for f in findings:
+            by_fp[f.fingerprint] = by_fp.get(f.fingerprint, 0) + 1
+        accepted = []
+        for fp in sorted(by_fp):
+            _, why = self.entries.get(fp, (0, ""))
+            accepted.append({
+                "fingerprint": fp,
+                "count": by_fp[fp],
+                "why": why or "TODO: justify or fix",
+            })
+        payload = {"version": self.VERSION, "accepted": accepted}
+        Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def apply_baseline(findings: Iterable[Finding], baseline: Baseline
+                   ) -> Tuple[List[Finding], List[str]]:
+    """Split a scan into (new findings, stale baseline fingerprints).
+
+    The first ``count`` findings per accepted fingerprint are suppressed;
+    any excess is new.  Baseline entries that no longer match anything are
+    reported as stale so the baseline can shrink as code is fixed.
+    """
+    seen: Dict[str, int] = {}
+    fresh: List[Finding] = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule)):
+        n = seen.get(f.fingerprint, 0) + 1
+        seen[f.fingerprint] = n
+        allowed, _ = baseline.entries.get(f.fingerprint, (0, ""))
+        if n > allowed:
+            fresh.append(f)
+    stale = [fp for fp in sorted(baseline.entries) if fp not in seen]
+    return fresh, stale
+
+
+def findings_to_json(findings: Sequence[Finding], *,
+                     fresh: Sequence[Finding], stale: Sequence[str]
+                     ) -> str:
+    """Machine-readable scan report (the CI artifact)."""
+    fresh_set = {id(f) for f in fresh}
+    return json.dumps({
+        "version": Baseline.VERSION,
+        "total": len(findings),
+        "new": len(fresh),
+        "stale_baseline": list(stale),
+        "findings": [
+            {**dataclasses.asdict(f),
+             "fingerprint": f.fingerprint,
+             "new": id(f) in fresh_set}
+            for f in sorted(findings,
+                            key=lambda f: (f.path, f.line, f.col, f.rule))
+        ],
+    }, indent=2)

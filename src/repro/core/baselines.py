@@ -186,9 +186,11 @@ class Grouper:
         if self.ring is not None:
             current = set(self.ring.workers)
             tset = set(target)
-            for w in current - tset:
+            # sorted: add/remove order decides linear-probe placement on
+            # ring-point hash collisions, so set order must not leak in
+            for w in sorted(current - tset):
                 self.ring.remove_worker(w)
-            for w in tset - current:
+            for w in sorted(tset - current):
                 self.ring.add_worker(w)
         self._active = target
         self._ring_order.clear()  # candidate caches are keyed on membership

@@ -71,7 +71,7 @@ _SEG_CACHE: dict = {}  # static signature -> jitted segment function
 
 _SCHEMES = ("sg", "fg", "pkg", "dc", "wc", "fish")
 _RING_SCHEMES = ("fg", "pkg", "dc", "wc", "fish")
-_BIG_I32 = np.int32(2 ** 30)
+_BIG_I32 = jnp.int32(2 ** 30)  # device constant: referenced in traced code
 
 
 def _bucket(n: int) -> int:

@@ -173,7 +173,7 @@ def fish_epoch_count(
     n_tot = keys2d.shape[0]
     grid = (n_tot // block_n,)
 
-    kern = functools.partial(_fish_epoch_kernel, float(alpha), block_n)
+    kern = functools.partial(_fish_epoch_kernel, alpha, block_n)
     new_counts, matched, cand, first = pl.pallas_call(
         kern,
         grid=grid,

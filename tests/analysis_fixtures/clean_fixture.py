@@ -1,0 +1,38 @@
+"""Clean fixture: near-miss patterns that must produce zero findings."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BIG = jnp.int32(1 << 30)  # device constant: fine to close over in a trace
+HOST_ONLY = np.int32(7)   # host constant never referenced from traced code
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def padded_sum(x, n: int, interpret: bool = False):
+    # int/bool statics are hashable and bounded: fine
+    return jnp.sum(x[:n]) + BIG
+
+
+def host_side(x):
+    # host code may sync and use numpy freely
+    arr = np.asarray(x)
+    return float(arr.sum()) + int(HOST_ONLY)
+
+
+_JIT_CACHE = {}
+
+
+def cached_jit(n):
+    # signature-keyed cache: the sanctioned inner-jit pattern
+    if n not in _JIT_CACHE:
+        _JIT_CACHE[n] = jax.jit(lambda v: v[:n].sum())
+    return _JIT_CACHE[n]
+
+
+def ordered_rebalance(workers, ring):
+    for w in sorted(set(workers)):
+        ring.add(w)
+    return {w for w in set(workers)}

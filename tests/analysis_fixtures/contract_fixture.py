@@ -1,0 +1,7 @@
+"""exactness-contract fixture: locally redefined contract partitions."""
+
+EXACT_SCHEMES = ("sg", "fg", "pkg")   # L3: shadows the contracts table
+DRIFT_SCHEMES = ("dc", "wc")          # L4: wrong, and shadows the table
+EXACTNESS = {("sg", "fused"): "exact"}  # L5: shadows the table
+
+SCHEMES = ("sg", "fish")  # intentional subset (benchmarks do this): ok

@@ -1,0 +1,24 @@
+"""frozen-mutation fixture: writes through the frozen contract."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Frozen:
+    field: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "field", abs(self.field))  # L11: note
+
+    def poke(self):
+        object.__setattr__(self, "field", 3)  # L14: error outside post-init
+
+
+def clobber(batch, arr):
+    batch.keys = arr        # L18: rebinding a RecordBatch column
+    batch.values[0] = 7.0   # L19: writing into a frozen column
+    batch.timestamps += 1.0  # L20: aug-assign rebind of a column
+
+
+def fine(self_like):
+    self_like.other = 1  # not a column name: not flagged

@@ -1,0 +1,25 @@
+"""host-sync-in-jit fixture: forced host syncs inside jit-traced code."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_host_sync(x):
+    s = jnp.sum(x)
+    a = float(s)               # L11: float() on a traced value
+    b = s.item()               # L12: .item() is a device->host sync
+    c = np.asarray(s)          # L13: np.asarray pulls to host
+    flag = bool(s > 0)         # L14: bool() concretizes the tracer
+    return a + b + float(c) + flag  # L15: float() again (non-constant)
+
+
+def _traced_helper(x):
+    # reached from the jit root below: still traced code
+    return x.tolist()          # L20: .tolist() in traced closure
+
+
+@jax.jit
+def bad_via_helper(x):
+    return _traced_helper(x)

@@ -1,0 +1,18 @@
+"""np-jnp-mixing fixture: host numpy inside device-traced code."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BIG = np.int32(1 << 30)  # host constant, referenced from traced code
+
+
+@jax.jit
+def mixed(x):
+    y = np.maximum(x, 0)           # L12: np op inside traced code
+    return jnp.where(x > 0, y, BIG)  # L13: module-level np value `BIG`
+
+
+@jax.jit
+def clean(x):
+    return jnp.where(x > 0, x, jnp.int32(0))  # all-jnp: not flagged

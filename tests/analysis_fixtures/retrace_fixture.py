@@ -1,0 +1,28 @@
+"""retrace-hazard fixture: signatures that recompile per call."""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))  # L8: float static
+def scaled(x, scale: float):
+    return x * scale
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))  # L13: unhashable
+def reshaped(x, shape: list):
+    return x.reshape(shape)
+
+
+def storm(xs):
+    out = []
+    for x in xs:
+        out.append(jax.jit(lambda v: v * 2)(x))  # L21: jit rebuilt per call
+    return out
+
+
+def fine(xs):
+    # assigned once and reused: not flagged
+    f = jax.jit(lambda v: v * 2)
+    return [f(x) for x in xs]

@@ -1,0 +1,15 @@
+"""deprecated-shim fixture: legacy entry points."""
+
+from repro.core import make_grouper, simulate_stream
+
+
+def legacy_run(keys):
+    g = make_grouper("pkg", 4)               # L7: deprecated shim
+    return simulate_stream(g, keys)          # L8: deprecated shim
+
+
+def modern_run(keys):
+    from repro.topology import build_grouper, config_for
+
+    g = build_grouper(config_for("pkg"), 4)  # replacement path: not flagged
+    return g

@@ -1,0 +1,23 @@
+"""topology-config fixture: literal constructs the runtime would reject."""
+
+from repro.topology import Edge, Stage, Topology, config_for
+
+BAD_SCHEME = config_for("nope")              # L5: unknown scheme
+BAD_ALPHA = config_for("fish", alpha=1.5)    # L6: alpha out of [0, 1]
+BAD_STAGE = Stage("source", 4)               # L7: reserved stage name
+BAD_PAR = Stage("work", 0)                   # L8: parallelism < 1
+BAD_EDGE = Edge("a", "a", config_for("sg"))  # L9: self-edge
+BAD_GROUPING = Edge("source", "a", "pkg")    # L10: stringly grouping
+
+BAD_TOPO = Topology(                         # L12: duplicate stage names
+    name="dup",
+    stages=(Stage("a", 2), Stage("a", 2)),
+    edges=(Edge("source", "a", config_for("sg")),),
+)
+
+OK_CONFIG = config_for("fish", alpha=0.5)    # valid literal: not flagged
+OK_TOPO = Topology(
+    name="ok",
+    stages=(Stage("a", 2),),
+    edges=(Edge("source", "a", config_for("sg")),),
+)

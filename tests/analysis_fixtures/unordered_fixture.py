@@ -1,0 +1,20 @@
+"""unordered-iteration fixture: set order leaking into effects."""
+
+
+def rebalance(workers, ring):
+    live = set(workers)
+    dead = {0, 1}
+    for w in live - dead:          # L7: set difference drives ring mutation
+        ring.add(w)
+    order = [w for w in live]      # L9: list built in set order
+    for w in {"a", "b"} | live:    # L10: union iterated directly
+        ring.remove(w)
+    return order
+
+
+def fine(workers, ring):
+    live = set(workers)
+    for w in sorted(live):         # sorted: not flagged
+        ring.add(w)
+    total = sum(w for w in live)   # order-neutral sink: not flagged
+    return {w for w in live}, total  # set comprehension: not flagged

@@ -18,12 +18,10 @@ import pytest
 
 from hypothesis_compat import given, settings, st
 
+from repro.analysis.contracts import DRIFT_SCHEMES, EXACT_SCHEMES
 from repro.core import simulate_edge
 from repro.topology import build_grouper
 from repro.data.synthetic import intern_keys, zipf_time_evolving
-
-EXACT_SCHEMES = ("sg", "fg", "pkg")
-DRIFT_SCHEMES = ("dc", "wc", "fish")
 
 
 def _sim_batched(g, keys, **kw):

@@ -36,9 +36,8 @@ from repro.topology import (Edge, ScopedEvent, ServingTopologyEngine,
                             SimulatorEngine, Source, Stage, Topology,
                             WindowOp as TopoWindowOp, config_for)
 
-SCHEMES = ("sg", "fg", "pkg", "dc", "wc", "fish")
-EXACT_SCHEMES = ("sg", "fg", "pkg")
-DRIFT_SCHEMES = ("dc", "wc", "fish")
+from repro.analysis.contracts import (DRIFT_SCHEMES, EXACT_SCHEMES,
+                                      SCHEMES)
 
 # float32 device FIFO: sequential busy-time accumulation on a hot worker
 # drifts a few hundred ulps from the float64 host scan (DESIGN.md §11)
@@ -392,3 +391,83 @@ def test_fused_reject_reasons(keys):
     obs = feed_fused.fused_reject_reason(
         g, keys[:100], None, None, lambda *a: None)
     assert obs is not None
+
+
+# ---------------------------------------------------------------------------
+# trace/transfer auditor (ISSUE 7): the §11 budgets hold on a live runner
+# ---------------------------------------------------------------------------
+
+
+from repro.analysis.audit import EdgeAuditor, TraceBudget  # noqa: E402
+from repro.topology import RecordBatch  # noqa: E402
+
+
+def _mixed_batches(keys, values, sizes):
+    """Slices of the key stream at the given (uneven) batch sizes, with a
+    shared monotone clock.  The first record carries the global max key so
+    the runner's key-capacity axis is fixed from the warm-up feed on —
+    leaving the pow2 pad bucket as the only shape axis under audit."""
+    total = sum(sizes)
+    ks = np.resize(keys, total).copy()
+    ks[0] = ks.max()
+    vs = np.resize(values, total)
+    ts = np.arange(total, dtype=np.float64) / 2e4
+    out, lo = [], 0
+    for n in sizes:
+        out.append(RecordBatch(keys=ks[lo:lo + n],
+                               timestamps=ts[lo:lo + n],
+                               values=vs[lo:lo + n]))
+        lo += n
+    return out
+
+
+def test_auditor_retrace_budget_mixed_batch_sizes(keys, values):
+    # feeds spanning three pow2 pad buckets: 900/700→1024, 1500/2000→2048,
+    # 64→64.  TRACE_COUNT must stay within the documented signature set —
+    # one trace per distinct bucket at most, zero for repeats.
+    sizes = (900, 1_500, 64, 700, 1_500, 900, 2_000, 64)
+    batches = _mixed_batches(keys, values, sizes)
+    sess = SimulatorEngine(mode="fused").open(_topo("pkg"),
+                                              arrival_rate=2e4)
+    sess.feed(batches[0])  # warm-up: creates the runner, pins kcap
+    runner = sess._st["source->agg"].state.device
+    assert runner is not None
+    with TraceBudget(3, what="mixed-bucket sweep"):
+        with EdgeAuditor(runner) as aud:
+            for b in batches[1:]:
+                sess.feed(b)
+    aud.assert_retrace_budget()
+    # every launch dispatched under a documented signature: the pad-bucket
+    # axis takes exactly the three pow2 values, nothing else varies
+    assert {sig[1] for sig in aud.signatures} == {64, 1_024, 2_048}
+    assert aud.dispatches == len(sizes) - 1  # no panes, no events
+    assert all(e.tuples == n
+               for e, n in zip((e for e in aud.events
+                                if e.kind == "segment"), sizes[1:]))
+    sess.close()
+
+
+def test_auditor_sync_budget_pane_boundaries(keys, values):
+    # device→host transfers only at pane flushes and close (HOST_SYNC_POINTS):
+    # feed size == pane stride, so every flush lands on the pane grid and
+    # the close-time drain is the only off-grid sync
+    op = TopoWindowOp(agg="sum", value="payload", size=1_500)
+    src = Source(keys, arrival_rate=2e4, values=values)
+    sess = SimulatorEngine(mode="fused").open(_topo("fg", op),
+                                              arrival_rate=2e4)
+    feeds = list(src.iter_batches(batch_size=1_500))
+    sess.feed(feeds[0])  # warm-up: creates the runner
+    runner = sess._st["source->agg"].state.device
+    with EdgeAuditor(runner, pane_stride=1_500) as aud:
+        for b in feeds[1:]:
+            sess.feed(b)
+        aud.assert_retrace_budget()
+        with aud.expect("close"):
+            rep = sess.close()
+    aud.assert_sync_budget(closed=True)
+    assert aud.dispatches == len(feeds) - 1
+    assert rep.edges[0].n_tuples == keys.shape[0]
+    # the audited feeds flushed their panes on the stride grid
+    flushes = [e for e in aud.events
+               if e.kind == "flush_pane" and e.context == "feed"]
+    assert flushes and all(e.offset % 1_500 == 0 for e in flushes)

@@ -16,8 +16,7 @@ from repro.data.synthetic import zipf_time_evolving
 from repro.serving.engine import Request, ServingEngine
 from repro.topology import build_grouper
 
-SCHEMES = ("sg", "fg", "pkg", "dc", "wc", "fish")
-EXACT_SCHEMES = ("sg", "fg", "pkg")
+from repro.analysis.contracts import EXACT_SCHEMES, SCHEMES
 
 
 def _sim_batched(g, keys, **kw):

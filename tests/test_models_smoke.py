@@ -40,8 +40,8 @@ def test_train_step_smoke(arch):
     params = T.init_params(cfg, key)
     hot = T.init_hotness_state(cfg)
     batch = _batch(cfg, key)
-    loss, out = jax.jit(
-        lambda p, b, h: T.forward_train(p, b, cfg, h))(params, batch, hot)
+    train_fn = jax.jit(lambda p, b, h: T.forward_train(p, b, cfg, h))
+    loss, out = train_fn(params, batch, hot)
     assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
     assert float(loss) > 0
     if cfg.moe is not None:
@@ -56,7 +56,8 @@ def test_prefill_then_decode_continues(arch):
     key = jax.random.PRNGKey(1)
     params = T.init_params(cfg, key)
     batch = _batch(cfg, key, with_labels=False)
-    cache, logits = jax.jit(lambda p, b: T.prefill(p, b, cfg))(params, batch)
+    prefill_fn = jax.jit(lambda p, b: T.prefill(p, b, cfg))
+    cache, logits = prefill_fn(params, batch)
     pv = T.padded_vocab(cfg)
     assert logits.shape == (B, pv)
     assert np.isfinite(np.asarray(logits[:, :cfg.vocab_size])).all()
@@ -64,9 +65,8 @@ def test_prefill_then_decode_continues(arch):
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     emb = (jax.random.normal(key, (B, 1, cfg.d_model), jnp.bfloat16)
            if cfg.embeds_input else None)
-    lg2, cache2 = jax.jit(
-        lambda p, c, t, e: T.decode_step(p, c, t, cfg, e))(
-        params, cache, tok, emb)
+    decode_fn = jax.jit(lambda p, c, t, e: T.decode_step(p, c, t, cfg, e))
+    lg2, cache2 = decode_fn(params, cache, tok, emb)
     assert lg2.shape == (B, pv)
     assert np.isfinite(np.asarray(lg2[:, :cfg.vocab_size])).all()
     assert int(cache2["pos"]) == int(cache["pos"]) + 1
@@ -82,20 +82,19 @@ def test_prefill_decode_consistency(arch):
     params = T.init_params(cfg, key)
     toks = jax.random.randint(key, (1, 16), 0, cfg.vocab_size)
 
+    prefill_fn = jax.jit(lambda p, b: T.prefill(p, b, cfg))
+
     # full prefill over 16 tokens
-    _, logits_full = jax.jit(lambda p, b: T.prefill(p, b, cfg))(
-        params, {"tokens": toks})
+    _, logits_full = prefill_fn(params, {"tokens": toks})
 
     # prefill over 15, then decode token 16
-    cache, _ = jax.jit(lambda p, b: T.prefill(p, b, cfg))(
-        params, {"tokens": toks[:, :15]})
+    cache, _ = prefill_fn(params, {"tokens": toks[:, :15]})
     # decode caches from prefill are sized to the prefix; rebuild at 16 for
     # attention archs by re-prefilling into a padded cache is framework work —
     # here we exercise the ssm/hybrid paths whose state is seq-independent.
     if cfg.ssm is not None or cfg.rglru is not None:
-        logits_step, _ = jax.jit(
-            lambda p, c, t: T.decode_step(p, c, t, cfg))(
-            params, cache, toks[:, 15:16])
+        decode_fn = jax.jit(lambda p, c, t: T.decode_step(p, c, t, cfg))
+        logits_step, _ = decode_fn(params, cache, toks[:, 15:16])
         np.testing.assert_allclose(
             np.asarray(logits_step[0, :cfg.vocab_size]),
             np.asarray(logits_full[0, :cfg.vocab_size]),
@@ -144,12 +143,11 @@ def test_moe_hotness_evolves_and_decays():
     params = T.init_params(cfg, key)
     hot = T.init_hotness_state(cfg)
     batch = _batch(cfg, key)
-    _, out = jax.jit(lambda p, b, h: T.forward_train(p, b, cfg, h))(
-        params, batch, hot)
+    train_fn = jax.jit(lambda p, b, h: T.forward_train(p, b, cfg, h))
+    _, out = train_fn(params, batch, hot)
     h1 = out["new_hotness"]
     assert float(jnp.sum(h1)) > 0
-    _, out2 = jax.jit(lambda p, b, h: T.forward_train(p, b, cfg, h))(
-        params, batch, h1)
+    _, out2 = train_fn(params, batch, h1)
     h2 = out2["new_hotness"]
     # inter-epoch decay: h2 = alpha*h1 + counts, counts equal for same batch
     alpha = cfg.moe.fish_alpha

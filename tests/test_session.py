@@ -29,9 +29,8 @@ from repro.topology import (Edge, RecordBatch, ScopedEvent,
                             Stage, Topology, WindowOp as TopoWindowOp,
                             config_for, hashed_fanout)
 
-SCHEMES = ("sg", "fg", "pkg", "dc", "wc", "fish")
-EXACT_SCHEMES = ("sg", "fg", "pkg")
-DRIFT_SCHEMES = ("dc", "wc", "fish")
+from repro.analysis.contracts import (DRIFT_SCHEMES, EXACT_SCHEMES,
+                                      SCHEMES)
 
 
 @pytest.fixture(scope="module")

@@ -22,9 +22,8 @@ from repro.topology import (SCHEME_CONFIGS, DChoicesConfig, Edge, FishConfig,
                             SimulatorEngine, Source, Stage, Topology,
                             config_for, hashed_fanout, project_mod)
 
-SCHEMES = ("sg", "fg", "pkg", "dc", "wc", "fish")
-EXACT_SCHEMES = ("sg", "fg", "pkg")
-DRIFT_SCHEMES = ("dc", "wc", "fish")
+from repro.analysis.contracts import (DRIFT_SCHEMES, EXACT_SCHEMES,
+                                      SCHEMES)
 
 
 @pytest.fixture(scope="module")
