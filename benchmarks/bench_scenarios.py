@@ -14,8 +14,17 @@ continue, churn storm) is run for all six grouping schemes through
   (heartbeat failure detection, restart policy, elastic pool remap
   accounting, straggler mitigation) in the loop.
 
+The open-loop suite (ISSUE 8) rides along under the separate
+``open_loop`` output key: :func:`repro.scenarios.default_open_loop_scenarios`
+(flash crowd over steady Zipf with a bounded shedding ingress queue;
+diurnal rate with a mid-run hot-key flip under deferring admission) is run
+for all schemes through the arrival-schedule-driven
+:class:`~repro.load.OpenLoopDriver`, reporting the admission identity,
+queueing delay and total (queue + service) latency.
+
 Emits ``artifacts/BENCH_scenarios.json``.  Module-level ``N_TUPLES`` /
-``N_REQUESTS`` are the CI-scale knobs (see .github/workflows/ci.yml).
+``N_REQUESTS`` / ``OL_RATE`` / ``OL_HORIZON`` are the CI-scale knobs (see
+.github/workflows/ci.yml).
 """
 
 from __future__ import annotations
@@ -24,7 +33,8 @@ import json
 import os
 import time
 
-from repro.scenarios import (default_scenarios, run_dspe_scenario,
+from repro.scenarios import (default_open_loop_scenarios, default_scenarios,
+                             run_dspe_scenario, run_open_loop_scenario,
                              run_serving_scenario)
 from repro.state import WindowOp
 
@@ -35,6 +45,8 @@ N_KEYS = 2_400
 WORKERS = 8
 N_REQUESTS = 160
 ONLY = ()  # scenario-name filter; empty = the full default suite
+OL_RATE = 2_000.0   # open-loop mean offered rate (tuples/s)
+OL_HORIZON = 4.0    # open-loop arrival horizon (s)
 
 
 def run(rep: Reporter) -> dict:
@@ -74,6 +86,26 @@ def run(rep: Reporter) -> dict:
                     f"done={r['completed']}/{r['submitted']} "
                     f"p99={r['latency_p99']:.1f}")
         out["scenarios"][sc.name] = row
+    out["open_loop"] = {"rate": OL_RATE, "horizon": OL_HORIZON,
+                        "scenarios": {}}
+    for ol in default_open_loop_scenarios(rate=OL_RATE, horizon=OL_HORIZON,
+                                          workers=WORKERS // 2):
+        row = {}
+        for scheme in SCHEMES:
+            t0 = time.time()
+            r = run_open_loop_scenario(ol, scheme, engine="batched",
+                                       drain=True)
+            us = (time.time() - t0) * 1e6
+            if not r["identity_ok"]:
+                raise AssertionError(
+                    f"admission identity broken: {ol.name}/{scheme}: {r}")
+            row[scheme] = r
+            p99 = r["total_latency_p99"]
+            rep.add(f"scenario/open_loop/{ol.name}/{scheme}", us,
+                    f"offered={r['offered']} shed={r['shed']} "
+                    f"total_p99={p99:.4f}" if p99 is not None else
+                    f"offered={r['offered']} shed={r['shed']}")
+        out["open_loop"]["scenarios"][ol.name] = row
     os.makedirs(ARTIFACT_DIR, exist_ok=True)
     path = os.path.join(ARTIFACT_DIR, "BENCH_scenarios.json")
     with open(path, "w") as f:

@@ -1,0 +1,195 @@
+"""Max sustainable load at a fixed p99 SLO, per grouping scheme (ISSUE 8).
+
+The headline open-loop experiment: a fixed worker pool (load-independent
+per-tuple cost, so aggregate capacity ``CAP`` does not move with offered
+load), swept over offered-load fractions of that capacity under two
+arrival regimes —
+
+* **steady** — constant rate, steady Zipf keys;
+* **drift_flash** — hot-key flip at mid-run *plus* a 2× flash crowd —
+  the paper's time-evolving adversary, where load balance must be
+  re-won while the queue is already growing.
+
+A load point is **sustainable** for a scheme when the run sheds nothing
+and total p99 (queueing delay + service latency, billed per tuple by the
+open-loop driver) stays within ``SLO_P99``.  ``max_sustainable_frac`` is
+the highest swept fraction that passes; the JSON records whether FISH
+sustains at least the best baseline under drift (the ISSUE-8 acceptance
+line).
+
+Two demonstration blocks ride along:
+
+* **overload** — offered ≈ 2× capacity through a *bounded* ingress queue
+  (shed policy + backpressure) on both the simulator and the
+  arrival-paced serving engine; the admission identity
+  ``offered == fed + shed_ingress + residual`` is checked exactly, and
+  the serving run also exercises the engine-level bounded replica queues
+  (``shed_engine``).
+* **autoscale** — a flash crowd against the p99 autoscaler with keyed
+  window state attached: membership events stream through the elastic
+  pool and state migration is billed to the destination workers' clocks
+  (``migration_stall`` > 0 whenever the scaler acted).
+
+Emits ``artifacts/BENCH_slo.json``.  Module-level knobs (``HORIZON``,
+``FRACS``, ``N_KEYS``) are the CI-scale levers (see
+.github/workflows/ci.yml).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.scenarios import OpenLoopScenario, run_open_loop_scenario
+from repro.state import WindowOp
+
+from .common import ARTIFACT_DIR, Reporter, SCHEMES
+
+WORKERS = 8
+CAP = 4_000.0          # aggregate pool capacity, tuples/s (cost = W/CAP each)
+HORIZON = 4.0          # seconds of arrivals per run
+TICK = 0.05            # arrival tick = one feed
+N_KEYS = 1_024
+FRACS = (0.5, 0.6, 0.7, 0.8, 0.9)   # offered load as a fraction of CAP
+SLO_P99 = 0.2          # seconds of *total* latency (100× the per-tuple cost)
+BASELINES = tuple(s for s in SCHEMES if s != "fish")
+
+
+def _scenario(variant: str, frac: float, **kw) -> OpenLoopScenario:
+    """One swept load point: rate = frac·CAP with utilization = frac keeps
+    the per-worker cost at W/CAP for every point — the pool never gets
+    faster just because more load is offered."""
+    drift = variant == "drift_flash"
+    return OpenLoopScenario(
+        f"slo_{variant}", workers=WORKERS, rate=frac * CAP,
+        utilization=frac, horizon=HORIZON, tick=TICK, num_keys=N_KEYS,
+        z=1.4 if drift else 1.2,
+        flip_time=0.5 * HORIZON if drift else None,
+        flash=(0.45 * HORIZON, 0.2 * HORIZON, 2.0) if drift else None,
+        **kw)
+
+
+def _sweep(rep: Reporter) -> dict:
+    out = {}
+    for variant in ("steady", "drift_flash"):
+        per_scheme = {}
+        for scheme in SCHEMES:
+            points = []
+            best = 0.0
+            for frac in FRACS:
+                # defer policy + unbounded-in-practice queue: the sweep
+                # measures latency under load, not the admission policy —
+                # nothing may be lost, overload must show up as delay
+                ol = _scenario(variant, frac, queue_capacity=1_000_000,
+                               policy="defer", backpressure=None)
+                t0 = time.time()
+                r = run_open_loop_scenario(ol, scheme, engine="batched",
+                                           drain=True)
+                us = (time.time() - t0) * 1e6
+                ok = (r["shed"] == 0 and r["residual"] == 0
+                      and r["total_latency_p99"] is not None
+                      and r["total_latency_p99"] <= SLO_P99)
+                if ok and frac > best:
+                    best = frac
+                points.append({
+                    "frac": frac, "offered": r["offered"],
+                    "total_latency_p99": r["total_latency_p99"],
+                    "queue_delay_p99": r["queue_delay_p99"],
+                    "service_latency_p99": r["latency_p99"],
+                    "shed": r["shed"], "sustainable": ok,
+                })
+                rep.add(f"slo/{variant}/{scheme}/frac={frac}", us,
+                        f"p99={r['total_latency_p99']:.4f} ok={ok}")
+            per_scheme[scheme] = {"points": points,
+                                  "max_sustainable_frac": best}
+        out[variant] = per_scheme
+    drift = out["drift_flash"]
+    best_baseline = max(drift[s]["max_sustainable_frac"] for s in BASELINES)
+    out["fish_sustains_best_drift"] = (
+        drift["fish"]["max_sustainable_frac"] >= best_baseline)
+    out["best_baseline_drift_frac"] = best_baseline
+    rep.add("slo/fish_vs_best_baseline", 0.0,
+            f"fish={drift['fish']['max_sustainable_frac']} "
+            f"baseline={best_baseline} "
+            f"ok={out['fish_sustains_best_drift']}")
+    return out
+
+
+def _overload(rep: Reporter) -> dict:
+    """Offered ≈ 2× capacity through a bounded queue: the ingress queue
+    must stay bounded, the shed must be billed, and the identity must
+    close exactly — on both engines."""
+    out = {}
+    cap = max(int(0.05 * 2.0 * CAP * HORIZON), 64)
+    ol = _scenario("steady", 2.0, queue_capacity=cap, policy="shed",
+                   backpressure=0.25)
+    for engine in ("batched", "serving"):
+        t0 = time.time()
+        r = run_open_loop_scenario(ol, "fish", engine=engine, drain=True,
+                                   ticks_per_second=CAP / 4.0,
+                                   max_queue_per_replica=32)
+        us = (time.time() - t0) * 1e6
+        out[engine] = {k: r[k] for k in (
+            "offered", "fed", "shed", "shed_ingress", "shed_engine",
+            "deferred", "residual", "identity_ok", "queue_depth_peak",
+            "queue_delay_avg", "queue_delay_p99")}
+        out[engine]["queue_capacity"] = cap
+        if not r["identity_ok"]:
+            raise AssertionError(
+                f"open-loop admission identity broken ({engine}): {r}")
+        if r["shed"] <= 0:
+            raise AssertionError(
+                f"2x-capacity overload shed nothing ({engine}): {r}")
+        rep.add(f"slo/overload/{engine}", us,
+                f"shed={r['shed']}/{r['offered']} "
+                f"depth_peak={r['queue_depth_peak']} identity=ok")
+    return out
+
+
+def _autoscale(rep: Reporter) -> dict:
+    """Flash crowd against the p99 autoscaler with keyed window state:
+    scale-out must fire, and the state migration it forces must be billed
+    to the engine clock (migration_stall > 0)."""
+    ol = OpenLoopScenario(
+        "slo_autoscale", workers=max(WORKERS // 2, 2), rate=0.7 * CAP / 2,
+        utilization=0.7, horizon=HORIZON, tick=TICK, num_keys=N_KEYS,
+        flash=(0.25 * HORIZON, 0.5 * HORIZON, 2.5),
+        queue_capacity=1_000_000, policy="defer", backpressure=None,
+        slo_p99=0.08, max_workers=WORKERS * 2)
+    t0 = time.time()
+    # any key-owning scheme works here; shuffle grouping ("sg") would not —
+    # scattered keys have no owner, so membership changes migrate ~nothing
+    r = run_open_loop_scenario(
+        ol, "fish", engine="batched", drain=True,
+        migration_cost_per_byte=1e-5,
+        window=WindowOp("count", size=max(int(ol.rate * HORIZON), 1)))
+    us = (time.time() - t0) * 1e6
+    out = {k: r[k] for k in (
+        "offered", "fed", "identity_ok", "total_latency_p99",
+        "autoscale_events", "workers_final", "migration_stall")}
+    if not out["autoscale_events"]:
+        raise AssertionError("flash crowd triggered no autoscale actions")
+    if not out["migration_stall"] > 0.0:
+        raise AssertionError("autoscale membership changes billed no "
+                             "migration stall despite keyed window state")
+    rep.add("slo/autoscale", us,
+            f"events={len(out['autoscale_events'])} "
+            f"workers={len(out['workers_final'])} "
+            f"stall={out['migration_stall']:.5f}s")
+    return out
+
+
+def run(rep: Reporter) -> dict:
+    out = {"workers": WORKERS, "capacity": CAP, "horizon": HORIZON,
+           "tick": TICK, "n_keys": N_KEYS, "fracs": list(FRACS),
+           "slo_p99": SLO_P99,
+           "sweep": _sweep(rep),
+           "overload": _overload(rep),
+           "autoscale": _autoscale(rep)}
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, "BENCH_slo.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    rep.add("slo/artifact", 0.0, path)
+    return out

@@ -23,7 +23,7 @@ def main() -> None:
     from . import (bench_breakdown, bench_chash, bench_deploy,
                    bench_feed_fused, bench_grouping, bench_latency,
                    bench_memory, bench_moe, bench_motivating, bench_params,
-                   bench_scenarios, bench_session, bench_state,
+                   bench_scenarios, bench_session, bench_slo, bench_state,
                    bench_topology, roofline)
 
     modules = [
@@ -39,6 +39,7 @@ def main() -> None:
         ("bench_state", bench_state),             # keyed operator state (ISSUE 4)
         ("bench_session", bench_session),         # streaming sessions (ISSUE 5)
         ("bench_feed_fused", bench_feed_fused),   # fused device feeds (ISSUE 6)
+        ("bench_slo", bench_slo),                 # open-loop SLO sweep (ISSUE 8)
         ("bench_deploy", bench_deploy),           # Figs. 18-20
         ("bench_moe", bench_moe),                 # beyond-paper MoE routing
         ("roofline", roofline),                   # §Roofline table

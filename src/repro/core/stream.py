@@ -358,6 +358,7 @@ def simulate_edge(
     state: Optional[EdgeState] = None,
     dt: Optional[float] = None,
     compute_metrics: bool = True,
+    migration_biller: Optional[object] = None,
 ) -> EdgeResult:
     """Run one grouped edge: route ``keys`` through ``grouper`` and advance
     the destination stage's per-worker FIFO queues.
@@ -425,6 +426,15 @@ def simulate_edge(
                   (``EdgeResult.metrics`` is then ``None``) — sessions
                   aggregate latencies across feeds and compute metrics
                   once at close, so per-feed percentile passes are waste.
+    migration_biller: optional :class:`repro.state.migration.MigrationBiller`
+                  (ISSUE 8): after each membership event its pending
+                  per-worker charges — engine-clock stall from migrated
+                  keyed state — are popped and added to the destination
+                  workers' busy time at the event's stream position, so
+                  scale-out's state transfer competes with serving
+                  bandwidth.  Chain its ``on_event`` after the keyed-state
+                  manager's in ``event_observer`` so it sees each event's
+                  migration bill.
 
     ``keys`` must be a 1-D integer array of interned key ids for the batched
     mode (``repro.data.synthetic`` generators emit int32); anything else
@@ -467,11 +477,12 @@ def simulate_edge(
                 return _edge_batched(
                     grouper, keys_arr, times, capacities, arrival_rate,
                     sample_every, sample_noise, events, seed,
-                    event_observer, obs, values, state, dt, compute_metrics)
+                    event_observer, obs, values, state, dt, compute_metrics,
+                    migration_biller)
             return _edge_reference(
                 grouper, keys, times, capacities, arrival_rate,
                 sample_every, sample_noise, events, seed, event_observer,
-                obs, values, state, compute_metrics)
+                obs, values, state, compute_metrics, migration_biller)
         from ..kernels.feed_fused import fused_reject_reason
 
         if not int_keys:
@@ -484,7 +495,8 @@ def simulate_edge(
             return _edge_fused(
                 grouper, keys_arr, times, capacities, arrival_rate,
                 sample_every, sample_noise, events, seed, event_observer,
-                state_sink, values, state, dt, compute_metrics)
+                state_sink, values, state, dt, compute_metrics,
+                migration_biller)
         warnings.warn(
             f"simulate_edge falling back to the batched engine: {reason}",
             UserWarning, stacklevel=2)
@@ -498,12 +510,12 @@ def simulate_edge(
             res = _edge_batched(
                 grouper, keys_arr, times, capacities, arrival_rate,
                 sample_every, sample_noise, events, seed, event_observer,
-                obs, values, state, dt, compute_metrics)
+                obs, values, state, dt, compute_metrics, migration_biller)
         else:
             res = _edge_reference(
                 grouper, keys, times, capacities, arrival_rate,
                 sample_every, sample_noise, events, seed, event_observer,
-                obs, values, state, compute_metrics)
+                obs, values, state, compute_metrics, migration_biller)
         res.state.device = _FUSED_FALLBACK
         return res
     if mode == "batched":
@@ -512,7 +524,8 @@ def simulate_edge(
             return _edge_batched(
                 grouper, keys_arr, times, capacities, arrival_rate,
                 sample_every, sample_noise, events, seed, event_observer,
-                tuple_observer, values, state, dt, compute_metrics)
+                tuple_observer, values, state, dt, compute_metrics,
+                migration_biller)
         warnings.warn(
             f"simulate_edge falling back to the per-tuple reference "
             f"interpreter: keys dtype={keys_arr.dtype} shape="
@@ -523,13 +536,21 @@ def simulate_edge(
     return _edge_reference(
         grouper, keys, times, capacities, arrival_rate,
         sample_every, sample_noise, events, seed, event_observer,
-        tuple_observer, values, state, compute_metrics)
+        tuple_observer, values, state, compute_metrics, migration_biller)
+
+
+def _apply_migration_stall(migration_biller, busy_until) -> None:
+    """Add a membership event's pending migration charges to the destination
+    workers' busy time (tick-billed migration — ISSUE 8)."""
+    for wk, stall in migration_biller.pop_charges().items():
+        busy_until[wk] += stall
 
 
 def _edge_batched(grouper, keys_arr, times, capacities, arrival_rate,
                   sample_every, sample_noise, events, seed,
                   event_observer, tuple_observer=None, values=None,
-                  state=None, dt=None, compute_metrics=True) -> EdgeResult:
+                  state=None, dt=None, compute_metrics=True,
+                  migration_biller=None) -> EdgeResult:
     n = keys_arr.shape[0]
     mem_ev, cap_ev = _split_events(events, n)
     if state is None:
@@ -566,6 +587,8 @@ def _edge_batched(grouper, keys_arr, times, capacities, arrival_rate,
         ev_idx, cap_idx, active = _apply_events(
             lo, mem_ev, ev_idx, cap_ev, cap_idx, grouper, capacities,
             active, event_observer)
+        if migration_biller is not None:
+            _apply_migration_stall(migration_biller, busy_until)
         if times is None:
             seg_times = np.arange(lo, hi, dtype=np.float64) * dt
             now0 = lo * dt
@@ -595,7 +618,7 @@ def _edge_batched(grouper, keys_arr, times, capacities, arrival_rate,
 def _edge_fused(grouper, keys_arr, times, capacities, arrival_rate,
                 sample_every, sample_noise, events, seed, event_observer,
                 state_sink=None, values=None, state=None, dt=None,
-                compute_metrics=True) -> EdgeResult:
+                compute_metrics=True, migration_biller=None) -> EdgeResult:
     """ISSUE 6 fused engine: one jitted device launch per event-free
     segment.  Cut sites are only events and operator pane boundaries —
     capacity-sample points are *not* cuts (the sample snapshots are taken
@@ -662,6 +685,10 @@ def _edge_fused(grouper, keys_arr, times, capacities, arrival_rate,
             ev_idx, cap_idx, active = _apply_events(
                 lo, mem_ev, ev_idx, cap_ev, cap_idx, grouper, capacities,
                 active, event_observer)
+            if migration_biller is not None:
+                # busy_until is host-authoritative here (host_sync above;
+                # run_segment re-uploads it), so billing lands on device
+                _apply_migration_stall(migration_biller, state.busy_until)
             state.active = active
             if ev_idx > mem0:
                 runner.refresh_membership(grouper, state)
@@ -696,7 +723,8 @@ def _edge_fused(grouper, keys_arr, times, capacities, arrival_rate,
 def _edge_reference(grouper, keys, times, capacities, arrival_rate,
                     sample_every, sample_noise, events, seed,
                     event_observer, tuple_observer=None, values=None,
-                    state=None, compute_metrics=True) -> EdgeResult:
+                    state=None, compute_metrics=True,
+                    migration_biller=None) -> EdgeResult:
     n = len(keys)
     mem_ev, cap_ev = _split_events(events, n)
     if state is None:
@@ -740,6 +768,8 @@ def _edge_reference(grouper, keys, times, capacities, arrival_rate,
         ev_idx, cap_idx, active = _apply_events(
             i, mem_ev, ev_idx, cap_ev, cap_idx, grouper, capacities,
             active, event_observer)
+        if migration_biller is not None:
+            _apply_migration_stall(migration_biller, busy_until)
         now = i * dt if times is None else float(times[i])
         worker = grouper.assign(key, now)
         if tuple_observer is not None:

@@ -41,13 +41,17 @@ import numpy as np
 
 from .core import CapacityEvent, MembershipEvent
 from .data.synthetic import piecewise_zipf, zipf_time_evolving
+from .load import (ArrivalProcess, ConstantRate, DiurnalRate, FlashCrowd,
+                   FlipZipfKeys, IngressQueue, OpenLoopDriver, P99Autoscaler,
+                   ZipfKeys)
 from .runtime.elastic import ElasticPool
 from .runtime.fault import HeartbeatMonitor, RestartPolicy
 from .runtime.stragglers import StragglerMitigator
 from .serving.engine import Request, ServingEngine
 from .state import KeyedStateManager, WindowOp, direct_aggregate
 from .topology import (Edge, EdgeReport, RemapAccountant, ScopedEvent,
-                       SimulatorEngine, Source, Stage, Topology, config_for)
+                       ServingTopologyEngine, SimulatorEngine, Source, Stage,
+                       Topology, config_for)
 from .topology.engine import _imbalance, _percentiles
 
 __all__ = [
@@ -56,14 +60,18 @@ __all__ = [
     "CapacitySpec",
     "ChurnOp",
     "Scenario",
+    "OpenLoopScenario",
     "RemapAccountant",  # re-exported from repro.topology.engine
     "build_keys",
     "compile_events",
     "base_capacities",
     "scenario_topology",
+    "open_loop_topology",
     "run_dspe_scenario",
     "run_serving_scenario",
+    "run_open_loop_scenario",
     "default_scenarios",
+    "default_open_loop_scenarios",
 ]
 
 
@@ -499,5 +507,187 @@ def default_scenarios(num_tuples: int = 24_000, num_keys: int = 2_400,
             ),
             churn=(ChurnOp(0.3, "remove", workers - 1),
                    ChurnOp(0.6, "add", workers)),
+        ),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# open-loop scenarios (ISSUE 8): arrival-schedule-driven runs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OpenLoopScenario:
+    """A scenario driven by an *arrival process* instead of a pre-built
+    stream: records arrive on a wall-clock tick grid whether or not the
+    engine keeps up, pass through a bounded ingress queue under an
+    admission ``policy``, and overload shows up as queueing delay / shed —
+    not as a silently stretched input schedule.
+
+    Worker capacity is **load-independent**: ``cost()`` is calibrated so
+    the pool runs at ``utilization`` when offered exactly ``rate``; the
+    diurnal/flash modulation then moves the *actual* utilisation around
+    that operating point.  ``slo_p99`` (seconds, total latency) arms the
+    :class:`~repro.load.P99Autoscaler` between ``workers`` and
+    ``max_workers``."""
+
+    name: str
+    workers: int = 4
+    rate: float = 2_000.0        # mean offered tuples/s
+    horizon: float = 4.0         # seconds of arrivals
+    tick: float = 0.05           # arrival tick (s); one feed per tick
+    num_keys: int = 512
+    z: float = 1.2
+    utilization: float = 0.8     # pool utilisation at the mean rate
+    diurnal_amplitude: float = 0.0       # 0: constant base rate
+    diurnal_period: Optional[float] = None  # default: one cycle per horizon
+    flash: Optional[Tuple[float, float, float]] = None  # (at, dur, magnitude)
+    flip_time: Optional[float] = None    # hot-key flip instant (FlipZipfKeys)
+    queue_capacity: int = 4_096
+    policy: str = "shed"
+    backpressure: Optional[float] = 0.5  # engine-backlog threshold (s)
+    slo_p99: Optional[float] = None      # arm the autoscaler when set
+    max_workers: int = 16
+    seed: int = 0
+
+    def cost(self) -> float:
+        """Seconds/tuple per worker: ``utilization · W / rate``, fixed
+        regardless of the instantaneous offered load."""
+        return self.utilization * self.workers / self.rate
+
+    def rate_fn(self):
+        fn = ConstantRate(self.rate)
+        if self.diurnal_amplitude > 0.0:
+            fn = fn * DiurnalRate(amplitude=self.diurnal_amplitude,
+                                  period=self.diurnal_period or self.horizon)
+        if self.flash is not None:
+            at, duration, magnitude = self.flash
+            fn = fn * FlashCrowd(at=at, duration=duration,
+                                 magnitude=magnitude,
+                                 ramp=min(duration / 4.0, 2 * self.tick))
+        return fn
+
+    def key_fn(self):
+        if self.flip_time is not None:
+            return FlipZipfKeys(self.num_keys, z=self.z,
+                                flip_time=self.flip_time)
+        return ZipfKeys(self.num_keys, z=self.z)
+
+    def arrivals(self) -> ArrivalProcess:
+        """A fresh (deterministically seeded) arrival process per call."""
+        return ArrivalProcess(self.rate_fn(), self.key_fn(),
+                              tick=self.tick, seed=self.seed)
+
+
+def open_loop_topology(ol: OpenLoopScenario, scheme: str,
+                       window: Optional[WindowOp] = None) -> Topology:
+    """One-edge topology with *fixed* per-worker cost (unlike
+    :func:`scenario_topology`, capacity must not depend on offered load —
+    the load sweep is the whole point).  ``window`` attaches keyed state,
+    so autoscaler membership events incur tick-billed state migration."""
+    return Topology(
+        name=ol.name,
+        stages=(Stage(_STAGE, parallelism=ol.workers, cost=ol.cost(),
+                      operator=window),),
+        edges=(Edge("source", _STAGE, config_for(scheme)),),
+    )
+
+
+def run_open_loop_scenario(
+    ol: OpenLoopScenario,
+    scheme: str,
+    engine: str = "batched",
+    drain: bool = True,
+    ticks_per_second: float = 1_000.0,
+    slots_per_replica: int = 4,
+    max_queue_per_replica: Optional[int] = 64,
+    migration_cost_per_byte: float = 0.0,
+    window: Optional[WindowOp] = None,
+) -> Dict:
+    """Drive the scenario open loop and return a flattened report row.
+
+    ``engine`` is a simulator mode (``batched``/``reference``/``fused``)
+    or ``"serving"`` (arrival-paced continuous batching; engine ticks are
+    mapped to arrival seconds via ``ticks_per_second``, and the bounded
+    replica queues add an engine-side shed level below the ingress
+    queue's).  The returned row carries the two-level admission identity
+    fields (``offered == fed + shed_ingress + residual``)."""
+    arrivals = ol.arrivals()
+    topo = open_loop_topology(ol, scheme, window)
+    if engine == "serving":
+        eng = ServingTopologyEngine(
+            slots_per_replica=slots_per_replica,
+            pacing="arrival", ticks_per_second=ticks_per_second,
+            max_queue_per_replica=max_queue_per_replica,
+            migration_ticks_per_byte=migration_cost_per_byte)
+        session = eng.open(topo, arrival_rate=ol.rate)
+    else:
+        sim = SimulatorEngine(mode=engine,
+                              migration_cost_per_byte=migration_cost_per_byte)
+        session = sim.open(topo, arrival_rate=ol.rate)
+    serving = engine == "serving"
+    autoscaler = None
+    if ol.slo_p99 is not None:
+        # receipt latencies are engine-clock (simulator: seconds; serving:
+        # ticks); window/cooldown compare driver seconds and need no scaling
+        slo = ol.slo_p99 * (ticks_per_second if serving else 1.0)
+        autoscaler = P99Autoscaler(
+            _STAGE, slo_p99=slo, workers=range(ol.workers),
+            max_workers=ol.max_workers,
+            window=max(10 * ol.tick, 0.5),
+            cooldown=max(10 * ol.tick, 0.5),
+            sample_keys=range(ol.num_keys))
+    # the serving receipt's backlog is queued *requests*; a threshold of
+    # `backpressure` seconds of work corresponds to rate·backpressure of
+    # them, and the pool drains them at about the provisioned rate
+    driver = OpenLoopDriver(
+        session, IngressQueue(ol.queue_capacity, policy=ol.policy,
+                              seed=ol.seed),
+        backpressure=(None if ol.backpressure is None else
+                      ol.backpressure * (ol.rate if serving else 1.0)),
+        backlog_decay=ol.rate if serving else 1.0,
+        autoscaler=autoscaler)
+    rep = driver.run(arrivals, 0.0, ol.horizon, drain=drain)
+    er = rep.topology.edge(_STAGE)
+    out = {"scenario": ol.name, "scheme": scheme, "engine": engine,
+           "policy": ol.policy,
+           "offered": rep.offered, "fed": rep.fed, "shed": rep.shed,
+           "shed_ingress": rep.shed_ingress, "shed_engine": rep.shed_engine,
+           "deferred": rep.deferred, "residual": rep.residual,
+           "identity_ok": driver.queue.check_identity(),
+           "queue_depth_peak": rep.queue_depth_peak,
+           "queue_delay_avg": rep.queue_delay_avg,
+           "queue_delay_p99": rep.queue_delay_p99,
+           "total_latency_avg": rep.total_latency_avg,
+           "total_latency_p99": rep.total_latency_p99,
+           "autoscale_events": rep.autoscale_events,
+           "workers_final": (autoscaler.workers if autoscaler is not None
+                             else list(range(ol.workers))),
+           "migration_stall": rep.topology.migration_stall}
+    out.update(er.row())
+    return out
+
+
+def default_open_loop_scenarios(rate: float = 2_000.0, horizon: float = 4.0,
+                                workers: int = 4,
+                                num_keys: int = 512) -> List[OpenLoopScenario]:
+    """The two ISSUE-8 open-loop scenarios: a flash crowd over a steady
+    Zipf workload (overload → bounded queue + shed), and a diurnal rate
+    with a mid-run hot-key flip (drift under time-varying load, deferred
+    admission so nothing is lost)."""
+    return [
+        OpenLoopScenario(
+            "flash_crowd", workers=workers, rate=rate, horizon=horizon,
+            num_keys=num_keys, z=1.2,
+            flash=(0.4 * horizon, 0.25 * horizon, 3.0),
+            queue_capacity=max(int(0.05 * rate * horizon), 64),
+            policy="shed", backpressure=0.25,
+        ),
+        OpenLoopScenario(
+            "diurnal_hot_key_flip", workers=workers, rate=rate,
+            horizon=horizon, num_keys=num_keys, z=1.4,
+            diurnal_amplitude=0.5, flip_time=0.5 * horizon,
+            queue_capacity=max(int(0.05 * rate * horizon), 64),
+            policy="defer", backpressure=0.5,
         ),
     ]

@@ -38,6 +38,9 @@ class Request:
     target_tokens: int
     finished: float = -1.0
     replica: int = -1
+    #: tick at which the request won a decode slot (-1 while queued) —
+    #: ``started - arrival`` is its time-in-queue (ISSUE 8 observability)
+    started: float = -1.0
 
 
 @dataclasses.dataclass
@@ -49,6 +52,12 @@ class EngineMetrics:
     session_replicas: int          # Σ replicas holding state per session
     session_replicas_norm: float   # normalised to 1 replica/session
     dropped: int
+    # ISSUE 8 observability: the autoscaler's input signals
+    queue_depth_peak: int = 0      # max Σ_r queued requests seen at any tick
+    in_flight_peak: int = 0        # max Σ_r active decode slots at any tick
+    shed: int = 0                  # requests rejected by admission control
+    time_in_queue_avg: float = 0.0
+    time_in_queue_p99: float = 0.0
 
 
 class ServingEngine:
@@ -60,6 +69,7 @@ class ServingEngine:
         grouping: Union[str, "SchemeConfig"] = "fish",
         fish_params: Optional[FishParams] = None,
         step_fn: Optional[Callable[[int, List[dict]], None]] = None,
+        max_queue_per_replica: Optional[int] = None,
     ):
         from ..topology.configs import FishConfig, SchemeConfig, config_for
 
@@ -89,6 +99,12 @@ class ServingEngine:
         self._token_budget = np.zeros(num_replicas)
         self._next_slot = [0] * num_replicas  # round-robin decode cursor
         self.total_tokens = 0
+        # ISSUE 8: bounded ingress queue + migration stall + observability
+        self.max_queue_per_replica = max_queue_per_replica
+        self.shed = 0
+        self._stall = np.zeros(num_replicas)  # remaining stall ticks
+        self.queue_depth_peak = 0
+        self.in_flight_peak = 0
 
     @property
     def alive(self) -> List[int]:
@@ -96,21 +112,39 @@ class ServingEngine:
 
     # -- ingress -------------------------------------------------------------
     def submit(self, req: Request) -> int:
+        """Route and enqueue one request.  With a bounded ingress queue
+        (``max_queue_per_replica``) a request routed to a full replica queue
+        is *shed* — counted in ``self.shed``, not enqueued — and -1 is
+        returned (ISSUE 8 admission control)."""
         replica = self.router.assign(req.session, self.now)
+        if (self.max_queue_per_replica is not None
+                and len(self.queues[replica]) >= self.max_queue_per_replica):
+            self.shed += 1
+            return -1
         req.replica = replica
         self.queues[replica].append(req)
+        depth = sum(len(q) for q in self.queues)
+        if depth > self.queue_depth_peak:
+            self.queue_depth_peak = depth
         return replica
 
     # -- one scheduling tick ---------------------------------------------------
     def tick(self) -> None:
         self.now += 1.0
         for r in sorted(self._alive):
+            if self._stall[r] > 0:
+                # migration stall: the replica is ingesting migrated session
+                # state this tick — no admission, no decode (ISSUE 8
+                # tick-billed migration)
+                self._stall[r] -= 1.0
+                continue
             sm = self.slots[r]
             q = self.queues[r]
             while q and sm.free:
                 req = q.popleft()
                 slot = sm.allocate(req.request_id, req.session, self.now)
                 sm.active[slot]["req"] = req
+                req.started = self.now
             # decode: each replica advances `speed` tokens per tick *total*,
             # spread round-robin over its active slots; a cursor carries the
             # rotation across passes and ticks so no slot is starved when
@@ -139,12 +173,26 @@ class ServingEngine:
                         req.finished = self.now
                         self.done.append(req)
                         sm.release(slot)
+        in_flight = sum(len(self.slots[r].active) for r in self._alive)
+        if in_flight > self.in_flight_peak:
+            self.in_flight_peak = in_flight
 
     def run(self, until_done: int, max_ticks: int = 100_000) -> None:
+        """Tick until ``until_done`` submitted requests are accounted for.
+        Shed requests count toward completion (ISSUE 8 satellite): they can
+        never reach ``done``, so excluding them would spin the loop to
+        ``max_ticks`` whenever admission dropped anything, silently
+        inflating reported ticks."""
         t = 0
-        while len(self.done) < until_done and t < max_ticks:
+        while len(self.done) + self.shed < until_done and t < max_ticks:
             self.tick()
             t += 1
+
+    def stall_replica(self, r: int, ticks: float) -> None:
+        """Bill migrated-state ingest to replica ``r``: it neither admits
+        nor decodes for the next ``ticks`` scheduler ticks (ISSUE 8 — scale
+        out genuinely competes with serving bandwidth)."""
+        self._stall[r] += float(ticks)
 
     # -- fault tolerance / elasticity -------------------------------------------
     def fail_replica(self, r: int) -> int:
@@ -168,6 +216,7 @@ class ServingEngine:
         self.num_replicas += 1
         self.speeds = np.concatenate([self.speeds, [speed]])
         self._token_budget = np.concatenate([self._token_budget, [0.0]])
+        self._stall = np.concatenate([self._stall, [0.0]])
         self._next_slot.append(0)
         self.slots.append(SlotManager(slots))
         self.queues.append(deque())
@@ -192,6 +241,8 @@ class ServingEngine:
     def metrics(self) -> EngineMetrics:
         lats = np.array([r.finished - r.arrival for r in self.done
                          if r.finished >= 0])
+        tiq = np.array([r.started - r.arrival for r in self.done
+                        if r.finished >= 0 and r.started >= 0])
         sessions = self.router.replicas
         total_rep = sum(len(v) for v in sessions.values())
         return EngineMetrics(
@@ -202,4 +253,10 @@ class ServingEngine:
             session_replicas=total_rep,
             session_replicas_norm=total_rep / max(len(sessions), 1),
             dropped=0,
+            queue_depth_peak=self.queue_depth_peak,
+            in_flight_peak=self.in_flight_peak,
+            shed=self.shed,
+            time_in_queue_avg=float(tiq.mean()) if len(tiq) else 0.0,
+            time_in_queue_p99=(float(np.percentile(tiq, 99))
+                               if len(tiq) else 0.0),
         )

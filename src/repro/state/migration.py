@@ -34,17 +34,72 @@ import numpy as np
 
 from .store import ENTRY_BYTES, make_store
 
-__all__ = ["MigrationStats", "apply_membership_change"]
+__all__ = ["MigrationStats", "MigrationBiller", "apply_membership_change"]
 
 
 @dataclasses.dataclass
 class MigrationStats:
-    """Cumulative migration cost across membership events."""
+    """Cumulative migration cost across membership events.
+
+    ``last_recv_entries`` / ``last_recv_replays`` are reset at the start of
+    each :func:`apply_membership_change` call and record, per *target*
+    worker, how many entries (migrate policy) or folded tuples (rebuild
+    policy) that event shipped to it — the per-destination bill a
+    :class:`MigrationBiller` converts into engine-clock stall time
+    (ISSUE 8: scale-out competes with serving bandwidth)."""
 
     events: int = 0
     bytes_moved: int = 0
     entries_moved: int = 0
     tuples_replayed: int = 0
+    last_recv_entries: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    last_recv_replays: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+
+
+class MigrationBiller:
+    """Turns one membership event's migrated state into per-worker stall
+    time on the engine clock (seconds for the DSPE simulator, scheduler
+    ticks for the serving engine) — ISSUE 8 tick-billed migration.
+
+    Chain :meth:`on_event` *after* the owning
+    :class:`~repro.state.window.KeyedStateManager`'s ``on_event`` in the
+    engine's observer sequence: the manager runs the migration protocol at
+    ``post_membership`` and leaves the per-target bill on
+    ``stats.last_recv_*``; this observer converts it to pending charges.
+    The engine interpreter then pops the charges and adds them to the
+    destination workers' busy time at the event's stream position, so a
+    scale-out's state transfer delays exactly the tuples that route to the
+    new worker while it is still ingesting state.
+    """
+
+    def __init__(self, stats: MigrationStats, cost_per_byte: float,
+                 cost_per_replay: float = 0.0):
+        self.stats = stats
+        self.cost_per_byte = float(cost_per_byte)
+        self.cost_per_replay = float(cost_per_replay)
+        self.billed_total = 0.0
+        self._pending: Dict[int, float] = {}
+
+    def on_event(self, kind: str, grouper, event=None) -> None:
+        if kind != "post_membership":
+            return
+        for w, entries in self.stats.last_recv_entries.items():
+            charge = entries * ENTRY_BYTES * self.cost_per_byte
+            if charge > 0.0:
+                self._pending[w] = self._pending.get(w, 0.0) + charge
+        for w, replays in self.stats.last_recv_replays.items():
+            charge = replays * self.cost_per_replay
+            if charge > 0.0:
+                self._pending[w] = self._pending.get(w, 0.0) + charge
+
+    def pop_charges(self) -> Dict[int, float]:
+        """Drain the per-worker stall accumulated since the last pop."""
+        out = self._pending
+        self._pending = {}
+        self.billed_total += sum(out.values())
+        return out
 
 
 def apply_membership_change(open_windows, pre_routes: Dict[int, Optional[int]],
@@ -59,6 +114,8 @@ def apply_membership_change(open_windows, pre_routes: Dict[int, Optional[int]],
     live_set = set(live)
     post_routes: Dict[int, Optional[int]] = {}
     rr = 0  # round-robin cursor for no-affinity (SG) entries
+    stats.last_recv_entries = {}
+    stats.last_recv_replays = {}
     for win in open_windows:
         for w in sorted(win.stores):
             st = win.stores[w]
@@ -100,6 +157,13 @@ def apply_membership_change(open_windows, pre_routes: Dict[int, Optional[int]],
                 last = win.last_idx.get(w, -1)
                 if last > win.last_idx.get(t, -1):
                     win.last_idx[t] = last
+                if op.migration == "migrate":
+                    stats.last_recv_entries[t] = (
+                        stats.last_recv_entries.get(t, 0) + int(m.sum()))
+                else:
+                    stats.last_recv_replays[t] = (
+                        stats.last_recv_replays.get(t, 0)
+                        + int(cnts[m].sum()))
             stats.entries_moved += int(moved_keys.shape[0])
             if op.migration == "migrate":
                 stats.bytes_moved += int(moved_keys.shape[0]) * ENTRY_BYTES

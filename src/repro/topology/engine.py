@@ -41,6 +41,7 @@ import numpy as np
 
 from ..core.stream import (CapacityEvent, MembershipEvent, edge_metrics,
                            simulate_edge)
+from ..state.migration import MigrationBiller
 from ..state.window import KeyedStateManager, StateReport
 from .configs import build_grouper
 from .graph import (SOURCE, Edge, RecordBatch, ScopedEvent, Source, Stage,
@@ -48,6 +49,7 @@ from .graph import (SOURCE, Edge, RecordBatch, ScopedEvent, Source, Stage,
 
 __all__ = [
     "EdgeReport",
+    "FeedReceipt",
     "TopologyReport",
     "Engine",
     "Session",
@@ -104,6 +106,17 @@ class EdgeReport:
     partial_entries: Optional[int] = None
     migration_bytes: int = 0
     tuples_replayed: int = 0
+    # ISSUE 8 observability: ingress-queue pressure + admission + the
+    # engine-clock stall billed for migrated keyed state.  The serving
+    # engine fills the queue/in-flight/shed columns (its ingress queues are
+    # real); the virtual-time simulator reports 0 there but does bill
+    # migration_stall (seconds added to destination workers' busy time).
+    queue_depth_peak: int = 0
+    in_flight_peak: int = 0
+    shed: int = 0
+    time_in_queue_avg: float = 0.0
+    time_in_queue_p99: float = 0.0
+    migration_stall: float = 0.0
 
     def row(self) -> Dict[str, float]:
         """The paper-metric columns (same keys as ``StreamMetrics.row``)."""
@@ -142,6 +155,20 @@ class TopologyReport:
     state: Dict[str, Dict] = dataclasses.field(default_factory=dict)
     migration_bytes: int = 0
     tuples_replayed: int = 0
+    # ISSUE 8 open-loop accounting.  ``shed`` / ``queue_depth_peak`` /
+    # ``migration_stall`` aggregate the edge columns at close; the offered /
+    # deferred / residual / time-in-queue / autoscale columns are stamped by
+    # the open-loop driver (:mod:`repro.load`) — a closed-loop run reports
+    # offered == n_source_tuples and zeros elsewhere.
+    offered: int = 0
+    shed: int = 0
+    deferred: int = 0
+    residual: int = 0
+    queue_depth_peak: int = 0
+    time_in_queue_avg: float = 0.0
+    time_in_queue_p99: float = 0.0
+    migration_stall: float = 0.0
+    autoscale_events: List[Dict] = dataclasses.field(default_factory=list)
 
     def edge(self, name: str) -> EdgeReport:
         """Lookup by full edge name (``"src->dst"``) or by dst stage."""
@@ -152,6 +179,34 @@ class TopologyReport:
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class FeedReceipt:
+    """What ``Session.feed`` hands back per batch (ISSUE 8): the feedback
+    channel an open-loop driver closes its control loops over — admission
+    control watches ``backlog``/``queue_depth``, the p99 autoscaler watches
+    ``latency_p99`` — without waiting for the close-time report.
+
+    Units are the engine's clock (seconds for the DSPE simulator, scheduler
+    ticks for the serving engine).  ``latencies`` holds this feed's raw
+    per-tuple source-edge service latencies (serving: the latencies of
+    requests that *finished* during this feed); ``backlog`` is how far the
+    slowest source-edge worker's busy-until runs past the stream clock
+    (serving: current total queued requests)."""
+
+    n: int
+    t_end: float
+    latency_avg: float = 0.0
+    latency_p99: float = 0.0
+    backlog: float = 0.0
+    latencies: Optional[np.ndarray] = None
+    # serving-engine extras (the simulator reports 0: feeding is
+    # instantaneous in virtual time, so nothing queues inside the engine)
+    queue_depth: int = 0
+    in_flight: int = 0
+    done: int = 0
+    shed: int = 0
 
 
 @runtime_checkable
@@ -166,10 +221,12 @@ class Session(Protocol):
     through their downstream subtrees, and return the same
     :class:`TopologyReport` schema ``run`` produces).  All per-edge state —
     FIFO backlog, grouper epochs, keyed window state, remap accounting —
-    carries across feeds.
+    carries across feeds.  ``feed`` returns a per-batch
+    :class:`FeedReceipt` (``None`` for an empty batch) — ISSUE 8's
+    open-loop feedback channel; closed-loop callers are free to ignore it.
     """
 
-    def feed(self, batch: RecordBatch) -> None:
+    def feed(self, batch: RecordBatch) -> Optional[FeedReceipt]:
         ...
 
     def advance(self, events: Sequence[ScopedEvent]) -> None:
@@ -265,6 +322,13 @@ class _BaseSession:
             e2e_latency_p99=p99, edges=reports, state=state,
             migration_bytes=sum(r.migration_bytes for r in reports),
             tuples_replayed=sum(r.tuples_replayed for r in reports),
+            # closed-loop default: everything fed was offered; the open-loop
+            # driver overwrites these with its admission accounting
+            offered=self._n_source,
+            shed=sum(r.shed for r in reports),
+            queue_depth_peak=max((r.queue_depth_peak for r in reports),
+                                 default=0),
+            migration_stall=sum(r.migration_stall for r in reports),
         )
         return self._report
 
@@ -480,7 +544,9 @@ class SimulatorEngine:
 
     def __init__(self, mode: str = "batched", utilization: float = 0.9,
                  sample_every: int = 5_000, sample_noise: float = 0.02,
-                 seed: int = 0, remap_sample: int = 512):
+                 seed: int = 0, remap_sample: int = 512,
+                 migration_cost_per_byte: float = 0.0,
+                 migration_cost_per_replay: float = 0.0):
         if mode not in ("batched", "reference", "fused"):
             raise ValueError(f"unknown mode {mode!r}")
         self.mode = mode
@@ -489,6 +555,12 @@ class SimulatorEngine:
         self.sample_noise = sample_noise
         self.seed = seed
         self.remap_sample = remap_sample
+        # ISSUE 8 tick-billed migration: seconds of destination-worker stall
+        # per migrated state byte (policy "migrate") / per replayed tuple
+        # (policy "rebuild").  0 keeps migration free — the pre-ISSUE-8
+        # behaviour, and bit-identical reports
+        self.migration_cost_per_byte = migration_cost_per_byte
+        self.migration_cost_per_replay = migration_cost_per_replay
         self.name = f"dspe-{mode}"
 
     def open(self, topology: Topology, *,
@@ -508,10 +580,11 @@ class _SimEdge:
 
     __slots__ = ("stage", "grouper", "caps", "state", "acct", "mgr",
                  "lats", "n", "seed", "dt_hint", "finishes", "roots", "srep",
-                 "emitted", "dispatches")
+                 "emitted", "dispatches", "biller")
 
     def __init__(self, stage: Stage, grouper, caps: np.ndarray, seed: int,
-                 dt_hint: Optional[float], mgr: Optional[KeyedStateManager]):
+                 dt_hint: Optional[float], mgr: Optional[KeyedStateManager],
+                 biller: Optional[MigrationBiller] = None):
         self.stage = stage
         self.grouper = grouper
         self.caps = caps
@@ -527,6 +600,7 @@ class _SimEdge:
         self.srep: Optional[StateReport] = None
         self.emitted = 0             # window partials already sent downstream
         self.dispatches = 0          # fused-mode device launches (ISSUE 6)
+        self.biller = biller         # tick-billed migration (ISSUE 8)
 
 
 class SimulatorSession(_BaseSession):
@@ -553,10 +627,12 @@ class SimulatorSession(_BaseSession):
         self._src_times: List[np.ndarray] = []
 
     # -- protocol --------------------------------------------------------------
-    def feed(self, batch: RecordBatch) -> None:
-        """Ingest the next record batch and run it through the topology."""
+    def feed(self, batch: RecordBatch) -> Optional[FeedReceipt]:
+        """Ingest the next record batch and run it through the topology.
+        Returns this feed's :class:`FeedReceipt` (source-edge latencies +
+        engine backlog — the open-loop feedback channel)."""
         if not self._check_batch(batch):
-            return
+            return None
         n = len(batch)
         ts = batch.timestamps
         base = self._n_source
@@ -565,6 +641,26 @@ class SimulatorSession(_BaseSession):
         self._src_times.append(ts)
         streams = {SOURCE: (batch.keys, ts, roots, batch.values)}
         self._pump(streams, lambda r: ts[r - base])
+        return self._feed_receipt(n, float(ts[-1]))
+
+    def _feed_receipt(self, n: int, t_end: float) -> FeedReceipt:
+        lats: List[np.ndarray] = []
+        backlog = 0.0
+        for e in self._edges:
+            if e.src != SOURCE:
+                continue
+            st = self._st.get(e.name)
+            if st is None or not st.lats:
+                continue
+            lats.append(st.lats[-1])
+            if st.state is not None:
+                backlog = max(backlog,
+                              float(st.state.busy_until.max()) - t_end)
+        arr = np.concatenate(lats) if lats else np.empty(0)
+        avg, _, _, p99 = _percentiles(arr)
+        return FeedReceipt(n=n, t_end=t_end, latency_avg=avg,
+                           latency_p99=p99, backlog=max(backlog, 0.0),
+                           latencies=arr)
 
     # -- internals -------------------------------------------------------------
     def _close_pump(self, state: Dict[str, Dict]) -> None:
@@ -622,6 +718,13 @@ class SimulatorSession(_BaseSession):
             # the grouper gets no oracle capacities: capacity-aware schemes
             # must *discover* the true P_w through the periodic (noisy)
             # sampling hook, exactly like the legacy single-hop engine
+            mgr0 = _stage_manager(stage)
+            biller = None
+            if mgr0 is not None and (eng.migration_cost_per_byte
+                                     or eng.migration_cost_per_replay):
+                biller = MigrationBiller(mgr0.migration,
+                                         eng.migration_cost_per_byte,
+                                         eng.migration_cost_per_replay)
             st = self._st[edge.name] = _SimEdge(
                 stage=stage,
                 grouper=build_grouper(edge.grouping, stage.parallelism),
@@ -629,7 +732,7 @@ class SimulatorSession(_BaseSession):
                 seed=eng.seed + 17 * idx,
                 dt_hint=(1.0 / self._rate
                          if edge.src == SOURCE and self._rate else None),
-                mgr=_stage_manager(stage))
+                mgr=mgr0, biller=biller)
         due, keep = _due_events(self._pending[edge.dst], st.n, in_times)
         self._pending[edge.dst] = keep
         # probe sample only while membership events are outstanding —
@@ -641,19 +744,28 @@ class SimulatorSession(_BaseSession):
         st.acct.offset = st.n  # events below are feed-local; report global
         mgr = st.mgr
         fused = eng.mode == "fused"
+        if mgr is None:
+            observer = st.acct
+        elif st.biller is not None:
+            # biller after the manager: the manager's post_membership runs
+            # the migration protocol that leaves the per-target bill
+            observer = _chain_observers(st.acct, mgr.on_event,
+                                        st.biller.on_event)
+        else:
+            observer = _chain_observers(st.acct, mgr.on_event)
         res = simulate_edge(
             st.grouper, in_keys, times=in_times,
             arrival_rate=self._rate or 10_000.0, mode=eng.mode,
             capacities=st.caps if st.state is None else None,
             sample_every=eng.sample_every, sample_noise=eng.sample_noise,
             events=due, seed=st.seed,
-            event_observer=(st.acct if mgr is None
-                            else _chain_observers(st.acct, mgr.on_event)),
+            event_observer=observer,
             tuple_observer=(mgr.feed
                             if (mgr is not None and not fused) else None),
             state_sink=(mgr if (mgr is not None and fused) else None),
             values=in_values, state=st.state, dt=st.dt_hint,
             compute_metrics=False,  # aggregated once at close
+            migration_biller=st.biller,
         )
         st.state = res.state
         st.lats.append(res.latencies)
@@ -698,6 +810,8 @@ class SimulatorSession(_BaseSession):
                           remap_events=st.acct.per_event,
                           remap_frac_mean=st.acct.frac_mean(),
                           dispatches=st.dispatches,
+                          migration_stall=(st.biller.billed_total
+                                           if st.biller else 0.0),
                           **metrics.row(), **_state_extra(st.srep))
 
 
@@ -743,12 +857,32 @@ class ServingTopologyEngine:
 
     def __init__(self, slots_per_replica: int = 4, max_requests: int = 256,
                  utilization: float = 0.8, max_ticks: int = 200_000,
-                 remap_sample: int = 512):
+                 remap_sample: int = 512, pacing: str = "drain",
+                 ticks_per_second: float = 1.0,
+                 max_queue_per_replica: Optional[int] = None,
+                 migration_ticks_per_byte: float = 0.0,
+                 migration_ticks_per_replay: float = 0.0):
+        if pacing not in ("drain", "arrival"):
+            raise ValueError(
+                f"unknown pacing {pacing!r}; 'drain' (closed loop: each "
+                f"feed runs until its requests finish) or 'arrival' (open "
+                f"loop — ISSUE 8: each feed's requests are submitted at "
+                f"their wall-clock arrival ticks and the engine only runs "
+                f"up to the feed's last arrival; close() drains)")
         self.slots_per_replica = slots_per_replica
         self.max_requests = max_requests
         self.utilization = utilization
         self.max_ticks = max_ticks
         self.remap_sample = remap_sample
+        # ISSUE 8 open-loop serving: arrival pacing maps source wall-clock
+        # seconds onto the tick grid via ticks_per_second; a bounded ingress
+        # queue sheds on overflow; migrated keyed state stalls the
+        # destination replica for ticks ∝ bytes shipped / tuples replayed
+        self.pacing = pacing
+        self.ticks_per_second = ticks_per_second
+        self.max_queue_per_replica = max_queue_per_replica
+        self.migration_ticks_per_byte = migration_ticks_per_byte
+        self.migration_ticks_per_replay = migration_ticks_per_replay
 
     def open(self, topology: Topology, *,
              arrival_rate: Optional[float] = None) -> "ServingSession":
@@ -766,14 +900,16 @@ class _ServingEdge:
     """One grouped edge's carried session state (serving engine)."""
 
     __slots__ = ("stage", "eng", "acct", "mgr", "reqs", "in_times", "n",
-                 "tick", "roots", "srep", "emitted")
+                 "tick", "roots", "srep", "emitted", "biller", "done_seen")
 
     def __init__(self, stage: Stage, eng,
-                 mgr: Optional[KeyedStateManager]):
+                 mgr: Optional[KeyedStateManager],
+                 biller: Optional[MigrationBiller] = None):
         self.stage = stage
         self.eng = eng
         self.acct = RemapAccountant([])
         self.mgr = mgr
+        self.biller = biller  # tick-billed migration (ISSUE 8)
         self.reqs: List = []
         self.in_times: List[np.ndarray] = []
         self.n = 0
@@ -781,6 +917,7 @@ class _ServingEdge:
         self.roots: List[np.ndarray] = []  # operator stages only
         self.srep: Optional[StateReport] = None
         self.emitted = 0  # window partials already sent downstream
+        self.done_seen = 0  # eng.done cursor (per-feed finish latencies)
 
 
 class ServingSession(_BaseSession):
@@ -807,12 +944,20 @@ class ServingSession(_BaseSession):
             for e in topology.edges
         )
         self._dt = 1.0 / max(per_tick, 1e-9)
+        # per-feed source-edge finish latencies (FeedReceipt channel)
+        self._feed_lats: List[np.ndarray] = []
 
     # -- protocol --------------------------------------------------------------
-    def feed(self, batch: RecordBatch) -> None:
-        """Ingest the next record batch (subsampled to ``max_requests``)."""
+    def feed(self, batch: RecordBatch) -> Optional[FeedReceipt]:
+        """Ingest the next record batch (subsampled to ``max_requests``).
+        With ``pacing="drain"`` (closed loop) records arrive on the
+        bottleneck-paced tick grid and the feed runs until they finish;
+        with ``pacing="arrival"`` (open loop — ISSUE 8) they arrive at
+        their wall-clock timestamps × ``ticks_per_second`` and the engine
+        only ticks up to the feed's last arrival — queues grow under
+        overload and ``close()`` drains the backlog."""
         if not self._check_batch(batch):
-            return
+            return None
         keys, ts, vals = batch.keys, batch.timestamps, batch.values
         if keys.shape[0] > self.engine.max_requests:
             pick = np.linspace(0, keys.shape[0] - 1,
@@ -823,15 +968,76 @@ class ServingSession(_BaseSession):
         base = self._n_source
         self._n_source += n
         self._resolve_at_time(ts, base)
-        src_ticks = np.arange(base, base + n, dtype=np.float64) * self._dt
+        if self.engine.pacing == "arrival":
+            src_ticks = np.asarray(ts, dtype=np.float64) \
+                * self.engine.ticks_per_second
+        else:
+            src_ticks = np.arange(base, base + n, dtype=np.float64) \
+                * self._dt
         streams = {SOURCE: (keys, src_ticks,
                             np.arange(base, base + n, dtype=np.int64),
                             vals)}
+        done0, shed0 = self._done_shed()
+        lat0 = len(self._feed_lats)
         self._pump(streams)
+        done1, shed1 = self._done_shed()
+        arr = (np.concatenate(self._feed_lats[lat0:])
+               if len(self._feed_lats) > lat0 else np.empty(0))
+        avg, _, _, p99 = _percentiles(arr)
+        depth = in_flight = 0
+        for st in self._st.values():
+            depth += sum(len(q) for q in st.eng.queues)
+            in_flight += sum(len(st.eng.slots[r].active)
+                             for r in st.eng.alive)
+        return FeedReceipt(n=n, t_end=float(src_ticks[-1]),
+                           latency_avg=avg, latency_p99=p99,
+                           backlog=float(depth), latencies=arr,
+                           queue_depth=depth, in_flight=in_flight,
+                           done=done1 - done0, shed=shed1 - shed0)
+
+    def _done_shed(self):
+        done = sum(len(st.eng.done) for st in self._st.values())
+        shed = sum(st.eng.shed for st in self._st.values())
+        return done, shed
 
     # -- internals -------------------------------------------------------------
     def _close_pump(self, state: Dict[str, Dict]) -> None:
+        if self.engine.pacing == "arrival":
+            self._drain()
         self._pump({}, state=state)
+
+    def _drain(self) -> None:
+        """Open-loop close: tick every edge's engine until each submitted
+        request is accounted for (finished or shed), then collect the
+        deferred sink e2e latencies (measured from each request's arrival
+        tick — for the single-edge open-loop topologies source arrival and
+        edge arrival coincide)."""
+        for edge in self._edges:
+            st = self._st.get(edge.name)
+            if st is None:
+                continue
+            eng = st.eng
+            while (len(eng.done) + eng.shed < st.n
+                   and st.tick < self.engine.max_ticks):
+                eng.tick()
+                st.tick += 1
+            self._total_time = max(self._total_time, float(eng.now))
+            if edge.dst in self._sinks:
+                fins = np.array([r.finished for r in st.reqs])
+                arrs = np.array([r.arrival for r in st.reqs])
+                done = fins >= 0
+                self._e2e.append((fins - arrs)[done])
+
+    def _submit(self, st, req, in_keys, in_values, i) -> None:
+        """Admit one request; keyed state is fed only for admitted requests
+        (a shed request touches no operator state — honest accounting)."""
+        replica = st.eng.submit(req)
+        if replica < 0:  # shed by the bounded ingress queue
+            return
+        if st.mgr is not None:  # routed exactly once, at ingress
+            st.mgr.feed(in_keys[i:i + 1], np.array([replica]),
+                        None if in_values is None
+                        else in_values[i:i + 1])
 
     def _resolve_at_time(self, ts: np.ndarray, base: int) -> None:
         """Lower time-addressed events onto stage-input tuple indices: the
@@ -886,13 +1092,22 @@ class ServingSession(_BaseSession):
         if st is None:
             caps = stage.worker_capacities(1.0)  # relative speeds only
             speeds = (1.0 / caps) / (1.0 / caps).mean()
+            mgr0 = _stage_manager(stage)
+            biller = None
+            if mgr0 is not None and (cfg.migration_ticks_per_byte
+                                     or cfg.migration_ticks_per_replay):
+                biller = MigrationBiller(mgr0.migration,
+                                         cfg.migration_ticks_per_byte,
+                                         cfg.migration_ticks_per_replay)
             st = self._st[edge.name] = _ServingEdge(
                 stage=stage,
-                eng=ServingEngine(stage.parallelism,
-                                  slots_per_replica=cfg.slots_per_replica,
-                                  tokens_per_tick=speeds,
-                                  grouping=edge.grouping),
-                mgr=_stage_manager(stage))
+                eng=ServingEngine(
+                    stage.parallelism,
+                    slots_per_replica=cfg.slots_per_replica,
+                    tokens_per_tick=speeds,
+                    grouping=edge.grouping,
+                    max_queue_per_replica=cfg.max_queue_per_replica),
+                mgr=mgr0, biller=biller)
         pending = self._pending[edge.dst]
         hi = st.n + m
         due = sorted((e for e in pending
@@ -904,8 +1119,15 @@ class ServingSession(_BaseSession):
             st.acct.extend_sample(_sample_keys(in_keys, cfg.remap_sample),
                                   cfg.remap_sample)
         mgr = st.mgr
-        observer = (st.acct if mgr is None
-                    else _chain_observers(st.acct, mgr.on_event))
+        if mgr is None:
+            observer = st.acct
+        elif st.biller is not None:
+            # biller after the manager: the manager's post_membership runs
+            # the migration protocol that leaves the per-target bill
+            observer = _chain_observers(st.acct, mgr.on_event,
+                                        st.biller.on_event)
+        else:
+            observer = _chain_observers(st.acct, mgr.on_event)
         reqs_f = [Request(st.n + i, int(k), arrival=float(t),
                           target_tokens=1)
                   for i, (k, t) in enumerate(zip(in_keys.tolist(),
@@ -915,31 +1137,55 @@ class ServingSession(_BaseSession):
         if mgr is not None:
             st.roots.append(np.asarray(in_roots))
         eng = st.eng
-        target = len(eng.done) + m
         tick = st.tick
         nxt = 0
-        while len(eng.done) < target and tick < cfg.max_ticks:
-            while due and due[0].at <= st.n + nxt:
-                self._apply_event(eng, due.pop(0), observer)
-            while nxt < m and in_times[nxt] <= tick:
-                eng.submit(reqs_f[nxt])
-                if mgr is not None:  # routed exactly once, at ingress
-                    mgr.feed(in_keys[nxt:nxt + 1],
-                             np.array([reqs_f[nxt].replica]),
-                             None if in_values is None
-                             else in_values[nxt:nxt + 1])
+        if cfg.pacing == "arrival":
+            # open loop (ISSUE 8): submit at arrival ticks, run the engine
+            # only up to this feed's last arrival — no waiting for
+            # completions, so overload piles up in the ingress queues
+            end_tick = int(np.ceil(float(in_times[-1])))
+            while (nxt < m or tick < end_tick) and tick < cfg.max_ticks:
+                while due and due[0].at <= st.n + nxt:
+                    self._apply_event(st, due.pop(0), observer)
+                while nxt < m and in_times[nxt] <= tick:
+                    self._submit(st, reqs_f[nxt], in_keys, in_values, nxt)
+                    nxt += 1
+                eng.tick()
+                tick += 1
+            # arrivals sitting exactly on the final tick boundary
+            while nxt < m:
+                self._submit(st, reqs_f[nxt], in_keys, in_values, nxt)
                 nxt += 1
-            eng.tick()
-            tick += 1
+        else:
+            target = len(eng.done) + eng.shed + m
+            while len(eng.done) + eng.shed < target \
+                    and tick < cfg.max_ticks:
+                while due and due[0].at <= st.n + nxt:
+                    self._apply_event(st, due.pop(0), observer)
+                while nxt < m and in_times[nxt] <= tick:
+                    self._submit(st, reqs_f[nxt], in_keys, in_values, nxt)
+                    nxt += 1
+                eng.tick()
+                tick += 1
         st.tick = tick
         st.n += m
+        if edge.src == SOURCE:
+            new_done = eng.done[st.done_seen:]
+            st.done_seen = len(eng.done)
+            self._feed_lats.append(np.array(
+                [r.finished - r.arrival for r in new_done]))
         finishes = np.array([r.finished for r in reqs_f])
         done = finishes >= 0
         if done.any():
             self._total_time = max(self._total_time,
                                    float(finishes[done].max()))
         if stage.name in self._sinks:
-            self._e2e.append((finishes - in_roots * self._dt)[done])
+            if cfg.pacing == "arrival":
+                # open loop: most of this feed's requests are still queued;
+                # e2e is collected once at close, after the drain
+                pass
+            else:
+                self._e2e.append((finishes - in_roots * self._dt)[done])
         elif mgr is not None:
             # windows that closed during this feed go downstream now; the
             # remainder is released at close() (incremental emission)
@@ -967,6 +1213,7 @@ class ServingSession(_BaseSession):
         lats = (finishes - in_times)[done]
         avg, p50, p95, p99 = _percentiles(lats)
         router = st.eng.router
+        em = st.eng.metrics()
         return EdgeReport(
             edge=edge.name, src=edge.src, dst=edge.dst,
             scheme=edge.grouping.scheme, workers=stage.parallelism,
@@ -980,9 +1227,16 @@ class ServingSession(_BaseSession):
             remap_events=st.acct.per_event,
             remap_frac_mean=st.acct.frac_mean(),
             dropped=int(st.n - done.sum()),
+            queue_depth_peak=em.queue_depth_peak,
+            in_flight_peak=em.in_flight_peak,
+            shed=em.shed,
+            time_in_queue_avg=em.time_in_queue_avg,
+            time_in_queue_p99=em.time_in_queue_p99,
+            migration_stall=(st.biller.billed_total if st.biller else 0.0),
             **_state_extra(st.srep))
 
-    def _apply_event(self, eng, event, observer) -> None:
+    def _apply_event(self, st, event, observer) -> None:
+        eng = st.eng
         if isinstance(event, MembershipEvent):
             observer("pre_membership", eng.router, event)
             target = {int(w) for w in event.workers}
@@ -997,6 +1251,12 @@ class ServingSession(_BaseSession):
                 eng.add_replica(speed=1.0,
                                 slots=self.engine.slots_per_replica)
             observer("post_membership", eng.router, event)
+            if st.biller is not None:
+                # tick-billed migration (ISSUE 8): the keyed state this
+                # event shipped stalls its destination replicas — they
+                # neither admit nor decode while ingesting it
+                for wk, ticks in st.biller.pop_charges().items():
+                    eng.stall_replica(wk, ticks)
         elif isinstance(event, CapacityEvent):
             for wk, cap in event.capacities.items():
                 eng.set_replica_speed(int(wk), 1.0 / max(float(cap), 1e-9))

@@ -75,3 +75,75 @@ def test_set_replica_speed_updates_router():
     assert eng.speeds[1] == 0.25
     # EMA sample moved the estimate toward 4.0 s/token
     assert eng.router.estimator.capacities[1] > 2.0
+
+
+# ---------------------------------------------------------------------------
+# bounded replica queues + open-loop accounting (ISSUE 8 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_queue_sheds_and_run_still_terminates():
+    """With bounded per-replica queues, overload sheds; ``run(until_done)``
+    must count shed requests toward completion or it would spin forever
+    waiting for requests that will never finish."""
+    eng = ServingEngine(num_replicas=2, slots_per_replica=1,
+                        grouping="fish", max_queue_per_replica=2)
+    for i in range(40):
+        eng.submit(Request(i, f"s{i % 4}", arrival=0.0, target_tokens=3))
+    assert eng.shed > 0
+    eng.run(until_done=40, max_ticks=2_000)
+    # terminated by the done+shed count, not by the tick ceiling
+    assert len(eng.done) + eng.shed == 40
+    assert len(eng.done) < 40
+    m = eng.metrics()
+    assert m.shed == eng.shed
+    assert m.queue_depth_peak <= 2 * 2
+
+
+def test_unbounded_queue_never_sheds():
+    eng = ServingEngine(num_replicas=2, slots_per_replica=1, grouping="fish")
+    for i in range(40):
+        eng.submit(Request(i, f"s{i % 4}", arrival=0.0, target_tokens=3))
+    assert eng.shed == 0
+    eng.run(until_done=40)
+    assert len(eng.done) == 40
+
+
+def test_shed_submit_returns_sentinel_and_is_not_queued():
+    eng = ServingEngine(num_replicas=1, slots_per_replica=1,
+                        grouping="fish", max_queue_per_replica=1)
+    rs = [eng.submit(Request(i, "s", arrival=0.0, target_tokens=2))
+          for i in range(5)]
+    # requests enter slots only on tick(): 1 queued admitted, 4 shed
+    assert rs.count(-1) == eng.shed == 4
+    assert sum(len(q) for q in eng.queues) == 1
+
+
+def test_time_in_queue_metrics_cover_finished_requests():
+    eng = ServingEngine(num_replicas=1, slots_per_replica=1, grouping="fish")
+    for i in range(6):
+        eng.submit(Request(i, "s", arrival=0.0, target_tokens=2))
+    eng.run(until_done=6)
+    m = eng.metrics()
+    # serialized on one slot: later requests waited strictly longer
+    assert m.time_in_queue_p99 > 0.0
+    assert m.time_in_queue_avg > 0.0
+    assert m.time_in_queue_p99 >= m.time_in_queue_avg
+    assert m.in_flight_peak == 1
+    for r in eng.done:
+        assert r.started >= r.arrival
+
+
+def test_stall_replica_pauses_decode_for_exact_ticks():
+    eng = ServingEngine(num_replicas=1, slots_per_replica=2, grouping="fish")
+    eng.submit(Request(0, "s", arrival=0.0, target_tokens=3))
+    eng.stall_replica(0, 5)
+    for _ in range(5):
+        eng.tick()
+    assert eng.total_tokens == 0  # stalled: decoded nothing
+    for _ in range(5):
+        eng.tick()
+    assert eng.total_tokens > 0  # resumed right after the stall
+    eng.run(until_done=1)
+    # 3 tokens at speed 1 + 5 stall ticks
+    assert eng.done[0].finished == pytest.approx(8.0)
