@@ -22,6 +22,12 @@ routed-stream-exact in every scheme).
 
 Emits ``artifacts/BENCH_feed_fused.json``.  Module-level constants are
 the CI-scale knobs (see .github/workflows/ci.yml).
+
+The run ends with the ISSUE 9 telemetry-overhead guard: paired fused
+sessions with telemetry off/on at the largest batch size, asserting the
+enabled steady-state p50 stays within ``OBS_OVERHEAD_BUDGET`` (and that
+enabling changes no dispatch count).  The paired ratio lands in
+``artifacts/BENCH_obs_overhead.json``.
 """
 
 from __future__ import annotations
@@ -49,6 +55,12 @@ BATCH_SIZES = (256, 1_024, 4_096, 16_384)
 SCHEMES = ("sg", "fg", "pkg", "fish")
 REPS = 2  # sessions per (scheme, batch) — steady-state samples pool across
 MIN_STEADY = 48  # sample floor per engine: p50 must survive machine drift
+# ISSUE 9 overhead contract: enabled/disabled steady-state p50 ratio bound,
+# measured on paired back-to-back sessions at the largest batch size
+OBS_OVERHEAD_BUDGET = 1.05
+OBS_REPS = 6
+OBS_BATCH = 16_384
+OBS_SCHEME = "fish"
 
 
 def _reps(bs: int) -> int:
@@ -70,9 +82,10 @@ def _topology(scheme) -> Topology:
     )
 
 
-def _feed_loop(mode: str, scheme: str, src: Source, bs: int):
+def _feed_loop(mode: str, scheme: str, src: Source, bs: int, telemetry=None):
     eng = SimulatorEngine(mode=mode)
-    session = eng.open(_topology(scheme), arrival_rate=ARRIVAL_RATE)
+    session = eng.open(_topology(scheme), arrival_rate=ARRIVAL_RATE,
+                       telemetry=telemetry)
     per_feed = []
     for batch in src.iter_batches(batch_size=bs):
         t0 = time.time()
@@ -148,4 +161,55 @@ def run(rep: Reporter) -> dict:
     with open(path, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
     rep.add("feed_fused/artifact", 0.0, path)
+    out["obs_overhead"] = _obs_overhead(rep, src)
     return out
+
+
+def _obs_overhead(rep: Reporter, src: Source) -> dict:
+    """ISSUE 9 overhead guard: telemetry-on vs telemetry-off fused
+    sessions, paired back-to-back per rep so machine-speed drift cancels
+    out of each ratio.  The artifact is written *before* the assert fires
+    so a budget breach still leaves its evidence on disk."""
+    from repro.obs.telemetry import Telemetry
+
+    steady_off, steady_on, ratios = [], [], []
+    for it in range(OBS_REPS):
+        t_off, r_off = _feed_loop("fused", OBS_SCHEME, src, OBS_BATCH)
+        t_on, r_on = _feed_loop("fused", OBS_SCHEME, src, OBS_BATCH,
+                                telemetry=Telemetry(enabled=True))
+        s_off = t_off[1:] or t_off
+        s_on = t_on[1:] or t_on
+        steady_off += s_off
+        steady_on += s_on
+        ratios.append(float(np.median(s_on))
+                      / max(float(np.median(s_off)), 1e-12))
+        if it:
+            continue
+        ef_off, ef_on = r_off.edges[0], r_on.edges[0]
+        # instrumentation observes, never reshapes: the launch count and
+        # the routed stream are unchanged by turning telemetry on
+        assert ef_on.dispatches == ef_off.dispatches, (
+            ef_on.dispatches, ef_off.dispatches)
+        assert ef_on.n_tuples == ef_off.n_tuples
+        assert r_on.state["agg"]["merged"] == r_off.state["agg"]["merged"]
+    ratio = float(np.median(ratios))
+    row = {
+        "scheme": OBS_SCHEME,
+        "batch_size": OBS_BATCH,
+        "reps": OBS_REPS,
+        "budget": OBS_OVERHEAD_BUDGET,
+        "disabled_ms_p50": float(np.median(steady_off)) * 1e3,
+        "enabled_ms_p50": float(np.median(steady_on)) * 1e3,
+        "overhead_ratio_p50": ratio,
+        "ratios": ratios,
+    }
+    path = os.path.join(ARTIFACT_DIR, "BENCH_obs_overhead.json")
+    with open(path, "w") as f:
+        json.dump(row, f, indent=2, sort_keys=True)
+    rep.add(f"feed_fused/obs_overhead/b{OBS_BATCH}",
+            row["enabled_ms_p50"] * 1e3,
+            f"{ratio:.3f}x disabled (budget {OBS_OVERHEAD_BUDGET}x)")
+    assert ratio <= OBS_OVERHEAD_BUDGET, (
+        f"telemetry overhead {ratio:.3f}x exceeds "
+        f"{OBS_OVERHEAD_BUDGET}x budget ({path})")
+    return row

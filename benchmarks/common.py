@@ -85,6 +85,7 @@ class Reporter:
     def __init__(self):
         self.rows: List[Dict] = []
         self.failures: List[Dict] = []
+        self._trace = None  # TraceWriter for the module now running, if any
 
     def timeit(self, name: str, fn: Callable, derived_fn=None):
         t0 = time.time()
@@ -99,9 +100,28 @@ class Reporter:
         self.rows.append({"name": name, "us_per_call": round(us, 1),
                           "derived": derived})
 
+    def attach_trace(self, writer) -> None:
+        """Bind the currently-recording :class:`~repro.obs.export.TraceWriter`
+        so a failing module's trace gets sealed instead of truncated."""
+        self._trace = writer
+
     def add_failure(self, name: str, error: BaseException):
         self.failures.append({"name": name,
                               "error": f"{type(error).__name__}: {error}"})
+        # ISSUE 9 bugfix: a module that dies mid-run must flush its partial
+        # trace as *valid* JSON — whatever the bundle collected before the
+        # crash is written out, then abort() seals the event array and
+        # renames the tmp file into place with an ``aborted`` stamp
+        if self._trace is not None and not self._trace.closed:
+            try:
+                from repro.obs import telemetry
+                tel = telemetry.get_telemetry()
+                if tel.enabled:
+                    self._trace.write_telemetry(tel)
+            except Exception:
+                pass  # the seal below must happen even if the flush can't
+            self._trace.abort(f"{name}: {type(error).__name__}: {error}")
+        self._trace = None
 
     def csv(self) -> str:
         buf = io.StringIO()

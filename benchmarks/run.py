@@ -2,12 +2,18 @@
 
 Prints ``name,us_per_call,derived`` CSV (plus a summary footer).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig9]
+    PYTHONPATH=src python -m benchmarks.run [--only fig9] [--trace DIR]
+
+``--trace DIR`` records one Perfetto-loadable Chrome trace-event file per
+benchmark module (``DIR/<module>.trace.json``) by enabling process-wide
+telemetry around each ``run()``.  A module that fails still leaves a
+*valid* sealed trace (stamped ``aborted``) — never truncated JSON.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
 
@@ -18,6 +24,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark module name")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="record a Chrome trace per module into DIR")
     args = ap.parse_args()
 
     from . import (bench_breakdown, bench_chash, bench_deploy,
@@ -49,13 +57,33 @@ def main() -> None:
     for name, mod in modules:
         if args.only and args.only not in name:
             continue
+        writer = None
+        if args.trace:
+            from repro.obs import telemetry
+            from repro.obs.export import TraceWriter
+
+            telemetry.enable(label=name)
+            writer = TraceWriter(
+                os.path.join(args.trace, f"{name}.trace.json"))
+            rep.attach_trace(writer)
         try:
             mod.run(rep)
+            if writer is not None:
+                tel = telemetry.get_telemetry()
+                writer.write_telemetry(tel)
+                writer.close({"label": name,
+                              "metrics": tel.metrics.snapshot(),
+                              "timeline": tel.timeline.export()})
         except Exception as e:
             traceback.print_exc()
             # recorded apart from the measurements: the CSV must carry only
-            # real numbers, never a zero-valued ERROR row
+            # real numbers, never a zero-valued ERROR row — and the partial
+            # trace (if recording) is sealed by add_failure, not truncated
             rep.add_failure(name, e)
+        finally:
+            if args.trace:
+                telemetry.disable()
+                rep.attach_trace(None)
     print(rep.csv())
     if rep.failures:
         print(rep.failure_summary(), file=sys.stderr)

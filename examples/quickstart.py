@@ -18,8 +18,16 @@ engine keeps up, a bounded ingress queue sheds what the backpressured
 driver cannot feed, and the accounting closes exactly —
 ``offered == fed + shed + residual``.
 
+The fourth section is the telemetry spine (ISSUE 9): the same flash
+crowd recorded with process-wide telemetry enabled — every layer lands
+on one Perfetto-loadable trace, and ``python -m repro.obs summarize``
+prints the span/counter/metric overview from the saved file.
+
     PYTHONPATH=src python examples/quickstart.py
 """
+
+import os
+import tempfile
 
 from repro.data.synthetic import zipf_time_evolving
 from repro.load import (ArrivalProcess, ConstantRate, FlashCrowd,
@@ -99,6 +107,41 @@ def open_loop(workers: int) -> None:
           "never as a silently stretched input schedule)")
 
 
+def telemetry_trace(workers: int) -> None:
+    """Record the flash-crowd run with telemetry on: the driver, session,
+    FISH epoch observer and admission control all land on one engine-clock-
+    stamped trace.  The saved file loads in Perfetto (ui.perfetto.dev)."""
+    from repro.obs import telemetry
+
+    rate = 2_000.0
+    topo = Topology(
+        name="quickstart-trace",
+        stages=(Stage("worker", parallelism=workers,
+                      cost=0.8 * workers / rate),),
+        edges=(Edge("source", "worker", config_for("fish")),),
+    )
+    tel = telemetry.enable(label="quickstart flash crowd")
+    try:
+        session = SimulatorEngine().open(topo, arrival_rate=rate)
+        arrivals = ArrivalProcess(
+            ConstantRate(rate) * FlashCrowd(at=1.5, duration=1.0,
+                                            magnitude=3.0),
+            ZipfKeys(1_024, z=1.2), tick=0.05, seed=0)
+        driver = OpenLoopDriver(session, IngressQueue(400, policy="shed"),
+                                backpressure=0.25)
+        rep = driver.run(arrivals, 0.0, 4.0, drain=True)
+    finally:
+        telemetry.disable()
+    path = os.path.join(tempfile.gettempdir(), "quickstart.trace.json")
+    tel.save(path)
+    series = rep.to_dict()["timeline"]["series"]
+    print(f"trace saved to {path} — load it at ui.perfetto.dev")
+    print(f"report timeline series: {', '.join(sorted(series))}")
+    print("summary (python -m repro.obs summarize):")
+    from repro.obs.cli import main as obs_summarize
+    obs_summarize(["summarize", path])
+
+
 def main() -> None:
     workers = 32
     keys = zipf_time_evolving(40_000, num_keys=4_000, z=1.4, seed=0)
@@ -108,6 +151,8 @@ def main() -> None:
     session_api(workers, source)
     print()
     open_loop(workers=8)
+    print()
+    telemetry_trace(workers=8)
 
 
 if __name__ == "__main__":

@@ -31,6 +31,11 @@ exactness-contract   local redefinitions of ``EXACT_SCHEMES`` /
 topology-config      literal ``config_for``/``Stage``/``Edge``/``Topology``
                      constructs that the runtime validators would reject —
                      the build error, promoted to before the run.
+registry-counter-    direct stores to registry-backed counters (ISSUE 9):
+mutation             ``TRACE_COUNT``/``dispatches`` through an imported-module
+                     alias, or ``self.shed``/``queue_depth_peak``/
+                     ``in_flight_peak``/``dispatches`` inside an Engine/Runner
+                     class — writes that bypass the MetricsRegistry cell.
 ==================== =========================================================
 
 The engine is a two-pass design: pass 1 builds a :class:`ModuleInfo`
@@ -60,6 +65,7 @@ RULES: Tuple[str, ...] = (
     "unordered-iteration",
     "exactness-contract",
     "topology-config",
+    "registry-counter-mutation",
 )
 
 _SHIMS = {
@@ -714,6 +720,64 @@ def _extract_topology(call: ast.Call
     return names, pairs
 
 
+# ISSUE 9: counters whose single source of truth is a MetricsRegistry cell.
+# The legacy attribute names survive as properties (read) / setters (external
+# write-compat); *internal* mutation must go through the cell, or enabled and
+# disabled runs drift apart.
+_REGISTRY_BACKED = {"TRACE_COUNT", "shed", "queue_depth_peak",
+                    "in_flight_peak", "dispatches"}
+_REGISTRY_CLASS_MARKERS = ("Engine", "Runner")
+
+
+def _rule_registry_counter_mutation(mod: ModuleInfo) -> List[Finding]:
+    # names this module imported — a store through one of them reaches into
+    # another module's registry-backed counter from the outside
+    imported: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                imported.add(a.asname or a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                if a.name != "*":
+                    imported.add(a.asname or a.name)
+    out = []
+    for node in ast.walk(mod.tree):
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        for t in targets:
+            if not (isinstance(t, ast.Attribute)
+                    and t.attr in _REGISTRY_BACKED
+                    and isinstance(t.value, ast.Name)):
+                continue
+            base = t.value.id
+            scope = getattr(node, "_scope", "<module>")
+            if base == "self":
+                # only Engine/Runner classes hold registry-backed cells;
+                # `self.dispatches` on a plain report row is a data field
+                if not any(m in part for part in scope.split(".")
+                           for m in _REGISTRY_CLASS_MARKERS):
+                    continue
+                out.append(mod.finding(
+                    "registry-counter-mutation", node, "error",
+                    f"direct store to registry-backed `self.{t.attr}` in "
+                    f"`{scope}` bypasses the MetricsRegistry cell — enabled "
+                    f"and disabled telemetry runs would disagree",
+                    f"mutate through the cell (`self._m_*.add/.set/.peak`); "
+                    f"the `{t.attr}` attribute is a read property"))
+            elif base in imported and t.attr in ("TRACE_COUNT", "dispatches"):
+                out.append(mod.finding(
+                    "registry-counter-mutation", node, "error",
+                    f"store to `{base}.{t.attr}` mutates another module's "
+                    f"registry-backed counter from the outside",
+                    "use the owning registry's cell (or the sanctioned "
+                    "reset helper) instead of assigning the attribute"))
+    return out
+
+
 _RULE_FNS = {
     "host-sync-in-jit": _rule_host_sync_in_jit,
     "retrace-hazard": _rule_retrace_hazard,
@@ -723,6 +787,7 @@ _RULE_FNS = {
     "unordered-iteration": _rule_unordered_iteration,
     "exactness-contract": _rule_exactness_contract,
     "topology-config": _rule_topology_config,
+    "registry-counter-mutation": _rule_registry_counter_mutation,
 }
 
 

@@ -77,6 +77,12 @@ class EpochFrequencyTracker:
     ``update(key)`` processes one tuple; every ``epoch`` tuples all counters
     are multiplied by ``alpha`` *before* the tuple is counted (Alg. 1 lines
     4-7 run at the top of the loop body).
+
+    ``epoch_observer`` (ISSUE 9): an optional ``f(tracker)`` fired right
+    after each TimeDecayingUpdate (``epochs_completed`` already advanced) —
+    the telemetry hook for per-epoch hot-set/churn timelines.  Decay is a
+    uniform scaling, so the relative frequencies the observer reads are
+    those the epoch ended with.
     """
 
     def __init__(self, params: FishParams):
@@ -85,6 +91,7 @@ class EpochFrequencyTracker:
         self._tuples_in_epoch = 0
         self.total_seen = 0
         self.epochs_completed = 0
+        self.epoch_observer = None
 
     # -- Alg. 1 main loop body -------------------------------------------------
     def update(self, key) -> None:
@@ -93,6 +100,8 @@ class EpochFrequencyTracker:
             self._time_decaying_update()
             self._tuples_in_epoch = 0
             self.epochs_completed += 1
+            if self.epoch_observer is not None:
+                self.epoch_observer(self)
         counts = self.counts
         if key in counts:
             counts[key] += 1.0
@@ -125,6 +134,8 @@ class EpochFrequencyTracker:
                 self._time_decaying_update()
                 self._tuples_in_epoch = 0
                 self.epochs_completed += 1
+                if self.epoch_observer is not None:
+                    self.epoch_observer(self)
             take = min(n - i, p.epoch - self._tuples_in_epoch)
             self._update_chunk(arr[i : i + take])
             self._tuples_in_epoch += take

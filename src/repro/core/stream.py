@@ -359,6 +359,7 @@ def simulate_edge(
     dt: Optional[float] = None,
     compute_metrics: bool = True,
     migration_biller: Optional[object] = None,
+    telemetry: Optional[object] = None,
 ) -> EdgeResult:
     """Run one grouped edge: route ``keys`` through ``grouper`` and advance
     the destination stage's per-worker FIFO queues.
@@ -435,6 +436,13 @@ def simulate_edge(
                   bandwidth.  Chain its ``on_event`` after the keyed-state
                   manager's in ``event_observer`` so it sees each event's
                   migration bill.
+    telemetry:    optional :class:`repro.obs.Telemetry` bundle (ISSUE 9).
+                  Only the fused engine consumes it here — the
+                  :class:`~repro.kernels.feed_fused.FusedEdgeRunner` mints
+                  its dispatch/pane/sync counters from it and emits launch
+                  spans + FISH epoch timeline points when enabled.  The
+                  host engines are instrumented at the session layer
+                  instead (per-feed spans around :func:`simulate_edge`).
 
     ``keys`` must be a 1-D integer array of interned key ids for the batched
     mode (``repro.data.synthetic`` generators emit int32); anything else
@@ -496,7 +504,7 @@ def simulate_edge(
                 grouper, keys_arr, times, capacities, arrival_rate,
                 sample_every, sample_noise, events, seed, event_observer,
                 state_sink, values, state, dt, compute_metrics,
-                migration_biller)
+                migration_biller, telemetry)
         warnings.warn(
             f"simulate_edge falling back to the batched engine: {reason}",
             UserWarning, stacklevel=2)
@@ -618,7 +626,8 @@ def _edge_batched(grouper, keys_arr, times, capacities, arrival_rate,
 def _edge_fused(grouper, keys_arr, times, capacities, arrival_rate,
                 sample_every, sample_noise, events, seed, event_observer,
                 state_sink=None, values=None, state=None, dt=None,
-                compute_metrics=True, migration_biller=None) -> EdgeResult:
+                compute_metrics=True, migration_biller=None,
+                telemetry=None) -> EdgeResult:
     """ISSUE 6 fused engine: one jitted device launch per event-free
     segment.  Cut sites are only events and operator pane boundaries —
     capacity-sample points are *not* cuts (the sample snapshots are taken
@@ -640,7 +649,8 @@ def _edge_fused(grouper, keys_arr, times, capacities, arrival_rate,
 
     runner = state.device
     if runner is None:
-        runner = FusedEdgeRunner(grouper, state, state_sink)
+        runner = FusedEdgeRunner(grouper, state, state_sink,
+                                 telemetry=telemetry)
         state.device = runner
 
     if dt is None:

@@ -51,6 +51,8 @@ batched engine's sub-chunking.
 
 from __future__ import annotations
 
+import sys as _sys
+import types as _types
 from hashlib import sha1 as _sha1
 from typing import Optional
 
@@ -59,11 +61,22 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..obs.metrics import GLOBAL_METRICS
+from ..obs.telemetry import Telemetry
+
 
 __all__ = ["FusedEdgeRunner", "fused_reject_reason", "TRACE_COUNT",
            "MIN_BUCKET", "KEY_CAP_LIMIT"]
 
-TRACE_COUNT = 0  # bumped at trace time — the compile-count regression probe
+#: The compile-count regression probe, absorbed into the metrics registry
+#: (ISSUE 9): ``feed_fused.TRACE_COUNT`` remains readable *and* writable as
+#: a module attribute (a property on the module class at the bottom of this
+#: file), but the cell itself is this process-wide registry counter —
+#: retraces are a property of the jit cache, not of any one session.
+_TRACE_COUNTER = GLOBAL_METRICS.counter("fused.trace_count")
+
+#: Shared disabled bundle for runners no session bound telemetry to.
+_NULL_TELEMETRY = Telemetry(enabled=False)
 MIN_BUCKET = 64  # smallest pow2 padding bucket for segment lengths
 KEY_CAP_LIMIT = 1 << 21  # dense per-key tables; larger key ids fall back
 
@@ -354,8 +367,7 @@ def _get_seg_fn(sig):
         # `dev` holds the per-key device tables (replica matrix, tracker,
         # pane planes) — donated, so XLA updates them in place instead of
         # copying the ~MB accumulators every launch
-        global TRACE_COUNT
-        TRACE_COUNT += 1  # runs at trace time only
+        _TRACE_COUNTER.add(1)  # runs at trace time only
         a = dict(a)
         a.update(dev)
         a["phantom_w"] = jnp.int32(phantom_w)
@@ -459,12 +471,25 @@ class FusedEdgeRunner:
     into the grouper — called before metrics/close and membership events.
     """
 
-    def __init__(self, grouper, state, sink):
+    def __init__(self, grouper, state, sink, telemetry=None):
         self.scheme = grouper.name
         self.has_pane = sink is not None
         self.fifo_impl = ("assoc" if jax.default_backend() == "tpu"
                           else "scan")
-        self.dispatches = 0       # launches this feed (EdgeResult counter)
+        # ISSUE 9: launch/pane counters live in the metrics registry; the
+        # legacy ``dispatches`` attribute is a property over the counter
+        # (per-feed window on a cumulative cell — see ``begin_feed``)
+        self.tel = telemetry if telemetry is not None else _NULL_TELEMETRY
+        self._c_dispatches = self.tel.metrics.counter(
+            "fused.dispatches", scheme=self.scheme)
+        self._c_pane_flushes = self.tel.metrics.counter(
+            "fused.pane_flushes", scheme=self.scheme)
+        self._c_host_syncs = self.tel.metrics.counter(
+            "fused.host_syncs", scheme=self.scheme)
+        self._feed_base_dispatches = 0
+        self._prev_hot: set = set()   # fish hot set at the last epoch point
+        self._fish_epoch_idx = -1
+        self._fish_epochs_crossed = 0
         self.pane_fed = 0         # tuples in the device pane, unsynced
         self._kcap = 0
         self._w1 = 0
@@ -485,6 +510,14 @@ class FusedEdgeRunner:
         self.pane_cnt = None      # contiguous count plane for the flush scan
         self.pane_last = None
         self._repl_synced = None  # host mirror of already-synced pairs
+
+    @property
+    def dispatches(self) -> int:
+        """Launches in the current feed (the ``EdgeResult.dispatches``
+        source) — a per-feed window on the registry's cumulative
+        ``fused.dispatches`` counter, so the registry and the report can
+        never disagree."""
+        return self._c_dispatches.value - self._feed_base_dispatches
 
     # -- shape management (the recompile boundary; rare) --------------------
     def _ensure_shapes(self, grouper, state, kmax: int) -> None:
@@ -527,6 +560,8 @@ class FusedEdgeRunner:
     def refresh_membership(self, grouper, state) -> None:
         """Rebuild the device ring table + live-set arrays after a
         membership change (or worker-universe growth)."""
+        ring_span = self.tel.tracer.span("fused.refresh_membership",
+                                         cat="fused")
         if self.scheme in _RING_SCHEMES:
             dmax = self._dmax or max(state.busy_until.shape[0], 2)
             self._pts, self._cands = _build_ring_table(grouper.ring, dmax)
@@ -538,23 +573,26 @@ class FusedEdgeRunner:
         self._act_pad[:act.shape[0]] = act
         self._act_mask = np.zeros(self._w1, bool)
         self._act_mask[act] = True
+        ring_span.set(live=int(act.shape[0])).done()
 
     # -- per-feed lifecycle -------------------------------------------------
     def begin_feed(self, grouper, state, keys_arr, values, times,
                    sink) -> None:
-        self.dispatches = 0
-        self._base = float(times[0]) if times.shape[0] else 0.0
-        kmax = int(keys_arr.max()) if keys_arr.shape[0] else 0
-        self._ensure_shapes(grouper, state, kmax)
-        self._feed_keys = keys_arr.astype(np.int32)
-        self._feed_times = times
-        if self.scheme in _RING_SCHEMES:
-            self._feed_hash = self._hashes(keys_arr)
-        if self.has_pane:
-            from ..state.window import tuple_values
+        self._feed_base_dispatches = self._c_dispatches.value
+        with self.tel.tracer.span("fused.begin_feed", cat="fused",
+                                  n=int(keys_arr.shape[0])):
+            self._base = float(times[0]) if times.shape[0] else 0.0
+            kmax = int(keys_arr.max()) if keys_arr.shape[0] else 0
+            self._ensure_shapes(grouper, state, kmax)
+            self._feed_keys = keys_arr.astype(np.int32)
+            self._feed_times = times
+            if self.scheme in _RING_SCHEMES:
+                self._feed_hash = self._hashes(keys_arr)
+            if self.has_pane:
+                from ..state.window import tuple_values
 
-            self._feed_vals = tuple_values(
-                sink.op, keys_arr, payload=values).astype(np.int32)
+                self._feed_vals = tuple_values(
+                    sink.op, keys_arr, payload=values).astype(np.int32)
 
     def _fill_hashes(self, miss: np.ndarray) -> None:
         if miss.shape[0]:
@@ -576,6 +614,10 @@ class FusedEdgeRunner:
     def run_segment(self, grouper, state, lo: int, hi: int) -> np.ndarray:
         """One fused launch for tuples [lo, hi) of the current feed.
         Returns their absolute finish times (float64, host)."""
+        tracer = self.tel.tracer
+        seg_span = tracer.span("fused.segment", cat="fused",
+                               scheme=self.scheme, lo=lo, hi=hi)
+        prep_span = tracer.span("fused.segment.prep", cat="fused")
         m = hi - lo
         n_pad = _bucket(m)
         w1 = self._w1
@@ -643,8 +685,15 @@ class FusedEdgeRunner:
 
         sig = (scheme, n_pad, w1, kcap1, r_n, dmax, self.has_pane, reset,
                self.fifo_impl)
-        out = _get_seg_fn(sig)(dev, a)
-        self.dispatches += 1
+        prep_span.done()
+        # the one device dispatch: routing, FIFO and state-scatter run as
+        # a single fused launch, so the phases share this span (the
+        # ``phases`` arg names them for the Perfetto detail pane — see
+        # DESIGN.md §14 on why they cannot be timed separately)
+        with tracer.span("fused.segment.launch", cat="fused", n_pad=n_pad,
+                         phases="route|fifo|state-scatter"):
+            out = _get_seg_fn(sig)(dev, a)
+        self._c_dispatches.add(1)
 
         # device-resident state stays device-side
         self.repl = out["repl"]
@@ -660,18 +709,26 @@ class FusedEdgeRunner:
         self._repl_dirty = True
 
         # small per-worker vectors ride back with the launch's output fetch
-        state.busy_until[:] = self._base + np.asarray(
-            out["busy"], dtype=np.float64)[:w1 - 1]
-        grouper.assigned_counts[:] = np.asarray(
-            out["counts"], dtype=np.int64)[:cn]
-        if scheme == "sg":
-            grouper._rr = int((grouper._rr + m) % self._act.shape[0])
-        elif scheme == "fish":
-            est = grouper.estimator
-            nw = est.backlog.shape[0]
-            est.backlog[:] = np.asarray(out["ebl"], dtype=np.float64)[:nw]
-            est.assigned[:] = np.asarray(out["eas"], dtype=np.float64)[:nw]
-        return self._base + np.asarray(out["fin"], dtype=np.float64)[:m]
+        with tracer.span("fused.segment.readback", cat="fused"):
+            state.busy_until[:] = self._base + np.asarray(
+                out["busy"], dtype=np.float64)[:w1 - 1]
+            grouper.assigned_counts[:] = np.asarray(
+                out["counts"], dtype=np.int64)[:cn]
+            if scheme == "sg":
+                grouper._rr = int((grouper._rr + m) % self._act.shape[0])
+            elif scheme == "fish":
+                est = grouper.estimator
+                nw = est.backlog.shape[0]
+                est.backlog[:] = np.asarray(out["ebl"],
+                                            dtype=np.float64)[:nw]
+                est.assigned[:] = np.asarray(out["eas"],
+                                             dtype=np.float64)[:nw]
+            fin = self._base + np.asarray(out["fin"], dtype=np.float64)[:m]
+        if (scheme == "fish" and self.tel.enabled
+                and self._fish_epochs_crossed):
+            self._fish_epoch_points(grouper, state, lo, hi)
+        seg_span.done()
+        return fin
 
     def _theta(self, grouper) -> float:
         if self.scheme == "fish":
@@ -688,6 +745,8 @@ class FusedEdgeRunner:
         # up front
         pre = 1 if (g0 > 0 and g0 % p.epoch == 0) else 0
         c_total = (g1 - 1) // p.epoch - g0 // p.epoch + pre
+        self._fish_epochs_crossed = c_total
+        self._fish_epoch_idx = g1 // p.epoch
         now0 = float(self._feed_times[lo])
         do_tick = 0
         elapsed = 0.0
@@ -712,6 +771,36 @@ class FusedEdgeRunner:
                 "do_tick": np.int32(do_tick),
                 "elapsed": np.float32(elapsed)}
 
+    def _fish_epoch_points(self, grouper, state, lo: int, hi: int) -> None:
+        """Per-epoch FISH timeline (telemetry-enabled only): hot-set size
+        and churn read off the *device* tracker after a segment that
+        crossed one or more epoch boundaries, plus the per-worker
+        imbalance at that instant.  ``np.asarray`` of a CPU jax buffer is
+        a zero-copy view, so this costs one small reduction per crossed
+        epoch batch, never per tuple."""
+        epoch_idx = self._fish_epoch_idx
+        self.tel.ctx.epoch_idx = epoch_idx
+        trk = np.asarray(self.trk)[:-1]  # drop the phantom padding row
+        total = float(trk.sum())
+        theta = grouper.params.theta(grouper.num_workers)
+        hot = (set(np.flatnonzero(trk > theta * total).tolist())
+               if total > 0.0 else set())
+        churn = len(hot ^ self._prev_hot)
+        self._prev_hot = hot
+        tl = self.tel.timeline
+        tl.point("fish.hot_set_size", len(hot), epoch_idx=epoch_idx)
+        tl.point("fish.hot_set_churn", churn, epoch_idx=epoch_idx)
+        counts = grouper.assigned_counts
+        act = self._act
+        if act.shape[0] and counts[act].sum() > 0:
+            share = counts[act]
+            tl.point("fish.worker_imbalance",
+                     float(share.max() / max(share.mean(), 1e-12)),
+                     epoch_idx=epoch_idx)
+        self.tel.tracer.instant(
+            "fish.epoch_decay", cat="fish", epoch=epoch_idx,
+            crossed=int(self._fish_epochs_crossed), hot_set=len(hot))
+
     # -- host sync points ---------------------------------------------------
     def flush_pane(self, sink) -> None:
         """Sync the open device pane into the host KeyedStateManager and
@@ -719,6 +808,9 @@ class FusedEdgeRunner:
         can keep filling on device afterwards)."""
         if not self.has_pane or self.pane_fed == 0:
             return
+        self._c_pane_flushes.add(1)
+        flush_span = self.tel.tracer.span("fused.pane_flush", cat="fused",
+                                          pane_fed=self.pane_fed)
         cnt = np.asarray(self.pane_cnt)
         tab = np.asarray(self.pane_tab).reshape(-1, 2)
         last = np.asarray(self.pane_last)
@@ -746,6 +838,7 @@ class FusedEdgeRunner:
         self.pane_cnt = None
         self.pane_last = None
         self.pane_fed = 0
+        flush_span.done()
 
     def host_sync(self, grouper) -> None:
         """Fold device-resident per-key state back into the grouper: new
@@ -753,14 +846,17 @@ class FusedEdgeRunner:
         metrics/close and before membership events."""
         if not self._repl_dirty:
             return
-        dev = np.asarray(self.repl)
-        new = dev[:-1, :-1] & ~self._repl_synced[:-1, :-1]
-        for k, w in zip(*np.nonzero(new)):
-            grouper.replicas.setdefault(int(k), set()).add(int(w))
-        # asarray of a CPU device buffer is a view, and self.repl is
-        # donated to the next launch — copy before the buffer is reused
-        self._repl_synced = dev.copy()
-        self._repl_dirty = False
+        self._c_host_syncs.add(1)
+        with self.tel.tracer.span("fused.host_sync", cat="fused"):
+            dev = np.asarray(self.repl)
+            new = dev[:-1, :-1] & ~self._repl_synced[:-1, :-1]
+            for k, w in zip(*np.nonzero(new)):
+                grouper.replicas.setdefault(int(k), set()).add(int(w))
+            # asarray of a CPU device buffer is a view, and self.repl is
+            # donated to the next launch — copy before the buffer is
+            # reused
+            self._repl_synced = dev.copy()
+            self._repl_dirty = False
 
 
 # -- growth helpers (rare: each growth is a recompile boundary) -------------
@@ -805,3 +901,27 @@ def _grow_host2(arr, old_k, old_w, kcap1, w1):
 def _grow_last(arr, old_w, w1):
     out = jnp.full((w1,), -1, jnp.int32)
     return out if arr is None else out.at[:old_w].set(arr[:old_w])
+
+
+# ---------------------------------------------------------------------------
+# TRACE_COUNT module-attribute compatibility (ISSUE 9 counter unification)
+# ---------------------------------------------------------------------------
+
+
+class _FeedFusedModule(_types.ModuleType):
+    """Routes ``feed_fused.TRACE_COUNT`` reads *and* writes through the
+    registry counter.  A plain module ``__getattr__`` cannot do this: the
+    first ``feed_fused.TRACE_COUNT += 1`` (the ``TraceBudget`` test does
+    exactly that) would create a module-dict shadow and fork the count.  A
+    data descriptor on the module class intercepts both directions."""
+
+    @property
+    def TRACE_COUNT(self) -> int:
+        return _TRACE_COUNTER.value
+
+    @TRACE_COUNT.setter
+    def TRACE_COUNT(self, v: int) -> None:
+        _TRACE_COUNTER.set(v)
+
+
+_sys.modules[__name__].__class__ = _FeedFusedModule

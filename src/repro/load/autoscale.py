@@ -32,10 +32,13 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.stream import MembershipEvent, at_time
+from ..obs.telemetry import Telemetry
 from ..runtime.elastic import ElasticPool
 from ..topology.graph import ScopedEvent
 
 __all__ = ["P99Autoscaler"]
+
+_NULL_TELEMETRY = Telemetry(enabled=False)
 
 
 class P99Autoscaler:
@@ -49,7 +52,8 @@ class P99Autoscaler:
                  cooldown: float = 5.0, scale_in_frac: float = 0.3,
                  min_samples: int = 64,
                  pool: Optional[ElasticPool] = None,
-                 sample_keys: Sequence = ()):
+                 sample_keys: Sequence = (),
+                 telemetry: Optional[Telemetry] = None):
         if slo_p99 <= 0.0:
             raise ValueError(f"slo_p99 must be positive, got {slo_p99}")
         self.stage = stage
@@ -67,6 +71,10 @@ class P99Autoscaler:
         self._hist: Deque[Tuple[float, np.ndarray]] = deque()
         self._last_action = -np.inf
         self.events: List[Dict] = []
+        # ISSUE 9: each action lands as a trace instant + timeline points;
+        # the driver passes its session's bundle (no-op when disabled)
+        self.tel = telemetry if telemetry is not None else _NULL_TELEMETRY
+        self._c_actions = self.tel.metrics.counter("autoscale.actions")
 
     # -- control loop ---------------------------------------------------------
     def observe(self, t: float, receipt) -> List[ScopedEvent]:
@@ -120,5 +128,12 @@ class P99Autoscaler:
             "slo_p99": self.slo_p99,
             "ring_moved": int(moved), "ring_sampled": len(self.sample_keys),
         })
+        self._c_actions.add(1)
+        self.tel.tracer.instant(
+            f"autoscale.{action}", cat="load", worker=int(worker),
+            workers=len(self.workers), p99=float(p99), ring_moved=int(moved))
+        tl = self.tel.timeline
+        tl.point("autoscale.workers", len(self.workers), engine_clock=t)
+        tl.point("autoscale.window_p99", p99, engine_clock=t)
         return ScopedEvent(self.stage, at_time(
             MembershipEvent(workers=tuple(self.workers)), t))

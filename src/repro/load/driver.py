@@ -27,6 +27,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..obs.telemetry import Telemetry
 from ..topology.engine import TopologyReport
 from ..topology.graph import RecordBatch
 from .admission import IngressQueue
@@ -64,10 +65,16 @@ class LoadReport:
     total_latency_avg: Optional[float]
     total_latency_p99: Optional[float]
     autoscale_events: List[Dict] = dataclasses.field(default_factory=list)
+    # ISSUE 9 telemetry: the driver-side metric timeline (queue depth, shed,
+    # backpressure engagements) + metrics snapshot — ``None`` (and omitted
+    # from ``to_dict``) whenever telemetry is disabled
+    timeline: Optional[Dict] = None
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
         d["topology"] = self.topology.to_dict()
+        if d.get("timeline") is None:
+            d.pop("timeline", None)
         return d
 
 
@@ -106,6 +113,16 @@ class OpenLoopDriver:
         self._aligned = True
         self._receipt = None
         self._t_last_feed = 0.0
+        # ISSUE 9: share the session's bundle so driver points land on the
+        # same trace as the engine's spans (private no-op bundle otherwise)
+        tel = getattr(session, "telemetry", None)
+        self.tel = tel if tel is not None else Telemetry(enabled=False)
+        self._c_bp = self.tel.metrics.counter("load.backpressure_engaged")
+        if self.autoscaler is not None and not self.autoscaler.tel.enabled:
+            # an autoscaler built without an explicit bundle reports into
+            # the session's (same cell, adopted into the session registry)
+            self.autoscaler.tel = self.tel
+            self.tel.metrics.adopt(self.autoscaler._c_actions)
 
     # -- one run ---------------------------------------------------------------
     def run(self, arrivals: ArrivalProcess, t0: float, t1: float,
@@ -137,6 +154,13 @@ class OpenLoopDriver:
             backlog = (self._receipt.backlog - self.backlog_decay
                        * (t_feed - self._t_last_feed))
             if backlog > self.backpressure:
+                # backpressure engaged: the queue keeps filling this tick
+                self._c_bp.add(1)
+                self.tel.tracer.instant("load.backpressure", cat="load",
+                                        backlog=float(backlog),
+                                        queued=len(self.queue))
+                self.tel.timeline.point("load.queue_depth", len(self.queue),
+                                        engine_clock=t_feed)
                 return
         chunk = self.feed_chunk or len(self.queue)
         keys, arrivals, values = self.queue.pop(chunk)
@@ -145,6 +169,10 @@ class OpenLoopDriver:
             return
         ts = np.full(n, t_feed)
         receipt = self.session.feed(RecordBatch(keys, ts, values))
+        tl = self.tel.timeline
+        tl.point("load.queue_depth", len(self.queue), engine_clock=t_feed)
+        tl.point("load.shed_total", self.queue.stats.shed,
+                 engine_clock=t_feed)
         self._receipt = receipt
         self._t_last_feed = t_feed
         qd = t_feed - arrivals
@@ -160,7 +188,9 @@ class OpenLoopDriver:
                 self.session.advance(events)
 
     def _close(self) -> LoadReport:
+        run_span = self.tel.tracer.span("load.close", cat="load")
         report = self.session.close()
+        run_span.done()
         stats = self.queue.stats
         qd = (np.concatenate(self._queue_delays) if self._queue_delays
               else np.empty(0))
@@ -193,4 +223,5 @@ class OpenLoopDriver:
                                if totals is not None and totals.size
                                else None),
             autoscale_events=report.autoscale_events,
+            timeline=self.tel.timeline_dict(),
         )

@@ -25,6 +25,7 @@ from typing import Callable, List, Optional, Union
 import numpy as np
 
 from ..core.fish import FishParams
+from ..obs.metrics import MetricsRegistry
 from .kvcache import SlotManager
 
 __all__ = ["Request", "ServingEngine", "EngineMetrics"]
@@ -70,6 +71,7 @@ class ServingEngine:
         fish_params: Optional[FishParams] = None,
         step_fn: Optional[Callable[[int, List[dict]], None]] = None,
         max_queue_per_replica: Optional[int] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         from ..topology.configs import FishConfig, SchemeConfig, config_for
 
@@ -99,12 +101,44 @@ class ServingEngine:
         self._token_budget = np.zeros(num_replicas)
         self._next_slot = [0] * num_replicas  # round-robin decode cursor
         self.total_tokens = 0
-        # ISSUE 8: bounded ingress queue + migration stall + observability
+        # ISSUE 8: bounded ingress queue + migration stall + observability.
+        # ISSUE 9: shed / queue-depth / in-flight live in registry cells
+        # (the session's registry when given, else a private one) and the
+        # legacy ``shed``/``queue_depth_peak``/``in_flight_peak`` attributes
+        # are properties over them — one source of truth for the report.
         self.max_queue_per_replica = max_queue_per_replica
-        self.shed = 0
         self._stall = np.zeros(num_replicas)  # remaining stall ticks
-        self.queue_depth_peak = 0
-        self.in_flight_peak = 0
+        reg = metrics if metrics is not None else MetricsRegistry()
+        self._m_shed = reg.counter("serving.shed")
+        self._m_queue_depth_peak = reg.gauge("serving.queue_depth_peak")
+        self._m_in_flight_peak = reg.gauge("serving.in_flight_peak")
+        self._m_queue_depth_peak._peak_mode = True
+        self._m_in_flight_peak._peak_mode = True
+
+    @property
+    def shed(self) -> int:
+        """Requests rejected by admission control (registry-backed)."""
+        return self._m_shed.value
+
+    @shed.setter
+    def shed(self, v: int) -> None:
+        self._m_shed.set(v)
+
+    @property
+    def queue_depth_peak(self) -> int:
+        return self._m_queue_depth_peak.value
+
+    @queue_depth_peak.setter
+    def queue_depth_peak(self, v: int) -> None:
+        self._m_queue_depth_peak.set(v)
+
+    @property
+    def in_flight_peak(self) -> int:
+        return self._m_in_flight_peak.value
+
+    @in_flight_peak.setter
+    def in_flight_peak(self, v: int) -> None:
+        self._m_in_flight_peak.set(v)
 
     @property
     def alive(self) -> List[int]:
@@ -119,13 +153,11 @@ class ServingEngine:
         replica = self.router.assign(req.session, self.now)
         if (self.max_queue_per_replica is not None
                 and len(self.queues[replica]) >= self.max_queue_per_replica):
-            self.shed += 1
+            self._m_shed.add(1)
             return -1
         req.replica = replica
         self.queues[replica].append(req)
-        depth = sum(len(q) for q in self.queues)
-        if depth > self.queue_depth_peak:
-            self.queue_depth_peak = depth
+        self._m_queue_depth_peak.peak(sum(len(q) for q in self.queues))
         return replica
 
     # -- one scheduling tick ---------------------------------------------------
@@ -173,9 +205,8 @@ class ServingEngine:
                         req.finished = self.now
                         self.done.append(req)
                         sm.release(slot)
-        in_flight = sum(len(self.slots[r].active) for r in self._alive)
-        if in_flight > self.in_flight_peak:
-            self.in_flight_peak = in_flight
+        self._m_in_flight_peak.peak(
+            sum(len(self.slots[r].active) for r in self._alive))
 
     def run(self, until_done: int, max_ticks: int = 100_000) -> None:
         """Tick until ``until_done`` submitted requests are accounted for.

@@ -41,6 +41,7 @@ import numpy as np
 
 from ..core.stream import (CapacityEvent, MembershipEvent, edge_metrics,
                            simulate_edge)
+from ..obs.telemetry import get_telemetry
 from ..state.migration import MigrationBiller
 from ..state.window import KeyedStateManager, StateReport
 from .configs import build_grouper
@@ -169,6 +170,11 @@ class TopologyReport:
     time_in_queue_p99: float = 0.0
     migration_stall: float = 0.0
     autoscale_events: List[Dict] = dataclasses.field(default_factory=list)
+    # ISSUE 9 telemetry: the session's downsampled metric timeline +
+    # metrics snapshot (``Telemetry.timeline_dict``).  ``None`` whenever
+    # telemetry is disabled, and then *omitted* from ``to_dict`` — report
+    # dicts stay bit-identical to pre-telemetry output.
+    timeline: Optional[Dict] = None
 
     def edge(self, name: str) -> EdgeReport:
         """Lookup by full edge name (``"src->dst"``) or by dst stage."""
@@ -178,7 +184,10 @@ class TopologyReport:
         raise KeyError(f"no edge {name!r} in topology {self.topology!r}")
 
     def to_dict(self) -> Dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if d.get("timeline") is None:
+            d.pop("timeline", None)
+        return d
 
 
 @dataclasses.dataclass
@@ -244,7 +253,8 @@ class Engine(Protocol):
     name: str
 
     def open(self, topology: Topology, *,
-             arrival_rate: Optional[float] = None) -> Session:
+             arrival_rate: Optional[float] = None,
+             telemetry: Optional[object] = None) -> Session:
         ...
 
     def run(self, topology: Topology, source: Source,
@@ -270,7 +280,7 @@ class _BaseSession:
     close-time report assembly; everything engine-specific (how a feed
     executes, what state an edge carries) lives in the subclasses."""
 
-    def __init__(self, engine, topology: Topology):
+    def __init__(self, engine, topology: Topology, telemetry=None):
         self.engine = engine
         self.topology = topology
         self._edges = topology.ordered_edges()
@@ -282,6 +292,36 @@ class _BaseSession:
         self._total_time = 0.0
         self._e2e: List[np.ndarray] = []
         self._report: Optional[TopologyReport] = None
+        # ISSUE 9: explicit bundle wins; otherwise the process default —
+        # which, when disabled, hands each session a private no-op bundle
+        self.telemetry = (telemetry if telemetry is not None
+                          else get_telemetry().for_session())
+        self._feed_idx = -1
+        tel = self.telemetry
+        self._c_feeds = tel.metrics.counter("session.feeds")
+        self._c_mem_events = tel.metrics.counter("session.membership_events")
+        self._c_cap_events = tel.metrics.counter("session.capacity_events")
+
+    def _session_observer(self):
+        """Event-observer stage stamping membership/capacity events into
+        the telemetry bundle (counters always; trace instants when
+        enabled).  Chained after the per-edge accountant/manager."""
+        tel = self.telemetry
+        tr = tel.tracer
+        c_mem = self._c_mem_events
+        c_cap = self._c_cap_events
+
+        def call(kind, grouper, event):
+            if kind == "post_membership":
+                c_mem.add(1)
+                tr.instant("event.membership", cat="session",
+                           at=int(event.at), workers=len(event.workers))
+            elif kind == "capacity":
+                c_cap.add(1)
+                tr.instant("event.capacity", cat="session",
+                           at=int(event.at), workers=len(event.capacities))
+
+        return call
 
     def advance(self, events: Sequence[ScopedEvent]) -> None:
         """Register membership/capacity events for subsequent feeds.  Each
@@ -310,6 +350,8 @@ class _BaseSession:
         """Flush open windows, release operator partial streams through
         their downstream subtrees, and report (same schema as ``run``)."""
         self._check_open()
+        close_span = self.telemetry.tracer.span(
+            "session.close", cat="session", topology=self.topology.name)
         state: Dict[str, Dict] = {}
         self._close_pump(state)
         reports = [self._edge_report(e) for e in self._edges]
@@ -329,7 +371,9 @@ class _BaseSession:
             queue_depth_peak=max((r.queue_depth_peak for r in reports),
                                  default=0),
             migration_stall=sum(r.migration_stall for r in reports),
+            timeline=self.telemetry.timeline_dict(),
         )
+        close_span.done()
         return self._report
 
     # -- shared internals ------------------------------------------------------
@@ -405,13 +449,25 @@ class RemapAccountant:
     ``offset`` rebases the recorded event position onto the stream-global
     index: sessions hand :func:`simulate_edge` feed-local events, so they
     set it to the feed's base index before each feed (0 for one-shot runs,
-    keeping the reported rows identical to the pre-session engines)."""
+    keeping the reported rows identical to the pre-session engines).
 
-    def __init__(self, sample_keys: Sequence):
+    ``metrics`` (ISSUE 9): an optional :class:`repro.obs.MetricsRegistry`
+    — the per-event rows stay the report source of truth, but the run
+    totals (events seen, keys moved, keys sampled) are mirrored into
+    ``remap.*`` counters so ``repro.obs summarize`` sees them without
+    re-walking every report."""
+
+    def __init__(self, sample_keys: Sequence, metrics=None):
         self.sample = list(sample_keys)
         self.offset = 0
         self.per_event: List[Dict] = []
         self._before: Optional[List[Optional[int]]] = None
+        self._c_events = (metrics.counter("remap.events")
+                          if metrics is not None else None)
+        self._c_moved = (metrics.counter("remap.keys_moved")
+                         if metrics is not None else None)
+        self._c_sampled = (metrics.counter("remap.keys_sampled")
+                           if metrics is not None else None)
 
     def extend_sample(self, keys: Sequence, cap: int) -> None:
         """Grow the probe sample with unseen keys (up to ``cap``): sessions
@@ -441,6 +497,11 @@ class RemapAccountant:
                 row["frac"] = None
             self.per_event.append(row)
             self._before = None
+            if self._c_events is not None:
+                self._c_events.add(1)
+                self._c_sampled.add(row["sampled"])
+                if row["moved"] is not None:
+                    self._c_moved.add(row["moved"])
 
     def frac_mean(self) -> Optional[float]:
         fracs = [e["frac"] for e in self.per_event if e["frac"] is not None]
@@ -476,6 +537,40 @@ def _chain_observers(*observers):
             o(kind, grouper, event)
 
     return call
+
+
+def _fish_epoch_observer(telemetry, grouper):
+    """Per-epoch FISH telemetry for the host engines (ISSUE 9): hooked onto
+    :attr:`EpochFrequencyTracker.epoch_observer`, fired at every
+    TimeDecayingUpdate.  Emits the hot-set size, its churn vs the previous
+    epoch, and per-worker imbalance — each stamped with the epoch index —
+    plus a ``fish.epoch_decay`` trace instant.  (The fused engine emits the
+    same series from the device-resident tracker after epoch-crossing
+    segments.)"""
+    tel = telemetry
+    prev_hot: set = set()
+
+    def on_epoch(tracker) -> None:
+        epoch_idx = tracker.epochs_completed
+        tel.ctx.epoch_idx = epoch_idx
+        theta = tracker.params.theta(grouper.num_workers)
+        hot = set(tracker.hot_keys(grouper.num_workers))
+        churn = len(hot ^ prev_hot)
+        tl = tel.timeline
+        tl.point("fish.hot_set_size", len(hot), epoch_idx=epoch_idx)
+        tl.point("fish.hot_set_churn", churn, epoch_idx=epoch_idx)
+        counts = grouper.assigned_counts
+        if counts.size and counts.sum() > 0:
+            mean = counts.mean()
+            tl.point("fish.worker_imbalance",
+                     float(counts.max() / max(mean, 1e-12)),
+                     epoch_idx=epoch_idx)
+        tel.tracer.instant("fish.epoch_decay", cat="fish", epoch=epoch_idx,
+                           hot_set=len(hot), theta=theta)
+        prev_hot.clear()
+        prev_hot.update(hot)
+
+    return on_epoch
 
 
 def _stage_manager(stage: Stage) -> Optional[KeyedStateManager]:
@@ -564,11 +659,16 @@ class SimulatorEngine:
         self.name = f"dspe-{mode}"
 
     def open(self, topology: Topology, *,
-             arrival_rate: Optional[float] = None) -> "SimulatorSession":
+             arrival_rate: Optional[float] = None,
+             telemetry: Optional[object] = None) -> "SimulatorSession":
         """Open an incremental streaming session on this simulator.
         ``arrival_rate`` is the capacity-planning hint for stages without
-        an explicit cost (``None``: inferred from the first feed)."""
-        return SimulatorSession(self, topology, arrival_rate=arrival_rate)
+        an explicit cost (``None``: inferred from the first feed);
+        ``telemetry`` is an explicit :class:`repro.obs.Telemetry` bundle
+        (default: the process one — a no-op unless ``repro.obs.enable()``
+        was called)."""
+        return SimulatorSession(self, topology, arrival_rate=arrival_rate,
+                                telemetry=telemetry)
 
     def run(self, topology: Topology, source: Source,
             events: Sequence[ScopedEvent] = ()) -> TopologyReport:
@@ -584,14 +684,14 @@ class _SimEdge:
 
     def __init__(self, stage: Stage, grouper, caps: np.ndarray, seed: int,
                  dt_hint: Optional[float], mgr: Optional[KeyedStateManager],
-                 biller: Optional[MigrationBiller] = None):
+                 biller: Optional[MigrationBiller] = None, metrics=None):
         self.stage = stage
         self.grouper = grouper
         self.caps = caps
         self.state = None            # core.stream.EdgeState after 1st feed
         self.seed = seed
         self.dt_hint = dt_hint
-        self.acct = RemapAccountant([])
+        self.acct = RemapAccountant([], metrics=metrics)
         self.mgr = mgr
         self.lats: List[np.ndarray] = []
         self.n = 0
@@ -620,8 +720,8 @@ class SimulatorSession(_BaseSession):
     """
 
     def __init__(self, engine: "SimulatorEngine", topology: Topology,
-                 arrival_rate: Optional[float] = None):
-        super().__init__(engine, topology)
+                 arrival_rate: Optional[float] = None, telemetry=None):
+        super().__init__(engine, topology, telemetry=telemetry)
         self._rate = arrival_rate
         self._order = {e.name: i for i, e in enumerate(self._edges)}
         self._src_times: List[np.ndarray] = []
@@ -633,7 +733,13 @@ class SimulatorSession(_BaseSession):
         engine backlog — the open-loop feedback channel)."""
         if not self._check_batch(batch):
             return None
+        tel = self.telemetry
+        self._feed_idx += 1
+        tel.ctx.feed_idx = self._feed_idx
+        self._c_feeds.add(1)
         n = len(batch)
+        feed_span = tel.tracer.span("session.feed", cat="session", n=n,
+                                    feed_idx=self._feed_idx)
         ts = batch.timestamps
         base = self._n_source
         roots = np.arange(base, base + n, dtype=np.int64)
@@ -641,7 +747,13 @@ class SimulatorSession(_BaseSession):
         self._src_times.append(ts)
         streams = {SOURCE: (batch.keys, ts, roots, batch.values)}
         self._pump(streams, lambda r: ts[r - base])
-        return self._feed_receipt(n, float(ts[-1]))
+        receipt = self._feed_receipt(n, float(ts[-1]))
+        tel.ctx.engine_clock = receipt.t_end
+        tl = tel.timeline
+        tl.point("session.backlog", receipt.backlog)
+        tl.point("session.latency_p99", receipt.latency_p99)
+        feed_span.done()
+        return receipt
 
     def _feed_receipt(self, n: int, t_end: float) -> FeedReceipt:
         lats: List[np.ndarray] = []
@@ -732,7 +844,12 @@ class SimulatorSession(_BaseSession):
                 seed=eng.seed + 17 * idx,
                 dt_hint=(1.0 / self._rate
                          if edge.src == SOURCE and self._rate else None),
-                mgr=mgr0, biller=biller)
+                mgr=mgr0, biller=biller,
+                metrics=self.telemetry.metrics)
+            trk = getattr(st.grouper, "tracker", None)
+            if self.telemetry.enabled and trk is not None:
+                trk.epoch_observer = _fish_epoch_observer(
+                    self.telemetry, st.grouper)
         due, keep = _due_events(self._pending[edge.dst], st.n, in_times)
         self._pending[edge.dst] = keep
         # probe sample only while membership events are outstanding —
@@ -744,15 +861,17 @@ class SimulatorSession(_BaseSession):
         st.acct.offset = st.n  # events below are feed-local; report global
         mgr = st.mgr
         fused = eng.mode == "fused"
-        if mgr is None:
-            observer = st.acct
-        elif st.biller is not None:
-            # biller after the manager: the manager's post_membership runs
-            # the migration protocol that leaves the per-target bill
-            observer = _chain_observers(st.acct, mgr.on_event,
-                                        st.biller.on_event)
-        else:
-            observer = _chain_observers(st.acct, mgr.on_event)
+        chain = [st.acct]
+        if mgr is not None:
+            chain.append(mgr.on_event)
+            if st.biller is not None:
+                # biller after the manager: the manager's post_membership
+                # runs the migration protocol that leaves the per-target bill
+                chain.append(st.biller.on_event)
+        if due:  # telemetry last: it observes, never reshapes
+            chain.append(self._session_observer())
+        observer = chain[0] if len(chain) == 1 else _chain_observers(*chain)
+        billed0 = st.biller.billed_total if st.biller is not None else 0.0
         res = simulate_edge(
             st.grouper, in_keys, times=in_times,
             arrival_rate=self._rate or 10_000.0, mode=eng.mode,
@@ -766,11 +885,17 @@ class SimulatorSession(_BaseSession):
             values=in_values, state=st.state, dt=st.dt_hint,
             compute_metrics=False,  # aggregated once at close
             migration_biller=st.biller,
+            telemetry=self.telemetry,
         )
         st.state = res.state
         st.lats.append(res.latencies)
         st.n += m
         st.dispatches += res.dispatches
+        if st.biller is not None:
+            billed1 = st.biller.billed_total
+            if billed1 != billed0:
+                self.telemetry.timeline.point("migration.stall_total",
+                                              billed1)
         if m:
             self._total_time = max(self._total_time,
                                    float(res.finishes.max()))
@@ -885,11 +1010,12 @@ class ServingTopologyEngine:
         self.migration_ticks_per_replay = migration_ticks_per_replay
 
     def open(self, topology: Topology, *,
-             arrival_rate: Optional[float] = None) -> "ServingSession":
+             arrival_rate: Optional[float] = None,
+             telemetry: Optional[object] = None) -> "ServingSession":
         """Open an incremental streaming session on the serving engine
         (``arrival_rate`` is accepted for protocol symmetry; serving time
         is scheduler ticks, paced by the topology bottleneck)."""
-        return ServingSession(self, topology)
+        return ServingSession(self, topology, telemetry=telemetry)
 
     def run(self, topology: Topology, source: Source,
             events: Sequence[ScopedEvent] = ()) -> TopologyReport:
@@ -904,10 +1030,10 @@ class _ServingEdge:
 
     def __init__(self, stage: Stage, eng,
                  mgr: Optional[KeyedStateManager],
-                 biller: Optional[MigrationBiller] = None):
+                 biller: Optional[MigrationBiller] = None, metrics=None):
         self.stage = stage
         self.eng = eng
-        self.acct = RemapAccountant([])
+        self.acct = RemapAccountant([], metrics=metrics)
         self.mgr = mgr
         self.biller = biller  # tick-billed migration (ISSUE 8)
         self.reqs: List = []
@@ -935,8 +1061,9 @@ class ServingSession(_BaseSession):
     (per feed — per-tick scheduling is Python-loop work).
     """
 
-    def __init__(self, engine: "ServingTopologyEngine", topology: Topology):
-        super().__init__(engine, topology)
+    def __init__(self, engine: "ServingTopologyEngine", topology: Topology,
+                 telemetry=None):
+        super().__init__(engine, topology, telemetry=telemetry)
         # bottleneck-feasible pacing: source tuples per tick such that every
         # stage sees at most `utilization` of its token capacity
         per_tick = engine.utilization * min(
@@ -958,6 +1085,12 @@ class ServingSession(_BaseSession):
         overload and ``close()`` drains the backlog."""
         if not self._check_batch(batch):
             return None
+        tel = self.telemetry
+        self._feed_idx += 1
+        tel.ctx.feed_idx = self._feed_idx
+        self._c_feeds.add(1)
+        feed_span = tel.tracer.span("session.feed", cat="session",
+                                    n=len(batch), feed_idx=self._feed_idx)
         keys, ts, vals = batch.keys, batch.timestamps, batch.values
         if keys.shape[0] > self.engine.max_requests:
             pick = np.linspace(0, keys.shape[0] - 1,
@@ -989,11 +1122,19 @@ class ServingSession(_BaseSession):
             depth += sum(len(q) for q in st.eng.queues)
             in_flight += sum(len(st.eng.slots[r].active)
                              for r in st.eng.alive)
-        return FeedReceipt(n=n, t_end=float(src_ticks[-1]),
-                           latency_avg=avg, latency_p99=p99,
-                           backlog=float(depth), latencies=arr,
-                           queue_depth=depth, in_flight=in_flight,
-                           done=done1 - done0, shed=shed1 - shed0)
+        receipt = FeedReceipt(n=n, t_end=float(src_ticks[-1]),
+                              latency_avg=avg, latency_p99=p99,
+                              backlog=float(depth), latencies=arr,
+                              queue_depth=depth, in_flight=in_flight,
+                              done=done1 - done0, shed=shed1 - shed0)
+        tel.ctx.engine_clock = receipt.t_end  # scheduler ticks
+        tl = tel.timeline
+        tl.point("session.queue_depth", depth)
+        tl.point("session.in_flight", in_flight)
+        tl.point("session.latency_p99", p99)
+        tl.point("session.shed_total", shed1)
+        feed_span.done()
+        return receipt
 
     def _done_shed(self):
         done = sum(len(st.eng.done) for st in self._st.values())
@@ -1106,8 +1247,14 @@ class ServingSession(_BaseSession):
                     slots_per_replica=cfg.slots_per_replica,
                     tokens_per_tick=speeds,
                     grouping=edge.grouping,
-                    max_queue_per_replica=cfg.max_queue_per_replica),
-                mgr=mgr0, biller=biller)
+                    max_queue_per_replica=cfg.max_queue_per_replica,
+                    metrics=self.telemetry.metrics),
+                mgr=mgr0, biller=biller,
+                metrics=self.telemetry.metrics)
+            trk = getattr(st.eng.router, "tracker", None)
+            if self.telemetry.enabled and trk is not None:
+                trk.epoch_observer = _fish_epoch_observer(
+                    self.telemetry, st.eng.router)
         pending = self._pending[edge.dst]
         hi = st.n + m
         due = sorted((e for e in pending
@@ -1119,15 +1266,16 @@ class ServingSession(_BaseSession):
             st.acct.extend_sample(_sample_keys(in_keys, cfg.remap_sample),
                                   cfg.remap_sample)
         mgr = st.mgr
-        if mgr is None:
-            observer = st.acct
-        elif st.biller is not None:
-            # biller after the manager: the manager's post_membership runs
-            # the migration protocol that leaves the per-target bill
-            observer = _chain_observers(st.acct, mgr.on_event,
-                                        st.biller.on_event)
-        else:
-            observer = _chain_observers(st.acct, mgr.on_event)
+        chain = [st.acct]
+        if mgr is not None:
+            chain.append(mgr.on_event)
+            if st.biller is not None:
+                # biller after the manager: the manager's post_membership
+                # runs the migration protocol that leaves the per-target bill
+                chain.append(st.biller.on_event)
+        if due:  # telemetry last: it observes, never reshapes
+            chain.append(self._session_observer())
+        observer = chain[0] if len(chain) == 1 else _chain_observers(*chain)
         reqs_f = [Request(st.n + i, int(k), arrival=float(t),
                           target_tokens=1)
                   for i, (k, t) in enumerate(zip(in_keys.tolist(),

@@ -1,0 +1,29 @@
+"""registry-counter-mutation fixture (ISSUE 9): direct stores to
+registry-backed counters, plus the shapes the rule must NOT flag."""
+from repro.kernels import feed_fused
+
+
+class FakeServingEngine:
+    def submit(self):
+        self.shed = 0                 # error: bypasses the registry cell
+        self.queue_depth_peak += 1    # error
+        self.in_flight_peak = 3       # error
+
+    def ok(self):
+        self._m_shed.add(1)           # fine: mutation through the cell
+
+
+class FusedEdgeRunner:
+    def begin_feed(self):
+        self.dispatches = 0           # error: `dispatches` is a property
+
+
+class Report:
+    def stamp(self):
+        self.shed = 3                 # fine: a plain data field, no registry
+
+
+feed_fused.TRACE_COUNT += 1           # error: external module-counter write
+feed_fused.dispatches = 2             # error
+report = Report()
+report.shed = 1                       # fine: base is a local, not a module

@@ -50,6 +50,11 @@ GOLDEN = {
                             (8, "error"), (9, "error"), (10, "error"),
                             (12, "error")},
     },
+    "registry_fixture.py": {
+        "registry-counter-mutation": {(8, "error"), (9, "error"),
+                                      (10, "error"), (18, "error"),
+                                      (26, "error"), (27, "error")},
+    },
 }
 
 
