@@ -1,0 +1,413 @@
+"""Whole-program call graph over ``src/repro/`` (ISSUE 10 tentpole, part 1).
+
+PR 7's lint is intra-module: the jit traced-set closure
+(:meth:`ModuleInfo._traced_closure`) follows same-module references only,
+so a ``@jax.jit`` root in ``kernels/feed_fused.py`` calling a helper that
+lives in ``kernels/ops.py`` leaves the helper invisible to
+``host-sync-in-jit`` / ``np-jnp-mixing`` — exactly where a stray
+``np.asarray`` would silently serialize a fused launch.
+
+This module builds a :class:`Program` over many :class:`ModuleInfo`\\ s and
+closes the gap in three steps:
+
+1. **Import resolution.**  Each module gets an import table: module
+   aliases (``import numpy.random as npr``, ``from .. import kernels``,
+   plain ``import repro.kernels.ops``) and from-imported names
+   (``from ..kernels.ops import segment_feed``), with relative levels
+   resolved against the module's own dotted path.  Names that resolve to
+   files in the program become cross-module edges; everything else
+   (stdlib, third-party) resolves to nothing — fail-safe, no guessed
+   edges.  Bare imports in single-directory trees (the test fixtures)
+   fall back to a unique-stem match.
+
+2. **Cross-module traced closure.**  Starting from every module's jit
+   roots, referenced names are resolved through the import tables to
+   top-level functions of other modules; each target is expanded through
+   its *own* module's intra-module closure, to a fixpoint.  Modules whose
+   traced set grew are re-linted under the enlarged set for the traced
+   rules (``host-sync-in-jit``, ``np-jnp-mixing``), deduplicated against
+   the intra-module pass — PR 7's rules, retrofitted interprocedurally
+   with zero changes to the rules themselves.
+
+3. **Interprocedural unordered-iteration.**  PR 7's rule sees ``for x in
+   build() - set(done)`` but not ``for x in candidate_workers()`` where
+   the callee returns a set.  Here set-*returning* functions are computed
+   per module (direct set-valued returns, then a fixpoint over functions
+   returning other set-returning calls), and every ``for``/comprehension
+   iterating such a call — same-module or imported — is flagged, with the
+   same order-neutral-sink exemptions as the local rule.
+
+:func:`lint_program` is the whole-program entry point the CLI and the
+repo-gate test use; :func:`single_module_interproc` backs the
+``interproc-unordered-iteration`` entry in :data:`repro.analysis.lint.RULES`
+so per-file scans still see same-module violations.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+from . import lint as _lint
+from .lint import (ModuleInfo, _DEFAULT_EXCLUDES, _ORDER_NEUTRAL_SINKS,
+                   _SetTracker, _rel, iter_python_files)
+
+__all__ = ["Program", "build_program", "lint_program",
+           "single_module_interproc"]
+
+#: The traced rules re-run under the cross-module-enlarged traced set.
+_RETROFIT_RULES = ("host-sync-in-jit", "np-jnp-mixing")
+
+
+def _module_name(rel: str) -> str:
+    """Dotted module path from a repo-relative file path.
+
+    ``src/repro/core/stream.py`` → ``repro.core.stream`` (the ``src``
+    layout root is stripped); ``src/repro/obs/__init__.py`` →
+    ``repro.obs``; files outside a package tree keep their directory
+    path (``tests/test_x.py`` → ``tests.test_x``)."""
+    parts = rel.replace("\\", "/").split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if not parts:
+        return ""
+    parts[-1] = parts[-1][:-3] if parts[-1].endswith(".py") else parts[-1]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(p for p in parts if p)
+
+
+def _attr_chain(node: ast.AST) -> Optional[List[str]]:
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return parts[::-1]
+    return None
+
+
+def _is_top_level(fn: ast.AST) -> bool:
+    return getattr(fn, "_scope", "") == getattr(fn, "name", None)
+
+
+def _scope_of(node: ast.AST) -> str:
+    return getattr(node, "_scope", "<module>")
+
+
+class _ImportTable:
+    """One module's resolved imports: local name → dotted module, and
+    local name → (defining module, function name)."""
+
+    def __init__(self, mod: ModuleInfo, program: "Program") -> None:
+        self.mod_aliases: Dict[str, str] = {}
+        self.from_funcs: Dict[str, Tuple[str, str]] = {}
+        dotted = _module_name(mod.rel)
+        is_pkg = mod.rel.replace("\\", "/").endswith("__init__.py")
+        pkg_parts = dotted.split(".") if is_pkg else dotted.split(".")[:-1]
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self.mod_aliases[a.asname] = a.name
+                    else:
+                        head = a.name.split(".")[0]
+                        self.mod_aliases.setdefault(head, head)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level == 0:
+                    base = node.module or ""
+                else:
+                    keep = len(pkg_parts) - (node.level - 1)
+                    if keep < 0:
+                        continue
+                    base = ".".join(pkg_parts[:keep]
+                                    + ([node.module] if node.module else []))
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    local = a.asname or a.name
+                    full = f"{base}.{a.name}" if base else a.name
+                    if program.resolve_module(full) is not None:
+                        self.mod_aliases[local] = full
+                    elif base:
+                        self.from_funcs[local] = (base, a.name)
+
+
+class Program:
+    def __init__(self, modules: Sequence[ModuleInfo]) -> None:
+        self.modules = list(modules)
+        self.by_rel: Dict[str, ModuleInfo] = {m.rel: m for m in modules}
+        self.by_name: Dict[str, ModuleInfo] = {}
+        for m in self.modules:
+            name = _module_name(m.rel)
+            if name:
+                self.by_name[name] = m
+        stems: Dict[str, List[str]] = {}
+        for name in self.by_name:
+            stems.setdefault(name.split(".")[-1], []).append(name)
+        self._stem_unique = {s: ns[0] for s, ns in stems.items()
+                             if len(ns) == 1}
+        self.imports: Dict[str, _ImportTable] = {
+            m.rel: _ImportTable(m, self) for m in self.modules}
+
+    # -- resolution ------------------------------------------------------
+
+    def resolve_module(self, name: str) -> Optional[ModuleInfo]:
+        m = self.by_name.get(name)
+        if m is not None:
+            return m
+        if "." not in name:
+            # bare import in a flat tree (fixtures): unique-stem fallback
+            full = self._stem_unique.get(name)
+            if full is not None:
+                return self.by_name[full]
+        return None
+
+    def _func_targets(self, mod: ModuleInfo, node: ast.AST
+                      ) -> Iterable[Tuple[ModuleInfo, ast.AST]]:
+        """Top-level functions of *other* program modules that a Name /
+        Attribute load in ``mod`` can refer to."""
+        table = self.imports[mod.rel]
+        if isinstance(node, ast.Name):
+            for n in (node.id, *sorted(mod.aliases.get(node.id, ()))):
+                tgt = table.from_funcs.get(n)
+                if tgt is None:
+                    continue
+                m2 = self.resolve_module(tgt[0])
+                if m2 is None or m2 is mod:
+                    continue
+                fn = m2.funcs.get(tgt[1])
+                if fn is not None and _is_top_level(fn):
+                    yield m2, fn
+        elif isinstance(node, ast.Attribute):
+            parts = _attr_chain(node)
+            if not parts or len(parts) < 2:
+                return
+            head = table.mod_aliases.get(parts[0])
+            expanded = (head.split(".") + parts[1:]) if head else parts
+            for i in range(len(expanded) - 1, 0, -1):
+                m2 = self.resolve_module(".".join(expanded[:i]))
+                if m2 is None:
+                    continue
+                if m2 is not mod and len(expanded) - i == 1:
+                    fn = m2.funcs.get(expanded[i])
+                    if fn is not None and _is_top_level(fn):
+                        yield m2, fn
+                return  # longest matching prefix decides
+
+    def _call_targets(self, mod: ModuleInfo, call: ast.Call
+                      ) -> Iterable[Tuple[ModuleInfo, ast.AST]]:
+        """Like :meth:`_func_targets`, but also same-module targets."""
+        f = call.func
+        if isinstance(f, ast.Name):
+            for n in (f.id, *sorted(mod.aliases.get(f.id, ()))):
+                fn = mod.funcs.get(n)
+                if fn is not None and _is_top_level(fn):
+                    yield mod, fn
+        yield from self._func_targets(mod, f)
+
+    # -- cross-module traced closure ------------------------------------
+
+    def traced_expansion(self) -> Dict[str, Set[ast.AST]]:
+        """Per-module functions that become traced only once jit roots are
+        chased across imports (beyond each module's intra-module set)."""
+        extra: Dict[str, Set[ast.AST]] = {m.rel: set() for m in self.modules}
+        work: List[Tuple[ModuleInfo, ast.AST]] = [
+            (m, fn) for m in self.modules
+            for fn in sorted(m.traced, key=lambda f: f.lineno)]
+        seen: Set[Tuple[str, int]] = {(m.rel, id(fn)) for m, fn in work}
+        while work:
+            m, fn = work.pop()
+            for sub in ast.walk(fn):
+                if not (isinstance(sub, (ast.Name, ast.Attribute))
+                        and isinstance(sub.ctx, ast.Load)):
+                    continue
+                for m2, f2 in self._func_targets(m, sub):
+                    # the target drags in its own module's intra closure
+                    for f3 in m2._traced_closure([f2]):
+                        key = (m2.rel, id(f3))
+                        if key in seen:
+                            continue
+                        seen.add(key)
+                        if f3 not in m2.traced:
+                            extra[m2.rel].add(f3)
+                        work.append((m2, f3))
+        return extra
+
+    # -- the whole-program lint -----------------------------------------
+
+    def lint(self, rules: Optional[Sequence[str]] = None) -> List[Finding]:
+        rules = tuple(rules or _lint.RULES)
+        findings: List[Finding] = []
+        for m in self.modules:
+            for rule in rules:
+                if rule == "interproc-unordered-iteration":
+                    continue  # program-level, run once below
+                findings.extend(_lint._RULE_FNS[rule](m))
+        extra = self.traced_expansion()
+        emitted = {(f.rule, f.path, f.line, f.col) for f in findings}
+        for m in self.modules:
+            grown = extra.get(m.rel)
+            if not grown:
+                continue
+            saved = m.traced
+            m.traced = saved | grown
+            try:
+                for rule in _RETROFIT_RULES:
+                    if rule not in rules:
+                        continue
+                    for f in _lint._RULE_FNS[rule](m):
+                        key = (f.rule, f.path, f.line, f.col)
+                        if key not in emitted:
+                            emitted.add(key)
+                            findings.append(f)
+            finally:
+                m.traced = saved
+        if "interproc-unordered-iteration" in rules:
+            findings.extend(interproc_unordered(self))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# interprocedural unordered-iteration
+# ---------------------------------------------------------------------------
+
+
+def _set_returning(program: Program) -> Dict[str, Set[str]]:
+    """rel path → names of top-level functions that return sets — directly,
+    or (to a fixpoint) by returning a call to another set-returning fn."""
+    trackers: Dict[str, _SetTracker] = {}
+    for m in program.modules:
+        t = _SetTracker(m)
+        t.visit(m.tree)
+        trackers[m.rel] = t
+    result: Dict[str, Set[str]] = {m.rel: set() for m in program.modules}
+    for m in program.modules:
+        t = trackers[m.rel]
+        for fn in sorted(set(m.funcs.values()), key=lambda f: f.lineno):
+            if not _is_top_level(fn):
+                continue
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Return) and node.value is not None
+                        and t._is_set_expr(node.value, _scope_of(node))):
+                    result[m.rel].add(fn.name)
+                    break
+    changed = True
+    while changed:
+        changed = False
+        for m in program.modules:
+            for fn in sorted(set(m.funcs.values()), key=lambda f: f.lineno):
+                if not _is_top_level(fn) or fn.name in result[m.rel]:
+                    continue
+                for node in ast.walk(fn):
+                    if not (isinstance(node, ast.Return)
+                            and isinstance(node.value, ast.Call)):
+                        continue
+                    for m2, f2 in program._call_targets(m, node.value):
+                        if f2.name in result[m2.rel]:
+                            result[m.rel].add(fn.name)
+                            changed = True
+                            break
+                    if fn.name in result[m.rel]:
+                        break
+    return result
+
+
+def _setcall_target(program: Program, mod: ModuleInfo, node: ast.AST,
+                    returning: Dict[str, Set[str]]
+                    ) -> Optional[Tuple[ModuleInfo, str]]:
+    if not isinstance(node, ast.Call):
+        return None
+    for m2, fn in program._call_targets(mod, node):
+        if fn.name in returning[m2.rel]:
+            return m2, fn.name
+    return None
+
+
+def interproc_unordered(program: Program) -> List[Finding]:
+    returning = _set_returning(program)
+    out: List[Finding] = []
+
+    def flag(mod: ModuleInfo, iter_node: ast.AST, where: str,
+             m2: ModuleInfo, fname: str) -> None:
+        origin = ("this module" if m2 is mod
+                  else _module_name(m2.rel) or m2.rel)
+        out.append(mod.finding(
+            "interproc-unordered-iteration", iter_node, "warn",
+            f"{where} iterates `{fname}()` which returns a set (defined in "
+            f"{origin}) — hash-seed order leaks into whatever this loop "
+            f"builds or mutates",
+            f"sort at the boundary (`sorted({fname}(...))`), or return an "
+            f"ordered container from `{fname}`"))
+
+    for mod in program.modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.For):
+                hit = _setcall_target(program, mod, node.iter, returning)
+                if hit is not None:
+                    flag(mod, node.iter, "for-loop", *hit)
+            elif isinstance(node, (ast.ListComp, ast.GeneratorExp,
+                                   ast.SetComp, ast.DictComp)):
+                order_sensitive = not isinstance(
+                    node, (ast.SetComp, ast.DictComp))
+                parent = getattr(node, "_parent", None)
+                if (isinstance(parent, ast.Call)
+                        and isinstance(parent.func, ast.Name)
+                        and parent.func.id in _ORDER_NEUTRAL_SINKS):
+                    order_sensitive = False
+                if not order_sensitive:
+                    continue
+                for gen in node.generators:
+                    hit = _setcall_target(program, mod, gen.iter, returning)
+                    if hit is not None:
+                        flag(mod, gen.iter, "comprehension", *hit)
+    return out
+
+
+def single_module_interproc(mod: ModuleInfo) -> List[Finding]:
+    """Same-module slice of the interprocedural rule, for per-file scans
+    (``lint_file``): iteration over calls to set-returning functions
+    defined in the same file."""
+    return interproc_unordered(Program([mod]))
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+
+def build_program(paths: Sequence[Path], root: Path,
+                  excludes: Sequence[str] = _DEFAULT_EXCLUDES
+                  ) -> Tuple[Program, List[Finding]]:
+    """Parse every file under ``paths`` into one :class:`Program`.
+    Unparseable files become syntax findings instead of modules."""
+    modules: List[ModuleInfo] = []
+    syntax: List[Finding] = []
+    for f in iter_python_files(paths, excludes):
+        src = Path(f).read_text()
+        try:
+            tree = ast.parse(src, filename=str(f))
+        except SyntaxError as e:
+            syntax.append(Finding(
+                rule="syntax", path=_rel(f, root), line=e.lineno or 1,
+                col=e.offset or 0, severity="error",
+                message=f"cannot parse: {e.msg}",
+                hint="fix the syntax error"))
+            continue
+        modules.append(ModuleInfo(Path(f), _rel(f, root), tree))
+    return Program(modules), syntax
+
+
+def lint_program(paths: Sequence[Path], root: Path,
+                 rules: Optional[Sequence[str]] = None,
+                 excludes: Sequence[str] = _DEFAULT_EXCLUDES
+                 ) -> List[Finding]:
+    """Whole-program scan: every intra-module rule, plus the cross-module
+    traced-set retrofit and the interprocedural rules.  The superset of
+    :func:`repro.analysis.lint.lint_paths` the CLI and CI run."""
+    program, syntax = build_program(paths, root, excludes)
+    return syntax + program.lint(rules)

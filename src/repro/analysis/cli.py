@@ -13,8 +13,9 @@ import sys
 from pathlib import Path
 from typing import List, Optional, Sequence
 
+from .callgraph import lint_program
 from .findings import Baseline, apply_baseline, findings_to_json
-from .lint import RULES, lint_paths
+from .lint import RULES
 
 __all__ = ["main"]
 
@@ -32,7 +33,8 @@ def _repo_root(start: Path) -> Path:
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="static hot-path hygiene + dataflow-contract checks")
+        description="whole-program static analysis: hot-path hygiene, "
+                    "dataflow contracts, determinism & numerics")
     ap.add_argument("paths", nargs="*", type=Path,
                     help="files/directories to scan (default: "
                     + " ".join(_DEFAULT_SCAN) + " under the repo root)")
@@ -73,7 +75,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               file=sys.stderr)
         return 2
 
-    findings = lint_paths(paths, root, rules)
+    findings = lint_program(paths, root, rules)
 
     baseline = Baseline()
     baseline_path = args.baseline

@@ -45,6 +45,8 @@ __all__ = [
     "STEADY_FEED_DISPATCHES",
     "HOST_DISPATCHES",
     "HOST_SYNC_POINTS",
+    "SCALE_TARGET",
+    "WALL_CLOCK_STAMP_MODULES",
     "validate_config_literal",
     "validate_stage_literal",
     "validate_edge_literal",
@@ -115,6 +117,28 @@ HOST_DISPATCHES = 0
 #: auditor classifies every observed ``flush_pane`` / ``host_sync`` into
 #: one of these; anything else is a budget violation.
 HOST_SYNC_POINTS: Tuple[str, ...] = ("pane_boundary", "event", "close")
+
+# ---------------------------------------------------------------------------
+# determinism & numerics targets (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+#: The tuple count every counter/accumulator must survive — the ROADMAP's
+#: multi-host north star (10⁷–10⁸ tuples/run).  The ``int32-overflow``
+#: pass phrases its findings against this number, and the accepted-findings
+#: baseline records which target its justifications were audited against
+#: (a baseline justified at 10⁸ says nothing about 10¹⁰).
+SCALE_TARGET: int = 10 ** 8
+
+#: The only modules allowed to read the wall clock: the obs stamp points
+#: (trace spans and metric-timeline stamps carry real timestamps *by
+#: design*).  A ``time.*``/``datetime.now`` value escaping a function
+#: anywhere else can reach ``TopologyReport``/timeline state, making two
+#: same-seed runs diverge — the ``wall-clock-leak`` rule flags exactly
+#: those escapes.
+WALL_CLOCK_STAMP_MODULES: Tuple[str, ...] = (
+    "src/repro/obs/trace.py",
+    "src/repro/obs/timeline.py",
+)
 
 
 # ---------------------------------------------------------------------------

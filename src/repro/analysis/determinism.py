@@ -1,0 +1,553 @@
+"""Determinism rules: RNG, wall clock, jit-signature spaces (ISSUE 10).
+
+Three rules, all protecting the same invariant the paper's validation
+rests on — two runs with the same seed produce bit-identical reports:
+
+``unseeded-rng``
+    Global-state RNG destroys seeded replay: ``np.random.rand`` /
+    ``np.random.seed`` (the module-level legacy API) and stdlib
+    ``random.*`` module functions share hidden process state, so any
+    other consumer (another session, a test, a warm-up) shifts the
+    stream.  Seedless constructors (``np.random.default_rng()``,
+    ``PCG64()``, ``RandomState()`` with no arguments) draw OS entropy —
+    unreplayable by definition.  The sanctioned pattern is an
+    explicitly-seeded ``np.random.Generator`` threaded through the code
+    that draws from it (``EdgeState.rng``, the synthetic generators).
+
+``wall-clock-leak``
+    A ``time.*``/``datetime.now`` read is fine while it stays local
+    (elapsed-time prints); it breaks replay the moment it *escapes* —
+    returned, yielded, or stored on an object — because the escaped stamp
+    can reach ``TopologyReport``/timeline values.  The rule runs a
+    per-function taint pass (wall-clock calls seed taint; assignments
+    propagate it; return/yield/attribute-store sink it) plus a flat ban on
+    module-level reads (an import-time stamp is a hidden global).  The
+    declared obs stamp points
+    (:data:`repro.analysis.contracts.WALL_CLOCK_STAMP_MODULES`) are
+    exempt: timestamps are their *job*.
+
+``unbounded-signature``
+    A jit cache keyed by a static-signature tuple
+    (``_SEG_CACHE[sig] = jax.jit(...)``) recompiles once per distinct
+    tuple value, so the cache is only bounded if every element's value
+    set is.  The rule finds cache-store sites, chases the key back to its
+    tuple construction (through locals and one call-site hop for
+    parameters), and classifies each element: literals, booleans
+    (comparisons, ``is None``), ``bit_length``-bucketed sizes and
+    compositions thereof are bounded; anything rooted in open-ended
+    runtime values (``x.shape[0]``, foreign attributes, raw parameters)
+    is not, and gets a finding naming the element.  Sanctioned unbounded
+    elements (worker-universe growth) are baselined with a ``why``, which
+    is exactly the documentation the recompile budget wants.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .contracts import WALL_CLOCK_STAMP_MODULES
+from .findings import Finding
+from .lint import _is_jit_ref
+
+__all__ = [
+    "rule_unseeded_rng",
+    "rule_wall_clock_leak",
+    "rule_unbounded_signature",
+]
+
+
+# ---------------------------------------------------------------------------
+# unseeded-rng
+# ---------------------------------------------------------------------------
+
+#: numpy.random constructors that are deterministic *when given a seed*.
+_SEEDED_CTORS = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                 "PCG64DXSM", "Philox", "MT19937", "RandomState"}
+#: stdlib random: the seedable class is fine; everything module-level (and
+#: SystemRandom, which is nondeterministic by design) is not.
+_PY_SEEDED = {"Random"}
+
+
+class _RngAliases:
+    def __init__(self, tree: ast.Module) -> None:
+        self.numpy: Set[str] = set()       # import numpy as np
+        self.np_random: Set[str] = set()   # import numpy.random as npr
+        self.py_random: Set[str] = set()   # import random
+        self.np_names: Dict[str, str] = {}  # from numpy.random import X
+        self.py_names: Dict[str, str] = {}  # from random import X
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "numpy":
+                        self.numpy.add(a.asname or "numpy")
+                    elif a.name == "numpy.random":
+                        if a.asname:
+                            self.np_random.add(a.asname)
+                        else:
+                            self.numpy.add("numpy")
+                    elif a.name == "random":
+                        self.py_random.add(a.asname or "random")
+            elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                if node.module == "numpy":
+                    for a in node.names:
+                        if a.name == "random":
+                            self.np_random.add(a.asname or "random")
+                elif node.module == "numpy.random":
+                    for a in node.names:
+                        self.np_names[a.asname or a.name] = a.name
+                elif node.module == "random":
+                    for a in node.names:
+                        self.py_names[a.asname or a.name] = a.name
+
+
+def _attr_parts(node: ast.AST) -> Optional[List[str]]:
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return parts[::-1]
+    return None
+
+
+def _has_seed(call: ast.Call) -> bool:
+    return bool(call.args) or any(kw.arg == "seed" for kw in call.keywords)
+
+
+def rule_unseeded_rng(mod) -> List[Finding]:
+    al = _RngAliases(mod.tree)
+    out: List[Finding] = []
+
+    def flag(node: ast.Call, what: str, msg: str, hint: str) -> None:
+        out.append(mod.finding("unseeded-rng", node, "error",
+                               f"`{what}` {msg}", hint))
+
+    def check_np(node: ast.Call, fn: str, what: str) -> None:
+        if fn in _SEEDED_CTORS:
+            if not _has_seed(node):
+                flag(node, what, "draws OS entropy when constructed "
+                     "without a seed — two same-\"seed\" runs diverge",
+                     "pass the run's seed explicitly "
+                     "(np.random.default_rng(seed))")
+        else:
+            flag(node, what, "mutates numpy's hidden global RNG state — "
+                 "any other consumer shifts the stream and seeded replay "
+                 "breaks",
+                 "draw from an explicitly-seeded, explicitly-threaded "
+                 "np.random.Generator instead")
+
+    def check_py(node: ast.Call, fn: str, what: str) -> None:
+        if fn in _PY_SEEDED:
+            if not _has_seed(node):
+                flag(node, what, "seeds itself from OS entropy",
+                     "pass the run's seed (random.Random(seed))")
+        elif fn == "SystemRandom":
+            flag(node, what, "is nondeterministic by design",
+                 "use a seeded random.Random / np.random.Generator")
+        else:
+            flag(node, what, "uses the stdlib's hidden global RNG state",
+                 "thread a seeded random.Random (or better, the run's "
+                 "np.random.Generator)")
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        parts = _attr_parts(node.func)
+        if parts is not None and len(parts) >= 2:
+            if (len(parts) >= 3 and parts[0] in al.numpy
+                    and parts[1] == "random"):
+                check_np(node, parts[2], ".".join(parts[:3]))
+                continue
+            if parts[0] in al.np_random:
+                check_np(node, parts[1], ".".join(parts[:2]))
+                continue
+            if parts[0] in al.py_random:
+                check_py(node, parts[1], ".".join(parts[:2]))
+                continue
+        elif isinstance(node.func, ast.Name):
+            name = node.func.id
+            if name in mod.funcs:
+                continue  # locally shadowed
+            if name in al.np_names:
+                check_np(node, al.np_names[name], name)
+            elif name in al.py_names:
+                check_py(node, al.py_names[name], name)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# wall-clock-leak
+# ---------------------------------------------------------------------------
+
+_WALL_TIME_FNS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+                  "monotonic", "monotonic_ns", "process_time",
+                  "process_time_ns"}
+_WALL_DT_FNS = {"now", "utcnow", "today"}
+
+
+class _ClockAliases:
+    def __init__(self, tree: ast.Module) -> None:
+        self.time: Set[str] = set()
+        self.datetime: Set[str] = set()      # the datetime *class*
+        self.datetime_mod: Set[str] = set()  # the datetime *module*
+        self.names: Set[str] = set()         # from time import perf_counter
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "time":
+                        self.time.add(a.asname or "time")
+                    elif a.name == "datetime":
+                        self.datetime_mod.add(a.asname or "datetime")
+            elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                if node.module == "time":
+                    for a in node.names:
+                        if a.name in _WALL_TIME_FNS:
+                            self.names.add(a.asname or a.name)
+                elif node.module == "datetime":
+                    for a in node.names:
+                        if a.name in ("datetime", "date"):
+                            self.datetime.add(a.asname or a.name)
+
+
+def _is_wall_clock(node: ast.AST, al: _ClockAliases) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id in al.names
+    parts = _attr_parts(f)
+    if parts is None or len(parts) < 2:
+        return False
+    if parts[0] in al.time and parts[1] in _WALL_TIME_FNS:
+        return True
+    if parts[0] in al.datetime and parts[1] in _WALL_DT_FNS:
+        return True
+    return (len(parts) >= 3 and parts[0] in al.datetime_mod
+            and parts[1] in ("datetime", "date")
+            and parts[2] in _WALL_DT_FNS)
+
+
+def _contains_taint(node: ast.AST, tainted: Set[str],
+                    al: _ClockAliases) -> bool:
+    for sub in ast.walk(node):
+        if _is_wall_clock(sub, al):
+            return True
+        if (isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load)
+                and sub.id in tainted):
+            return True
+    return False
+
+
+def _own_statements(fn: ast.AST):
+    """Walk a function's nodes, skipping nested function/class bodies."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop(0)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def rule_wall_clock_leak(mod) -> List[Finding]:
+    if mod.rel.replace("\\", "/") in WALL_CLOCK_STAMP_MODULES:
+        return []
+    al = _ClockAliases(mod.tree)
+    if not (al.time or al.datetime or al.datetime_mod or al.names):
+        return []
+    out: List[Finding] = []
+
+    # module-level reads: an import-time stamp is a hidden global
+    for node in ast.walk(mod.tree):
+        if (_is_wall_clock(node, al)
+                and getattr(node, "_scope", None) == "<module>"):
+            out.append(mod.finding(
+                "wall-clock-leak", node, "warn",
+                "module-level wall-clock read — an import-time stamp is a "
+                "hidden global that differs between otherwise identical "
+                "runs",
+                "read the clock inside the obs stamp points, or pass "
+                "stamps in explicitly"))
+
+    for fn in sorted(set(mod.funcs.values()), key=lambda f: f.lineno):
+        tainted: Set[str] = set()
+        stmts = list(_own_statements(fn))
+        # two passes: taint reaches uses that lexically precede the
+        # assignment order ast.walk discovered them in
+        for _ in range(2):
+            for node in stmts:
+                targets: List[ast.AST] = []
+                if isinstance(node, ast.Assign):
+                    targets = node.targets
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                    targets = [node.target]
+                elif isinstance(node, (ast.For, ast.AsyncFor)):
+                    if _contains_taint(node.iter, tainted, al):
+                        targets = [node.target]
+                elif isinstance(node, ast.withitem):
+                    if (node.optional_vars is not None
+                            and _contains_taint(node.context_expr,
+                                                tainted, al)):
+                        targets = [node.optional_vars]
+                value = getattr(node, "value", None)
+                if targets and value is not None and _contains_taint(
+                        value, tainted, al):
+                    for t in targets:
+                        for sub in ast.walk(t):
+                            if isinstance(sub, ast.Name):
+                                tainted.add(sub.id)
+        for node in stmts:
+            if isinstance(node, (ast.Return, ast.Yield)):
+                if node.value is not None and _contains_taint(
+                        node.value, tainted, al):
+                    out.append(mod.finding(
+                        "wall-clock-leak", node, "warn",
+                        f"wall-clock-derived value escapes `{fn.name}` — "
+                        f"an escaped stamp can reach report/timeline "
+                        f"state, so two same-seed runs diverge",
+                        "derive times from the engine clock, or stamp "
+                        "only inside the declared obs stamp points "
+                        "(contracts.WALL_CLOCK_STAMP_MODULES)"))
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                value = node.value
+                if value is None or not _contains_taint(value, tainted, al):
+                    continue
+                for t in targets:
+                    base = t.value if isinstance(t, ast.Subscript) else t
+                    if isinstance(base, ast.Attribute):
+                        out.append(mod.finding(
+                            "wall-clock-leak", node, "warn",
+                            f"wall-clock-derived value stored on "
+                            f"`{_attr_src(base)}` persists beyond "
+                            f"`{fn.name}` and can reach report/timeline "
+                            f"state",
+                            "stamp only inside the declared obs stamp "
+                            "points, or pass the stamp in explicitly"))
+                        break
+    return out
+
+
+def _attr_src(node: ast.Attribute) -> str:
+    parts = _attr_parts(node)
+    return ".".join(parts) if parts else node.attr
+
+
+# ---------------------------------------------------------------------------
+# unbounded-signature
+# ---------------------------------------------------------------------------
+
+def _enclosing_function(node: ast.AST) -> Optional[ast.AST]:
+    cur = getattr(node, "_parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = getattr(cur, "_parent", None)
+    return None
+
+
+def _scope_of(node: ast.AST) -> str:
+    return getattr(node, "_scope", "<module>")
+
+
+class _BoundChecker:
+    """Classify whether an expression's *value set* is statically bounded.
+
+    Bounded: literals, booleans (comparisons, ``is``/``in``, ``not``),
+    ``x.bit_length()`` (≤ 64 values), shifts/arithmetic/``min``/``max``/
+    conditional expressions over bounded operands, names and ``self.X``
+    attributes whose every assignment is bounded (cycles among such
+    definitions introduce no new values and count as bounded), and calls
+    to module functions all of whose return expressions are bounded (the
+    ``_bucket``-style pow2 helpers).  Everything else — raw parameters,
+    ``.shape[0]``, foreign attributes, subscripts — is open-ended.
+    """
+
+    def __init__(self, mod) -> None:
+        self.mod = mod
+        self._in_progress: Set[Tuple[str, str]] = set()
+
+    # -- assignment collection ------------------------------------------
+
+    def _local_assigns(self, scope: str, name: str) -> List[ast.AST]:
+        out = []
+        for node in ast.walk(self.mod.tree):
+            if (isinstance(node, ast.Assign)
+                    and _scope_of(node) == scope):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id == name:
+                        out.append(node.value)
+        return out
+
+    def _attr_assigns(self, attr: str) -> List[ast.AST]:
+        out = []
+        for node in ast.walk(self.mod.tree):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if (isinstance(t, ast.Attribute) and t.attr == attr
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        out.append(node.value)
+        return out
+
+    # -- classification -------------------------------------------------
+
+    def bounded(self, node: ast.AST, scope: str) -> bool:
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, (ast.Compare, ast.BoolOp)):
+            return True
+        if isinstance(node, ast.UnaryOp):
+            return (isinstance(node.op, ast.Not)
+                    or self.bounded(node.operand, scope))
+        if isinstance(node, ast.IfExp):
+            return (self.bounded(node.body, scope)
+                    and self.bounded(node.orelse, scope))
+        if isinstance(node, ast.BinOp):
+            return (self.bounded(node.left, scope)
+                    and self.bounded(node.right, scope))
+        if isinstance(node, ast.Call):
+            return self._bounded_call(node, scope)
+        if isinstance(node, ast.Name):
+            return self._bounded_name(node.id, scope)
+        if isinstance(node, ast.Attribute):
+            if (isinstance(node.value, ast.Name)
+                    and node.value.id == "self"):
+                return self._bounded_defs(
+                    ("attr", node.attr), self._attr_assigns(node.attr))
+            return False
+        return False
+
+    def _bounded_call(self, node: ast.Call, scope: str) -> bool:
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr == "bit_length":
+            return True  # ≤ 64 distinct values whatever the operand
+        if isinstance(f, ast.Name):
+            if f.id == "bool":
+                return True
+            if f.id in ("min", "max", "abs", "int"):
+                return all(self.bounded(a, scope) for a in node.args)
+            target = self.mod.funcs.get(f.id)
+            if target is not None:
+                key = ("fn", f.id)
+                if key in self._in_progress:
+                    return True
+                self._in_progress.add(key)
+                try:
+                    returns = [n.value for n in ast.walk(target)
+                               if isinstance(n, ast.Return)
+                               and n.value is not None]
+                    return bool(returns) and all(
+                        self.bounded(r, _scope_of(r)) for r in returns)
+                finally:
+                    self._in_progress.discard(key)
+        return False
+
+    def _bounded_name(self, name: str, scope: str) -> bool:
+        assigns = self._local_assigns(scope, name)
+        if not assigns and scope != "<module>":
+            # fall back to module globals (MIN_BUCKET-style constants)
+            assigns = self._local_assigns("<module>", name)
+            if assigns:
+                return self._bounded_defs(("g", name), assigns,
+                                          "<module>")
+            return False  # a parameter or foreign name: open-ended
+        return self._bounded_defs((scope, name), assigns, scope)
+
+    def _bounded_defs(self, key, assigns: Sequence[ast.AST],
+                      scope: Optional[str] = None) -> bool:
+        if not assigns:
+            return False
+        if key in self._in_progress:
+            return True  # definition cycle: no new values introduced
+        self._in_progress.add(key)
+        try:
+            return all(self.bounded(a, scope or _scope_of(a))
+                       for a in assigns)
+        finally:
+            self._in_progress.discard(key)
+
+
+def _jit_cache_stores(mod):
+    """(assign node, subscript key expr) for ``CACHE[sig] = jax.jit(...)``."""
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)
+                and _is_jit_ref(node.value.func)):
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Subscript):
+                yield node, t.slice
+
+
+def _sig_tuples(mod, key_expr: ast.AST):
+    """Resolve a cache-key expression to (tuple node, scope) candidates:
+    the tuple construction(s) whose value reaches the cache subscript —
+    directly, via a local assignment, or via one parameter/call-site hop."""
+    if isinstance(key_expr, ast.Tuple):
+        yield key_expr, _scope_of(key_expr)
+        return
+    if not isinstance(key_expr, ast.Name):
+        return
+    name = key_expr.id
+    fn = _enclosing_function(key_expr)
+    scope = _scope_of(key_expr)
+    local = [v for v in ast.walk(mod.tree)
+             if isinstance(v, ast.Assign) and _scope_of(v) == scope
+             for t in v.targets
+             if isinstance(t, ast.Name) and t.id == name]
+    for assign in local:
+        if isinstance(assign.value, ast.Tuple):
+            yield assign.value, scope
+    if local or fn is None:
+        return
+    params = [a.arg for a in (list(fn.args.posonlyargs)
+                              + list(fn.args.args))]
+    if name not in params:
+        return
+    idx = params.index(name)
+    for call in ast.walk(mod.tree):
+        if not (isinstance(call, ast.Call)
+                and isinstance(call.func, ast.Name)
+                and call.func.id == fn.name):
+            continue
+        arg: Optional[ast.AST] = None
+        if idx < len(call.args):
+            arg = call.args[idx]
+        else:
+            arg = next((kw.value for kw in call.keywords
+                        if kw.arg == name), None)
+        if arg is None:
+            continue
+        for tup, sc in _sig_tuples(mod, arg):
+            yield tup, sc
+
+
+def rule_unbounded_signature(mod) -> List[Finding]:
+    out: List[Finding] = []
+    checker = _BoundChecker(mod)
+    seen: Set[Tuple[int, int, int]] = set()
+    for _, key_expr in _jit_cache_stores(mod):
+        for tup, scope in _sig_tuples(mod, key_expr):
+            for i, elem in enumerate(tup.elts):
+                if checker.bounded(elem, scope):
+                    continue
+                key = (tup.lineno, tup.col_offset, i)
+                if key in seen:
+                    continue
+                seen.add(key)
+                src = ast.unparse(elem)
+                out.append(mod.finding(
+                    "unbounded-signature", tup, "warn",
+                    f"jit cache key element {i} (`{src}`) has an "
+                    f"unbounded static value set — every new value "
+                    f"compiles and caches a fresh variant",
+                    "bucket the element (pow2 / bit_length), draw it "
+                    "from a literal set, or document the runtime bound "
+                    "in the baseline `why`"))
+    return out

@@ -63,22 +63,50 @@ class Finding:
 
 
 class Baseline:
-    """Accepted findings: fingerprint → (allowed count, justification)."""
+    """Accepted findings: fingerprint → (allowed count, justification).
 
-    VERSION = 1
+    Schema v2 (ISSUE 10) adds a required top-level ``scale_target``: the
+    tuple count the justifications were audited against.  A ``why``
+    explaining an accepted ``int32-overflow`` finding at 10⁸ tuples says
+    nothing about 10¹⁰, so when :data:`repro.analysis.contracts.SCALE_TARGET`
+    moves, every v2 baseline goes stale *loudly* (load error) instead of
+    silently green-lighting un-reaudited counters.  v1 baselines (no
+    ``scale_target``) still load, for migration; ``dump`` always writes v2.
+    """
 
-    def __init__(self, entries: Optional[Dict[str, Tuple[int, str]]] = None
-                 ) -> None:
+    VERSION = 2
+
+    def __init__(self, entries: Optional[Dict[str, Tuple[int, str]]] = None,
+                 scale_target: Optional[int] = None) -> None:
         self.entries: Dict[str, Tuple[int, str]] = dict(entries or {})
+        #: tuple count the whys were audited against; None = legacy v1
+        self.scale_target = scale_target
 
     # -- (de)serialisation -------------------------------------------------
 
     @classmethod
     def load(cls, path: Path) -> "Baseline":
         data = json.loads(Path(path).read_text())
-        if data.get("version") != cls.VERSION:
+        version = data.get("version")
+        if version not in (1, cls.VERSION):
             raise ValueError(
-                f"{path}: unsupported baseline version {data.get('version')!r}")
+                f"{path}: unsupported baseline version {version!r}")
+        scale_target: Optional[int] = None
+        if version == cls.VERSION:
+            from .contracts import SCALE_TARGET
+            raw = data.get("scale_target")
+            if not isinstance(raw, int):
+                raise ValueError(
+                    f"{path}: baseline v{cls.VERSION} requires an integer "
+                    f"'scale_target' (the tuple count the justifications "
+                    f"were audited against)")
+            if raw != SCALE_TARGET:
+                raise ValueError(
+                    f"{path}: baseline was audited at scale_target={raw}, "
+                    f"but contracts.SCALE_TARGET={SCALE_TARGET} — re-audit "
+                    f"the accepted findings and regenerate "
+                    f"(--write-baseline)")
+            scale_target = raw
         entries: Dict[str, Tuple[int, str]] = {}
         for item in data.get("accepted", []):
             fp = item["fingerprint"]
@@ -90,12 +118,15 @@ class Baseline:
             if fp in entries:
                 raise ValueError(f"{path}: duplicate baseline entry {fp!r}")
             entries[fp] = (int(item.get("count", 1)), why)
-        return cls(entries)
+        return cls(entries, scale_target=scale_target)
 
     def dump(self, path: Path, *, findings: Sequence[Finding] = ()) -> None:
-        """Write the baseline.  When regenerating from a scan
-        (``--write-baseline``), carry forward existing justifications and
-        stub the new ones so a human must fill them in."""
+        """Write the baseline (always at the current schema version, with
+        the current ``contracts.SCALE_TARGET``).  When regenerating from a
+        scan (``--write-baseline``), carry forward existing justifications
+        and stub the new ones so a human must fill them in."""
+        from .contracts import SCALE_TARGET
+
         by_fp: Dict[str, int] = {}
         for f in findings:
             by_fp[f.fingerprint] = by_fp.get(f.fingerprint, 0) + 1
@@ -107,7 +138,8 @@ class Baseline:
                 "count": by_fp[fp],
                 "why": why or "TODO: justify or fix",
             })
-        payload = {"version": self.VERSION, "accepted": accepted}
+        payload = {"version": self.VERSION, "scale_target": SCALE_TARGET,
+                   "accepted": accepted}
         Path(path).write_text(json.dumps(payload, indent=2) + "\n")
 
 

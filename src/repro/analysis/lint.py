@@ -36,6 +36,19 @@ mutation             ``TRACE_COUNT``/``dispatches`` through an imported-module
                      alias, or ``self.shed``/``queue_depth_peak``/
                      ``in_flight_peak``/``dispatches`` inside an Engine/Runner
                      class — writes that bypass the MetricsRegistry cell.
+int32-overflow       narrow-int accumulators whose magnitude scales with
+                     stream length — wrap past 2³¹ at ``SCALE_TARGET``
+                     (:mod:`repro.analysis.numerics`).
+unseeded-rng         global-state ``np.random.*`` / stdlib ``random`` calls
+                     and seedless Generator construction — destroys seeded
+                     replay (:mod:`repro.analysis.determinism`).
+wall-clock-leak      ``time.*``/``datetime.now`` values escaping a function
+                     outside the declared obs stamp points.
+unbounded-signature  jit caches keyed by tuples with statically unbounded
+                     elements — recompile per distinct value.
+interproc-unordered- ``for``/comprehension over a *call* to a set-returning
+iteration            function, same-module or imported
+                     (:mod:`repro.analysis.callgraph`).
 ==================== =========================================================
 
 The engine is a two-pass design: pass 1 builds a :class:`ModuleInfo`
@@ -66,6 +79,13 @@ RULES: Tuple[str, ...] = (
     "exactness-contract",
     "topology-config",
     "registry-counter-mutation",
+    # ISSUE 10: numerics + determinism (see numerics.py / determinism.py /
+    # callgraph.py; registered below through late-import wrappers)
+    "int32-overflow",
+    "unseeded-rng",
+    "wall-clock-leak",
+    "unbounded-signature",
+    "interproc-unordered-iteration",
 )
 
 _SHIMS = {
@@ -778,6 +798,35 @@ def _rule_registry_counter_mutation(mod: ModuleInfo) -> List[Finding]:
     return out
 
 
+# ISSUE 10 rules live in sibling modules that import helpers from this one;
+# late-import wrappers keep the registration cycle-free in both import orders.
+
+
+def _rule_int32_overflow(mod: ModuleInfo) -> List[Finding]:
+    from .numerics import rule_int32_overflow
+    return rule_int32_overflow(mod)
+
+
+def _rule_unseeded_rng(mod: ModuleInfo) -> List[Finding]:
+    from .determinism import rule_unseeded_rng
+    return rule_unseeded_rng(mod)
+
+
+def _rule_wall_clock_leak(mod: ModuleInfo) -> List[Finding]:
+    from .determinism import rule_wall_clock_leak
+    return rule_wall_clock_leak(mod)
+
+
+def _rule_unbounded_signature(mod: ModuleInfo) -> List[Finding]:
+    from .determinism import rule_unbounded_signature
+    return rule_unbounded_signature(mod)
+
+
+def _rule_interproc_unordered(mod: ModuleInfo) -> List[Finding]:
+    from .callgraph import single_module_interproc
+    return single_module_interproc(mod)
+
+
 _RULE_FNS = {
     "host-sync-in-jit": _rule_host_sync_in_jit,
     "retrace-hazard": _rule_retrace_hazard,
@@ -788,6 +837,11 @@ _RULE_FNS = {
     "exactness-contract": _rule_exactness_contract,
     "topology-config": _rule_topology_config,
     "registry-counter-mutation": _rule_registry_counter_mutation,
+    "int32-overflow": _rule_int32_overflow,
+    "unseeded-rng": _rule_unseeded_rng,
+    "wall-clock-leak": _rule_wall_clock_leak,
+    "unbounded-signature": _rule_unbounded_signature,
+    "interproc-unordered-iteration": _rule_interproc_unordered,
 }
 
 

@@ -635,7 +635,18 @@ class FusedEdgeRunner:
         caps[:w1 - 1] = state.capacities
         counts = np.zeros(w1, np.int32)
         cn = grouper.assigned_counts.shape[0]
-        counts[:cn] = grouper.assigned_counts
+        # the device kernel compares counts pairwise (PKG/DC argmin), never
+        # absolutely — shifting all workers by the running minimum keeps
+        # every comparison identical while the int64 lifetime totals stay
+        # host-side, so 10⁸-tuple runs (contracts.SCALE_TARGET) never push
+        # the int32 device domain past 2³¹ (ISSUE 10)
+        counts_base = int(grouper.assigned_counts.min()) if cn else 0
+        rebased = grouper.assigned_counts - counts_base
+        if rebased.max(initial=0) + m > 2 ** 31 - 1:
+            raise ValueError(
+                "fused feed: per-worker count spread exceeds int32 "
+                f"(max-min = {int(rebased.max(initial=0))}, feed m = {m})")
+        counts[:cn] = rebased
 
         # host-side inputs go in as plain numpy — jit transfers them at
         # dispatch for a fraction of the cost of an eager jnp conversion
@@ -712,7 +723,7 @@ class FusedEdgeRunner:
         with tracer.span("fused.segment.readback", cat="fused"):
             state.busy_until[:] = self._base + np.asarray(
                 out["busy"], dtype=np.float64)[:w1 - 1]
-            grouper.assigned_counts[:] = np.asarray(
+            grouper.assigned_counts[:] = counts_base + np.asarray(
                 out["counts"], dtype=np.int64)[:cn]
             if scheme == "sg":
                 grouper._rr = int((grouper._rr + m) % self._act.shape[0])

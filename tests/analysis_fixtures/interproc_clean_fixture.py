@@ -1,0 +1,16 @@
+"""interproc-unordered-iteration near-miss: sorted at the boundary."""
+
+
+def active_workers(assignments):
+    return {w for ws in assignments for w in ws}
+
+
+def ordered_workers(assignments):
+    return sorted(active_workers(assignments))
+
+
+def rebalance(assignments, ring):
+    for w in sorted(active_workers(assignments)):
+        ring.append(w)
+    n = len([1 for w in ordered_workers(assignments)])
+    return n

@@ -1,0 +1,16 @@
+"""interproc-unordered-iteration fixture: set-returning callees."""
+
+
+def active_workers(assignments):
+    return {w for ws in assignments for w in ws}
+
+
+def candidate_workers(assignments):
+    return active_workers(assignments)
+
+
+def rebalance(assignments, ring):
+    for w in active_workers(assignments):
+        ring.append(w)
+    moves = [w for w in candidate_workers(assignments)]
+    return moves

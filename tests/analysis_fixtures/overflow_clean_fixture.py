@@ -1,0 +1,22 @@
+"""int32-overflow near-miss: wide accumulators and non-accumulated ids."""
+import numpy as np
+
+
+def bill_bytes(batches):
+    total_bytes = np.int64(0)
+    for b in batches:
+        total_bytes += np.int64(b.size * 12)
+    return total_bytes
+
+
+def worker_ids(n):
+    ids = np.arange(n, dtype=np.int32)
+    return ids[::-1]
+
+
+def bounded_retries(attempts):
+    retries = np.int32(0)
+    for a in attempts:
+        if not a:
+            retries += np.int32(1)
+    return retries

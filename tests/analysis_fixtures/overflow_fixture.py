@@ -1,0 +1,31 @@
+"""int32-overflow fixture: narrow accumulators that scale with the stream."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def bill_bytes(batches):
+    total_bytes = np.int32(0)
+    for b in batches:
+        total_bytes += np.int32(b.size * 12)
+    return total_bytes
+
+
+def scatter_counts(idx):
+    tuple_counts = np.zeros(8, np.int32)
+    np.add.at(tuple_counts, idx, 1)
+    return tuple_counts
+
+
+def device_accumulate(idx, moved):
+    acc_table = jnp.zeros(8, jnp.int32)
+    acc_table = acc_table.at[idx].add(moved)
+    return acc_table
+
+
+class Counters:
+    def __init__(self, n):
+        self.tuple_count = np.zeros(n, np.int32)
+
+    def feed(self, idx, moved):
+        self.tuple_count[idx] += moved
+        self.tuple_count = self.tuple_count + moved

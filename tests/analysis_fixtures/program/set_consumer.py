@@ -1,0 +1,7 @@
+"""Iterates an imported set-returning callee: unordered across modules."""
+from set_provider import live_workers
+
+
+def drain(table, sink):
+    for w in live_workers(table):
+        sink.append(w)

@@ -1,0 +1,5 @@
+"""A set-returning function consumed from another module."""
+
+
+def live_workers(table):
+    return set(table)

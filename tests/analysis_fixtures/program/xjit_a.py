@@ -1,0 +1,9 @@
+"""Cross-module traced closure: the jit root lives here..."""
+import jax
+
+from xjit_b import mixed_helper
+
+
+@jax.jit
+def entry(x):
+    return mixed_helper(x) + 1.0

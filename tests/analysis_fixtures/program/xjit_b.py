@@ -1,0 +1,7 @@
+"""...and the hazards live here, invisible to intra-module linting."""
+import numpy as np
+
+
+def mixed_helper(x):
+    y = np.asarray(x)
+    return np.dot(y, y)

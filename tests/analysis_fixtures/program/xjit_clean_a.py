@@ -1,0 +1,9 @@
+"""Cross-module near-miss: the jit root calls a device-clean helper."""
+import jax
+
+from xjit_clean_b import device_helper
+
+
+@jax.jit
+def entry(x):
+    return device_helper(x) + 1.0

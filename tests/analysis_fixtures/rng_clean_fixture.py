@@ -1,0 +1,13 @@
+"""unseeded-rng near-miss: explicitly seeded, explicitly threaded."""
+import random
+
+import numpy as np
+from numpy.random import PCG64, default_rng
+
+
+def draw(n, seed):
+    g = default_rng(seed)
+    h = np.random.default_rng(123)
+    p = np.random.Generator(PCG64(seed))
+    r = random.Random(seed)
+    return g.normal(size=n), h, p, r.random()

@@ -1,0 +1,17 @@
+"""unseeded-rng fixture: global-state and entropy-seeded RNG."""
+import random
+
+import numpy as np
+import numpy.random as npr
+from numpy.random import default_rng
+
+
+def draw(n):
+    a = np.random.rand(n)
+    b = npr.randint(0, 10, n)
+    np.random.seed(0)
+    g = default_rng()
+    h = np.random.default_rng()
+    r = random.random()
+    s = random.SystemRandom()
+    return a, b, g, h, r, s

@@ -1,0 +1,10 @@
+"""wall-clock-leak near-miss: local elapsed-time that never escapes."""
+import time
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    elapsed = time.perf_counter() - t0
+    print(f"took {elapsed:.3f}s")
+    return 42

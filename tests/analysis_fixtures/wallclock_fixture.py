@@ -1,0 +1,15 @@
+"""wall-clock-leak fixture: stamps escaping; module-level read."""
+import time
+from datetime import datetime
+
+IMPORT_STAMP = time.time()
+
+
+def stamp_report():
+    t0 = time.perf_counter()
+    return t0
+
+
+class Report:
+    def record(self):
+        self.started_at = datetime.now()

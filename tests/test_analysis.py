@@ -12,12 +12,14 @@ from pathlib import Path
 import pytest
 
 from repro.analysis import contracts
+from repro.analysis.callgraph import lint_program
 from repro.analysis.cli import main as analysis_main
 from repro.analysis.findings import Baseline, Finding, apply_baseline
-from repro.analysis.lint import RULES, iter_python_files, lint_file, lint_paths
+from repro.analysis.lint import RULES, iter_python_files, lint_file
 
 REPO = Path(__file__).resolve().parents[1]
 FIXTURES = REPO / "tests" / "analysis_fixtures"
+PROGRAM = FIXTURES / "program"
 
 # golden (line, severity) findings per fixture file — every shipped rule
 # demonstrably fires, at exactly these sites and no others
@@ -55,7 +57,37 @@ GOLDEN = {
                                       (10, "error"), (18, "error"),
                                       (26, "error"), (27, "error")},
     },
+    # ISSUE 10: determinism & numerics rules
+    "overflow_fixture.py": {
+        "int32-overflow": {(9, "error"), (15, "error"), (21, "error"),
+                           (30, "error"), (31, "error")},
+    },
+    "rng_fixture.py": {
+        "unseeded-rng": {(10, "error"), (11, "error"), (12, "error"),
+                         (13, "error"), (14, "error"), (15, "error"),
+                         (16, "error")},
+    },
+    "wallclock_fixture.py": {
+        "wall-clock-leak": {(5, "warn"), (10, "warn"), (15, "warn")},
+    },
+    "sig_fixture.py": {
+        "unbounded-signature": {(12, "warn")},
+    },
+    "interproc_fixture.py": {
+        "interproc-unordered-iteration": {(13, "warn"), (15, "warn")},
+    },
 }
+
+#: one near-miss clean fixture per ISSUE-10 rule (plus the original):
+#: similar shape, zero findings across *all* rules
+CLEAN_FIXTURES = (
+    "clean_fixture.py",
+    "overflow_clean_fixture.py",   # int64 accumulators / unaccumulated ids
+    "rng_clean_fixture.py",        # seeded, threaded generators
+    "wallclock_clean_fixture.py",  # elapsed-time print that never escapes
+    "sig_clean_fixture.py",        # pow2-bucketed / boolean key elements
+    "interproc_clean_fixture.py",  # sorted at the set boundary
+)
 
 
 # ---------------------------------------------------------------------------
@@ -74,8 +106,29 @@ def test_fixture_golden_findings(fixture):
         assert f.message and f.hint  # every finding carries a fix-it hint
 
 
-def test_clean_fixture_has_no_findings():
-    assert lint_file(FIXTURES / "clean_fixture.py", REPO) == []
+@pytest.mark.parametrize("fixture", CLEAN_FIXTURES)
+def test_clean_fixture_has_no_findings(fixture):
+    assert lint_file(FIXTURES / fixture, REPO) == []
+
+
+def test_cross_module_traced_closure_and_interproc():
+    """The whole-program layer sees what per-file scans cannot: a hazard
+    in a helper module only traced through another module's jit root, and
+    iteration over an imported set-returning callee."""
+    findings = lint_program([PROGRAM], REPO, excludes=())
+    by = {}
+    for f in findings:
+        by.setdefault(Path(f.path).name, set()).add((f.rule, f.line))
+    assert by == {
+        "xjit_b.py": {("host-sync-in-jit", 6), ("np-jnp-mixing", 7)},
+        "set_consumer.py": {("interproc-unordered-iteration", 6)},
+    }
+    # the clean pair stays clean even once traced across the module edge
+    assert "xjit_clean_b.py" not in by
+    # and the same files are blind spots for the intra-module scan —
+    # exactly the gap the call graph closes
+    assert lint_file(PROGRAM / "xjit_b.py", REPO) == []
+    assert lint_file(PROGRAM / "set_consumer.py", REPO) == []
 
 
 def test_every_rule_covered_by_a_fixture():
@@ -98,7 +151,7 @@ def test_fixture_dir_excluded_from_default_scan():
 def _repo_scan():
     paths = [REPO / p for p in ("src", "tests", "benchmarks", "examples")
              if (REPO / p).exists()]
-    return lint_paths(paths, REPO)
+    return lint_program(paths, REPO)
 
 
 def test_repo_scans_clean_against_baseline():
@@ -169,6 +222,45 @@ def test_baseline_write_roundtrip(tmp_path):
         p, findings=[f, _finding(line=9)])
     loaded = Baseline.load(p)
     assert loaded.entries[f.fingerprint] == (2, "kept justification")
+    # dump always writes schema v2, stamped with the audited scale target
+    data = json.loads(p.read_text())
+    assert data["version"] == 2
+    assert data["scale_target"] == contracts.SCALE_TARGET
+    assert loaded.scale_target == contracts.SCALE_TARGET
+
+
+def test_baseline_v1_still_loads(tmp_path):
+    """Migration path: a v1 baseline (no scale_target) loads as legacy."""
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"version": 1, "accepted": [
+        {"fingerprint": "r::p::s", "count": 1, "why": "old justification"}]}))
+    b = Baseline.load(p)
+    assert b.entries["r::p::s"] == (1, "old justification")
+    assert b.scale_target is None
+
+
+def test_baseline_v2_pins_scale_target(tmp_path):
+    """v2 requires scale_target, and it must match contracts.SCALE_TARGET —
+    moving the target invalidates every audited justification loudly."""
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"version": 2, "accepted": []}))
+    with pytest.raises(ValueError, match="scale_target"):
+        Baseline.load(p)
+    p.write_text(json.dumps({
+        "version": 2, "scale_target": contracts.SCALE_TARGET * 100,
+        "accepted": []}))
+    with pytest.raises(ValueError, match="re-audit"):
+        Baseline.load(p)
+    p.write_text(json.dumps({
+        "version": 2, "scale_target": contracts.SCALE_TARGET,
+        "accepted": []}))
+    assert Baseline.load(p).scale_target == contracts.SCALE_TARGET
+
+
+def test_checked_in_baseline_is_v2():
+    data = json.loads((REPO / "analysis_baseline.json").read_text())
+    assert data["version"] == 2
+    assert data["scale_target"] == contracts.SCALE_TARGET
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,137 @@
+"""The differential sanitizer (ISSUE 10): diff mechanics, the strict
+numerics context, and the acceptance claim itself — same-seed double runs
+of the fused simulator and the serving engine are bit-identical.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import (diff_reports, diff_values, double_run,
+                                     sanitized)
+from repro.data.synthetic import zipf_time_evolving
+from repro.topology import (Edge, ServingTopologyEngine, SimulatorEngine,
+                            Source, Stage, Topology, config_for)
+
+
+# -- diff_values mechanics ---------------------------------------------------
+
+def test_diff_identical_nested():
+    v = {"a": [1.0, 2, "x"], "b": {"c": (3.5, float("nan"))}}
+    assert diff_values(v, dict(v)) == []
+
+
+def test_diff_floats_bitwise():
+    # == would pass 0.0 vs -0.0 and fail nan vs nan; bit compare does the
+    # opposite, which is what report determinism means
+    assert diff_values(0.0, -0.0) != []
+    assert diff_values(float("nan"), float("nan")) == []
+    assert diff_values(1.0, 1.0 + 1e-16) == []  # same double
+    d = diff_values(1.0, 1.0 + 2 ** -52)
+    assert len(d) == 1 and "bitwise" in d[0]
+
+
+def test_diff_reports_key_and_length_mismatches():
+    d = diff_values({"a": 1, "b": 2}, {"a": 1, "c": 3})
+    assert sorted(d) == ["report.b: only in first run",
+                        "report.c: only in second run"]
+    assert diff_values([1, 2], [1, 2, 3]) == ["report: length 2 != 3"]
+    assert diff_values({"x": [1, 9]}, {"x": [1, 8]}) \
+        == ["report.x[1]: 9 != 8"]
+
+
+def test_diff_arrays_exact():
+    a = np.array([1.0, float("nan")])
+    assert diff_values(a, a.copy()) == []
+    assert diff_values(a, a.astype(np.float32)) \
+        == ["report: dtype float64 != float32"]
+    assert diff_values(np.arange(3), np.arange(4)) \
+        == ["report: shape (3,) != (4,)"]
+    d = diff_values(np.array([1, 2, 3]), np.array([1, 5, 3]))
+    assert d == ["report: arrays differ at 1 element(s)"]
+
+
+def test_diff_normalizes_numpy_scalars():
+    assert diff_values(np.int64(3), 3) == []
+    assert diff_values(np.float64(2.5), 2.5) == []
+    assert diff_values(np.int64(3), 4) != []
+
+
+def test_diff_type_mismatch():
+    assert diff_values(1, 1.0) == ["report: type int != float"]
+
+
+def test_diff_reports_uses_to_dict():
+    class R:
+        def __init__(self, x):
+            self.x = x
+
+        def to_dict(self):
+            return {"x": self.x}
+
+    assert diff_reports(R(1), R(1)) == []
+    assert diff_reports(R(1), R(2)) == ["report.x: 1 != 2"]
+
+
+# -- the sanitized() context -------------------------------------------------
+
+def test_sanitized_raises_on_silent_numpy_faults_and_restores():
+    before = np.geterr()
+    with sanitized():
+        with pytest.raises(FloatingPointError):
+            np.float64(1.0) / np.float64(0.0)
+    assert np.geterr() == before
+    # outside the context the default behaviour is back (no raise)
+    assert math.isinf(np.float64(1.0) / np.float64(0.0))
+
+
+def test_sanitized_restores_on_exception():
+    before = np.geterr()
+    with pytest.raises(RuntimeError):
+        with sanitized():
+            raise RuntimeError("boom")
+    assert np.geterr() == before
+
+
+# -- the acceptance claim: double runs are bit-identical ---------------------
+
+def _topo(name):
+    return Topology(name=name,
+                    stages=(Stage("worker", parallelism=8),),
+                    edges=(Edge("source", "worker", config_for("pkg")),))
+
+
+def _keys():
+    return np.asarray(zipf_time_evolving(
+        3_000, num_keys=500, z=1.2, flip_head=200, seed=7))
+
+
+def test_double_run_fused_bit_identical():
+    def fused():
+        return SimulatorEngine(mode="fused", seed=3).run(
+            _topo("t-fused"), Source(_keys(), arrival_rate=20_000.0))
+
+    r1, r2, divergences = double_run(fused)
+    assert divergences == []
+    assert r1 is not r2  # two real runs, not one report compared to itself
+
+
+def test_double_run_serving_bit_identical():
+    def serving():
+        return ServingTopologyEngine(max_requests=16).run(
+            _topo("t-serving"), Source(_keys(), arrival_rate=20_000.0))
+
+    _, _, divergences = double_run(serving)
+    assert divergences == []
+
+
+def test_double_run_surfaces_nondeterminism():
+    state = {"n": 0}
+
+    def flaky():
+        state["n"] += 1
+        return {"latency_p99": 1.0 + state["n"] * 2 ** -52}
+
+    _, _, divergences = double_run(flaky)
+    assert len(divergences) == 1
+    assert divergences[0].startswith("report.latency_p99:")
